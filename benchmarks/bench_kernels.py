@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU latency —
+the derived columns report the roofline-relevant bytes/FLOPs per call).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.core.physics import DeviceParams, calibrate_v_read
+from repro.kernels import ops
+
+
+def _time(f, *a, n=3):
+    f(*a)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    cfg = AnalogConfig(
+        mode="analog_stochastic",
+        device=calibrate_v_read(DeviceParams(), 1024),
+        use_pallas="off",  # jnp reference path for timing on CPU
+    )
+    key = jax.random.PRNGKey(0)
+
+    for m, k, n in [(256, 1024, 512), (1024, 4096, 1024)]:
+        x = jax.random.normal(key, (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+        f = jax.jit(
+            lambda x, w: ops.crossbar_mac_reference(x, w, key, cfg, True)
+        )
+        us = _time(f, x, w)
+        flops = 2 * m * k * n
+        rows.append(
+            (f"crossbar_mac_{m}x{k}x{n}", us,
+             f"flops={flops:.2e} tpu_roofline_us={flops / 197e6:.1f}")
+        )
+
+    z = jax.random.normal(key, (256, 128))
+    f = jax.jit(
+        lambda z: ops.wta_counts_reference(
+            z, key, n_trials=64, vth0=2.897, sigma_z=1.702
+        )
+    )
+    us = _time(f, z)
+    rows.append(("wta_counts_256x128_T64", us,
+                 f"bytes={256 * 128 * 4 * 64:.2e}"))
+
+    x = jax.random.normal(key, (2048, 2048))
+    f = jax.jit(
+        lambda x: ops.stoch_round_reference(x, key, step=2 / 31, lo=-1, hi=1)
+    )
+    us = _time(f, x)
+    rows.append(
+        ("stoch_round_2048x2048", us,
+         f"bytes={2048 * 2048 * 8:.2e} tpu_bw_us={2048 * 2048 * 8 / 819e3:.1f}")
+    )
+    return rows

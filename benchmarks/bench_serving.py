@@ -1,0 +1,57 @@
+"""Serving-side RACA: decode throughput, greedy vs WTA stochastic sampling.
+
+The paper's repeated-trial voting (Fig. 6) applied to LM decoding: each
+token is chosen by T comparator-bank decision trials.  This benchmark
+quantifies the sampler's cost (compare-and-count per trial; no
+exponentials) against digital greedy argmax on the same model, and the
+vote-count sensitivity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import get_model_fns
+from repro.serving import ServeConfig, ServingEngine
+
+
+def _throughput(cfg, params, n_req=4, new_tokens=12):
+    eng = ServingEngine(
+        params, cfg,
+        ServeConfig(max_batch=n_req, max_new_tokens=new_tokens, max_len=128),
+    )
+    for i in range(n_req):
+        eng.submit([7 + i, 11, 13])
+    t0 = time.perf_counter()
+    outs = eng.step()
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    return toks / dt, dt * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    base = get_smoke_config("stablelm-3b")
+    cfg = dataclasses.replace(
+        base, n_layers=4, d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+        d_head=32, max_seq=256,
+    )
+    fns = get_model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+
+    rows = []
+    tps, us = _throughput(dataclasses.replace(cfg, wta_head=False), params)
+    rows.append(("serve_greedy", us, f"tok_per_s={tps:.1f}"))
+    for trials in (8, 32):
+        cfg_w = dataclasses.replace(
+            cfg, wta_head=True,
+            analog=dataclasses.replace(cfg.analog, wta_trials=trials),
+        )
+        tps, us = _throughput(cfg_w, params)
+        rows.append(
+            (f"serve_wta_T{trials}", us, f"tok_per_s={tps:.1f}")
+        )
+    return rows

@@ -1,0 +1,61 @@
+"""Quickstart: the paper's circuit in 60 lines.
+
+Builds a stochastic binary Sigmoid neuron layer and a WTA SoftMax readout
+from the public API, shows the calibration that makes thermal noise act as
+the activation function, and classifies a batch with majority voting.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AnalogConfig,
+    DeviceParams,
+    analog_matmul,
+    calibrate_v_read,
+    effective_beta,
+    wta_head,
+)
+
+# --- 1. Calibrate the device so the comparator IS a sigmoid (Eq. 13) -------
+N_INPUTS = 784
+dp = calibrate_v_read(DeviceParams(), n_rows=N_INPUTS)
+print(f"calibrated read voltage V_r = {dp.v_read * 1e3:.2f} mV")
+print(f"effective logistic slope beta = {effective_beta(dp, N_INPUTS):.4f}")
+
+cfg = AnalogConfig(mode="analog_stochastic", device=dp, use_pallas="auto")
+
+# --- 2. A crossbar layer: MAC + thermal noise + comparator, no ADC ---------
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (N_INPUTS, 256)) * 0.05
+x = (jax.random.uniform(jax.random.PRNGKey(1), (32, N_INPUTS)) < 0.3
+     ).astype(jnp.float32)
+
+k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+binary_hidden = analog_matmul(cfg, k1, x, w)
+print("hidden activations are binary:",
+      sorted(set(jnp.unique(binary_hidden).tolist())))
+print("mean fire rate:", float(binary_hidden.mean()))
+
+# expectation matches the logistic of the (conductance-quantized)
+# pre-activation:
+from repro.core.crossbar import quantize_weights
+
+p_emp = jnp.stack([
+    analog_matmul(cfg, k, x, w)
+    for k in jax.random.split(k2, 256)
+]).mean(0)
+p_ideal = jax.nn.sigmoid(x @ quantize_weights(w, dp))
+print("E[comparator] vs sigmoid, max err:",
+      float(jnp.max(jnp.abs(p_emp - p_ideal))))
+
+# --- 3. WTA SoftMax readout: votes, no exponentials ------------------------
+logits = jax.random.normal(jax.random.PRNGKey(3), (4, 10))
+res = wta_head(cfg, jax.random.PRNGKey(4), logits)
+print("WTA vote shares:", jnp.round(res.probs[0], 3))
+print("softmax        :", jnp.round(jax.nn.softmax(logits[0]), 3))
+print("prediction agreement:",
+      bool(jnp.all(jnp.argmax(res.counts, -1)
+                   == jnp.argmax(logits, -1))))

@@ -1,0 +1,53 @@
+"""Per-architecture configs (assigned pool + the paper's FCNN)."""
+
+from importlib import import_module
+
+_MODULES = {
+    "llava-next-34b": "llava_next_34b",
+    "whisper-small": "whisper_small",
+    "stablelm-3b": "stablelm_3b",
+    "gemma2-2b": "gemma2_2b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "grok-1-314b": "grok_1_314b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "fcnn-mnist": "fcnn_mnist",
+}
+
+ASSIGNED_ARCHS = [a for a in _MODULES if a != "fcnn-mnist"]
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str):
+    return _mod(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _mod(name).smoke_config()
+
+
+def skip_shapes(name: str) -> dict:
+    return getattr(_mod(name), "SKIP_SHAPES", {})
+
+
+from .shapes import SHAPES, ShapeSpec  # noqa: E402
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; skipped ones annotated."""
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        skips = skip_shapes(arch)
+        for shape in SHAPES:
+            skipped = shape in skips
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape, skips.get(shape)))
+    return out

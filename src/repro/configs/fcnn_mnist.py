@@ -1,0 +1,29 @@
+"""The paper's own FCNN [784, 500, 300, 10] on (surrogate) MNIST (§IV-C)."""
+
+import dataclasses
+
+from repro.core.analog import AnalogConfig
+from repro.core.physics import DeviceParams, calibrate_v_read
+from repro.models.config import ModelConfig
+
+_DEVICE = calibrate_v_read(DeviceParams(), n_rows=784)
+
+CONFIG = ModelConfig(
+    name="fcnn-mnist",
+    family="fcnn",
+    fcnn_layers=(784, 500, 300, 10),
+    analog=AnalogConfig(
+        mode="analog_stochastic", device=_DEVICE, wta_trials=32,
+        # training forward uses the expectation (E[Bern(sigma)] = sigma, the
+        # SBNN surrogate); deployment (fcnn_predict_raca) samples hard.
+        hard=False,
+    ),
+    wta_head=True,
+    dtype="float32",
+)
+
+SKIP_SHAPES = {}
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(CONFIG, fcnn_layers=(64, 32, 16, 10))

@@ -1,0 +1,34 @@
+"""grok-1-314b [moe]: 64L d6144 48H (kv=8) ff32768 vocab131072, MoE 8
+experts top-2.  [hf:xai-org/grok-1; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe_lm",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=32768,
+    vocab=131072,
+    mlp="geglu",
+    n_experts=8,
+    moe_topk=2,
+    attn_softcap=30.0,   # grok uses attention logit capping
+    max_seq=33_000,
+)
+
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (quadratic at 500k)"}
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=64, vocab=256, n_experts=4, moe_topk=2, max_seq=128,
+        capacity_factor=4.0,  # drop-free for exactness tests
+    )

@@ -1,0 +1,36 @@
+"""mamba2-1.3b [ssm]: 48L d2048 (attention-free) vocab50280,
+ssm_state=128 — SSD (state-space duality).  [arXiv:2405.21060; unverified]
+
+No softmax anywhere -> the paper's WTA neuron applies only as an optional
+LM-head sampler; the silu gate branch is the stochastic-binary candidate
+(DESIGN.md §5).  O(1) decode state -> runs long_500k.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    d_ff=0,
+    vocab=50280,
+    layer_pattern=("ssm",),
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    max_seq=525_000,
+)
+
+SKIP_SHAPES = {}  # attention-free: O(1) decode state -> 500k OK
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, ssm_state=16, ssm_headdim=16,
+        ssm_chunk=8, vocab=256, max_seq=128,
+    )

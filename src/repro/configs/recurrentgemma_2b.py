@@ -1,0 +1,50 @@
+"""recurrentgemma-2b [hybrid]: 26L d2560 10H (kv=1, MQA) ff7680
+vocab256000 — RG-LRU + local attention, 1 attn : 2 rec.
+[arXiv:2402.19427; hf]
+
+26 layers = 2 scanned units of 13; each unit holds local-attn layers at
+positions 2,5,8,11 (4 attn + 9 rec per unit = 8 attn + 18 rec total,
+matching the released model's counts; unit-internal offsets differ from the
+released checkpoint by one position — structurally equivalent).
+"""
+
+from repro.models.config import ModelConfig
+
+_UNIT = (
+    "rec", "rec", "local",
+    "rec", "rec", "local",
+    "rec", "rec", "local",
+    "rec", "rec", "local",
+    "rec",
+)
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=7680,
+    vocab=256_000,
+    mlp="geglu",
+    layer_pattern=_UNIT,
+    local_window=2048,
+    lru_width=2560,
+    tie_embeddings=True,
+    embed_scale=True,
+    max_seq=525_000,
+)
+
+SKIP_SHAPES = {}  # sub-quadratic: RG-LRU + 2048-window local attn -> 500k OK
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=3, layer_pattern=("rec", "rec", "local"),
+        d_model=64, n_heads=4, n_kv_heads=1, d_head=16, d_ff=128,
+        lru_width=64, vocab=256, local_window=16, max_seq=128,
+    )

@@ -1,0 +1,198 @@
+"""Composable analog-execution modules — the paper's technique as a first-
+class feature any model in the framework can opt into.
+
+Three execution modes per wrapped matmul:
+
+* ``digital``            — plain jnp matmul (reference / non-analog deploy).
+* ``analog_linear``      — crossbar MAC with conductance quantization and
+                           thermal noise, ideal linear readout (the
+                           "1-bit-ADC-free but still converted" baseline used
+                           for noise-aware training of non-sigmoidal archs).
+* ``analog_stochastic``  — the full RACA path: crossbar MAC → thermal noise →
+                           comparator → binary stochastic activation (no ADC,
+                           no DAC downstream).  Output is {0,1}.
+
+`use_pallas="auto"` routes the hot path through the fused Pallas TPU kernel
+(kernels/crossbar_mac) when running on TPU; on CPU (this container, and the
+512-device dry-run) the numerically-identical jnp reference executes so that
+GSPMD lowering is exercised end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import crossbar, neurons, wta
+from .physics import DeviceParams
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    mode: str = "digital"  # digital | analog_linear | analog_stochastic
+    device: DeviceParams = dataclasses.field(default_factory=DeviceParams)
+    beta: float = 1.0          # logistic slope the SNR is calibrated to
+    hard: bool = True          # hard Bernoulli sample vs expectation (eval)
+    quantize: bool = True      # conductance-level quantization of weights
+    calibrated: bool = True    # calibrated P=sigmoid(beta z) vs physical ΣG
+    use_pallas: str = "auto"   # auto | on | off
+    rows_per_tile: int = 256   # physical array height (cost model, kernels)
+    wta_trials: int = 32       # decision trials for WTA readout heads
+    wta_vth0: Optional[float] = None  # None => calibrated θ = σ² (temp 1)
+    # analog_linear mode reads at NORMAL voltage (high SNR — the low-SNR
+    # regime is only for the stochastic-neuron trick): input-referred noise
+    # std relative to the layer's dynamic range.
+    linear_sigma: float = 0.01
+
+    def with_mode(self, mode: str) -> "AnalogConfig":
+        return dataclasses.replace(self, mode=mode)
+
+    @property
+    def vth0(self) -> float:
+        if self.wta_vth0 is not None:
+            return self.wta_vth0
+        return wta.calibrated_threshold(self.beta)
+
+
+DIGITAL = AnalogConfig(mode="digital")
+
+
+def _pallas_enabled(cfg: AnalogConfig) -> bool:
+    if cfg.use_pallas == "on":
+        return True
+    if cfg.use_pallas == "off":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def dynamic_range(w: jax.Array) -> jax.Array:
+    """Per-layer conductance-range scale s = max|W| (the paper's G0/V_r
+    calibration knob, Fig. 4(c)-(d)): weights map to devices as W/s so the
+    full conductance range is used regardless of the layer's weight scale;
+    the comparator slope (via V_r) absorbs s back."""
+    return jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+    )
+
+
+def quantize_normalized(w: jax.Array, cfg: AnalogConfig) -> jax.Array:
+    """s · quantize(w / s): dynamic-range conductance quantization, with a
+    straight-through gradient (jnp.round is otherwise zero-grad — QAT would
+    silently stop training the quantized weights)."""
+    if not cfg.quantize:
+        return w
+    s = dynamic_range(w)
+    wq = s * crossbar.quantize_weights(w / s, cfg.device)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def analog_matmul(
+    cfg: AnalogConfig,
+    key: Optional[jax.Array],
+    x: jax.Array,
+    w: jax.Array,
+) -> jax.Array:
+    """Matmul under the configured execution mode.  x: (..., in), w: (in, out).
+
+    ``analog_stochastic`` returns binary activations sampled through the STE
+    (trainable); the other modes return continuous outputs in x.dtype.
+    """
+    if cfg.mode == "digital" or key is None:
+        return x @ w.astype(x.dtype)
+
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    if cfg.mode == "analog_linear":
+        if _pallas_enabled(cfg):
+            from repro.kernels import ops as kops  # lazy: avoid cycles
+
+            y = kops.crossbar_mac(xf, wf, key, cfg, binarize=False)
+        else:
+            s = dynamic_range(wf)
+            wq = quantize_normalized(wf, cfg)
+            noise = jax.random.normal(key, xf.shape[:-1] + (w.shape[-1],))
+            y = xf @ wq + s * cfg.linear_sigma * noise
+        return y.astype(orig_dtype)
+
+    if cfg.mode == "analog_stochastic":
+        if _pallas_enabled(cfg):
+            from repro.kernels import ops as kops
+
+            y = kops.crossbar_mac(xf, wf, key, cfg, binarize=True)
+        elif cfg.calibrated:
+            wq = quantize_normalized(wf, cfg)
+            y = neurons.sigmoid_neuron_calibrated(
+                key, xf @ wq, beta=cfg.beta, hard=cfg.hard
+            )
+        else:
+            y = neurons.sigmoid_neuron_physical(
+                key, xf, wf, cfg.device, hard=cfg.hard
+            )
+        return y.astype(orig_dtype)
+
+    raise ValueError(f"unknown analog mode: {cfg.mode!r}")
+
+
+def analog_dense(
+    cfg: AnalogConfig,
+    key: Optional[jax.Array],
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Dense layer; bias is realized digitally (a bias row in hardware)."""
+    if cfg.mode == "analog_stochastic" and b is not None and key is not None:
+        # Fold the bias into the pre-activation before the comparator: in
+        # hardware this is an always-on bias wordline, so it must be applied
+        # before binarization, not after.
+        orig_dtype = x.dtype
+        xf, wf = x.astype(jnp.float32), w.astype(jnp.float32)
+        wq = quantize_normalized(wf, cfg)
+        z = xf @ wq + b.astype(jnp.float32)
+        y = neurons.sigmoid_neuron_calibrated(key, z, beta=cfg.beta, hard=cfg.hard)
+        return y.astype(orig_dtype)
+    y = analog_matmul(cfg, key, x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def wta_head(
+    cfg: AnalogConfig,
+    key: Optional[jax.Array],
+    z: jax.Array,
+) -> wta.WTAResult:
+    """WTA stochastic SoftMax readout over logits ``z`` (classifier head)."""
+    assert key is not None, "WTA head requires a PRNG key"
+    return wta.wta_trials(
+        key,
+        z.astype(jnp.float32),
+        n_trials=cfg.wta_trials,
+        vth0=cfg.vth0,
+        beta=cfg.beta,
+    )
+
+
+def wta_router_topk(
+    cfg: AnalogConfig,
+    key: Optional[jax.Array],
+    logits: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """MoE router as a k-winner WTA circuit; digital top-k when key is None."""
+    if key is None or cfg.mode != "analog_stochastic":
+        vals, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)
+        return vals, idx
+    return wta.wta_topk(
+        key,
+        logits.astype(jnp.float32),
+        k,
+        n_trials=cfg.wta_trials,
+        vth0=cfg.vth0,
+        beta=cfg.beta,
+    )

@@ -1,0 +1,173 @@
+"""NeuroSim-style component-level energy/area model (paper §IV-C, Table I).
+
+Reproduces Table I for the FCNN [784, 500, 300, 10] on MNIST and generalizes
+to arbitrary layer stacks, comparing two readout schemes:
+
+* ``ADC1B`` — conventional CiM: DACs at every layer input (bit-serial, 8-bit),
+  per-tile partial sums read by 1-bit ADCs (sense amplifiers, column-muxed),
+  explicit digital Sigmoid/SoftMax activation logic.
+* ``RACA``  — the paper: DAC only at the input stage, analog current summing
+  across tiles, one comparator(+TIA) per logical output column, no activation
+  logic (the comparator IS the activation), T stochastic trials per decision.
+
+Component constants are *calibrated* so the FCNN lands exactly on Table I
+(8.7e5 pJ / 8.51 mm^2 / 61.3 TOPS/W vs 3.63e5 pJ / 5.24 mm^2 / 148.58
+TOPS/W), under the published constraint that DACs+ADCs are ~72% of energy
+and ~81% of area in conventional designs [9].  Derivation in comments below;
+the model then *predicts* costs for other network shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# ---------------------------------------------------------------------------
+# Structural accounting.
+# ---------------------------------------------------------------------------
+
+ARRAY_ROWS = 128          # physical crossbar tile height
+ADC_SHARE = 8             # columns muxed per 1-bit ADC (conventional scheme)
+INPUT_BITS = 8            # bit-serial input precision (conventional + input DAC)
+
+
+def _layers_macs(layers: Sequence[int]) -> int:
+    return sum(a * b for a, b in zip(layers[:-1], layers[1:]))
+
+
+def _conv_counts(layers: Sequence[int]) -> dict:
+    """Counts per single inference pass (one trial)."""
+    tiles_per_layer = [math.ceil(a / ARRAY_ROWS) for a in layers[:-1]]
+    phys_cols = sum(t * b for t, b in zip(tiles_per_layer, layers[1:]))
+    return dict(
+        macs=_layers_macs(layers),
+        # conventional: every physical column converted each input bit-cycle
+        adc_conversions=phys_cols * INPUT_BITS,
+        # conventional: DACs at every layer input, bit-serial
+        dac_inputs_all=sum(layers[:-1]),
+        # RACA: analog tile-summing -> one comparator per logical column
+        comparator_cols=sum(layers[1:]),
+        dac_inputs_first=layers[0],
+        phys_cols=phys_cols,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Calibrated component constants (32 nm, from Table I + the 72%/81% split).
+#
+# Energy [pJ]:  E1 = E_common + E_act + E_dac_all + E_adc_total = 8.70e5
+#   with (DAC+ADC) = 72%  =>  E_dac_all + E_adc_total = 6.264e5
+#   split: ADC 4.704e5 over 37840 conversions  => e_adc  = 12.432 pJ
+#          DAC 1.560e5 over 12672 conversions  => e_dac  = 12.311 pJ (8-bit)
+#   E_common (arrays/buffers/routing) = 1.860e5, E_act (digital σ/softmax
+#   units) = 0.576e5  =>  E1 = 8.700e5 ✓
+#   RACA, T=10 trials: E2 = E_common + T·(784·e_dac) + T·(810·e_cmp) = 3.63e5
+#          => e_cmp = 9.944 pJ  (0.80× of a 1-bit ADC conversion: plausible
+#             for a clocked comparator + TIA at 32 nm) ✓
+#
+# Area [mm^2]:  A1 = A_common + A_act + A_dac + A_adc = 8.51
+#   with (DAC+ADC) = 81%  =>  6.893;  split ADC 5.500 over 4730/8 shared
+#   units => a_adc = 9.306e-3;  DAC 1.393 over 1584 => a_dac = 8.794e-4
+#   A_common = 1.317, A_act = 0.300  =>  A1 = 8.510 ✓
+#   RACA: A2 = A_common + 784·a_dac + 810·a_cmp = 5.24
+#          => a_cmp = 3.992e-3 (no column muxing — cheap enough to be fully
+#             parallel, which is what enables the single-cycle WTA race) ✓
+# ---------------------------------------------------------------------------
+
+E_MAC = 0.0           # array read energy folded into E_COMMON_REF (below)
+E_ADC = 12.432        # pJ per 1-bit ADC conversion
+E_DAC = 12.311        # pJ per 8-bit DAC conversion
+E_CMP = 9.944         # pJ per comparator decision (incl. TIA)
+E_COMMON_REF = 1.860e5  # pJ, arrays+buffers+routing for the reference FCNN
+E_ACT_REF = 0.576e5     # pJ, digital activation logic for the reference FCNN
+
+A_ADC = 9.306e-3      # mm^2 per shared 1-bit ADC unit
+A_DAC = 8.794e-4      # mm^2 per DAC
+A_CMP = 3.992e-3      # mm^2 per comparator+TIA
+A_COMMON_REF = 1.317  # mm^2 arrays+digital for the reference FCNN
+A_ACT_REF = 0.300     # mm^2 digital activation units
+
+RACA_TRIALS = 10      # decision trials counted in Table I's RACA column
+
+# NeuroSim's OP accounting (ops per inference) back-solved from Table I's
+# TOPS/W columns; the two schemes differ by ~1% from published rounding.
+OPS_REF_ADC = 61.30e12 * 8.70e5 * 1e-12   # = 5.333e7
+OPS_REF_RACA = 148.58e12 * 3.63e5 * 1e-12  # = 5.393e7
+
+_REF_LAYERS = (784, 500, 300, 10)
+_REF_COUNTS = _conv_counts(_REF_LAYERS)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareCost:
+    energy_pj: float
+    area_mm2: float
+    tops_per_w: float
+
+
+def _scale(counts: dict) -> float:
+    """Scale common (array/buffer) terms by MAC count relative to reference."""
+    return counts["macs"] / _REF_COUNTS["macs"]
+
+
+def cost_adc1b(layers: Sequence[int] = _REF_LAYERS) -> HardwareCost:
+    c = _conv_counts(layers)
+    s = _scale(c)
+    energy = (
+        E_COMMON_REF * s
+        + E_ACT_REF * s
+        + c["dac_inputs_all"] * INPUT_BITS * E_DAC
+        + c["adc_conversions"] * E_ADC
+    )
+    area = (
+        A_COMMON_REF * s
+        + A_ACT_REF * s
+        + c["dac_inputs_all"] * A_DAC
+        + math.ceil(c["phys_cols"] / ADC_SHARE) * A_ADC
+    )
+    ops = OPS_REF_ADC * s
+    return HardwareCost(energy, area, ops / (energy * 1e-12) / 1e12)
+
+
+def cost_raca(
+    layers: Sequence[int] = _REF_LAYERS, trials: int = RACA_TRIALS
+) -> HardwareCost:
+    c = _conv_counts(layers)
+    s = _scale(c)
+    energy = (
+        E_COMMON_REF * s
+        + trials * c["dac_inputs_first"] * E_DAC
+        + trials * c["comparator_cols"] * E_CMP
+    )
+    area = (
+        A_COMMON_REF * s
+        + c["dac_inputs_first"] * A_DAC
+        + c["comparator_cols"] * A_CMP
+    )
+    ops = OPS_REF_RACA * s
+    return HardwareCost(energy, area, ops / (energy * 1e-12) / 1e12)
+
+
+def table1(layers: Sequence[int] = _REF_LAYERS) -> dict:
+    """Reproduce Table I: both schemes + percentage changes."""
+    a = cost_adc1b(layers)
+    r = cost_raca(layers)
+    return {
+        "adc1b": a,
+        "raca": r,
+        "energy_change_pct": (r.energy_pj - a.energy_pj) / a.energy_pj * 100,
+        "area_change_pct": (r.area_mm2 - a.area_mm2) / a.area_mm2 * 100,
+        "efficiency_change_pct": (r.tops_per_w - a.tops_per_w)
+        / a.tops_per_w
+        * 100,
+    }
+
+
+PAPER_TABLE1 = {
+    "adc1b": HardwareCost(8.70e5, 8.51, 61.3),
+    "raca": HardwareCost(3.63e5, 5.24, 148.58),
+    "energy_change_pct": -58.29,
+    "area_change_pct": -38.43,
+    "efficiency_change_pct": +142.37,
+}

@@ -1,0 +1,139 @@
+"""ReRAM crossbar weight mapping and analog MAC simulation (paper §II-B).
+
+Implements Eq. 4-7 plus the non-idealities that matter for deployment:
+conductance quantization to ``n_levels`` and Gaussian programming noise.
+
+The simulated crossbar computes, per output column j (Eq. 9-12):
+
+    I_j     = Σ_i V_i · G_ij + noise_j,   G_ij = W_ij·G0 + G_ref
+    I_ref   = Σ_i V_i · G_ref + noise_ref
+    E[I_j - I_ref] = V_r · G0 · Σ_i W_ij x_i = V_r · G0 · z_j
+
+Tall weight matrices are tiled into physical arrays of ``rows_per_tile``
+wordlines whose columns share a summing TIA (current summing across arrays),
+so the differential mean is exact and the noise variance accumulates over
+*all* rows — matching Eq. 13's denominator.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .physics import BOLTZMANN_K, DeviceParams, column_noise_sigma
+
+
+class CrossbarMapping(NamedTuple):
+    """Conductance-domain view of a weight matrix."""
+
+    g: jax.Array          # (in, out) device conductances [S]
+    g_ref: jax.Array      # scalar reference conductance [S]
+    w_eff: jax.Array      # effective (quantized) weights seen by the algorithm
+
+
+def quantize_weights(
+    w: jax.Array,
+    dp: DeviceParams,
+    key: Optional[jax.Array] = None,
+    stochastic: bool = False,
+) -> jax.Array:
+    """Quantize weights to the grid realizable by ``n_levels`` conductances.
+
+    Round-to-nearest by default; stochastic rounding (unbiased) when a key is
+    given — the same primitive the `kernels/stoch_round` Pallas kernel
+    implements for the hot path.
+    """
+    w = jnp.clip(w, dp.w_min, dp.w_max)
+    if dp.n_levels <= 1:
+        return w
+    step = (dp.w_max - dp.w_min) / (dp.n_levels - 1)
+    t = (w - dp.w_min) / step
+    if stochastic and key is not None:
+        floor = jnp.floor(t)
+        frac = t - floor
+        up = jax.random.uniform(key, w.shape) < frac
+        t = floor + up.astype(w.dtype)
+    else:
+        t = jnp.round(t)
+    return t * step + dp.w_min
+
+
+def map_weights(
+    w: jax.Array,
+    dp: DeviceParams,
+    key: Optional[jax.Array] = None,
+    quantize: bool = True,
+) -> CrossbarMapping:
+    """Map algorithmic weights to conductances (Eq. 4-7)."""
+    kq = kp = None
+    if key is not None:
+        kq, kp = jax.random.split(key)
+    w_eff = quantize_weights(w, dp, kq, stochastic=key is not None) if quantize else w
+    g = w_eff * dp.g0 + dp.g_ref  # Eq. 7
+    if dp.sigma_program > 0.0 and kp is not None:
+        g = g + jax.random.normal(kp, g.shape) * (
+            dp.sigma_program * (dp.g_max - dp.g_min)
+        )
+        g = jnp.clip(g, dp.g_min, dp.g_max)
+    w_eff = (g - dp.g_ref) / dp.g0  # weights actually realized
+    return CrossbarMapping(g=g, g_ref=jnp.asarray(dp.g_ref), w_eff=w_eff)
+
+
+def column_sum_g(mapping: CrossbarMapping) -> jax.Array:
+    """Σ_i (G_ij + G_ref) per output column — Eq. 13's noise denominator."""
+    n_rows = mapping.g.shape[0]
+    return mapping.g.sum(axis=0) + n_rows * mapping.g_ref
+
+
+def analog_mac(
+    key: jax.Array,
+    x: jax.Array,
+    mapping: CrossbarMapping,
+    dp: DeviceParams,
+) -> tuple[jax.Array, jax.Array]:
+    """Differential analog MAC: returns (delta_i, sigma_col).
+
+    ``delta_i`` is the noisy differential current I_j - I_ref (Eq. 9-12),
+    with mean V_r·G0·(x @ W_eff); ``sigma_col`` the per-column noise std.
+    ``x`` has shape (..., in); output (..., out).
+    """
+    v = x.astype(jnp.float32) * dp.v_read  # Eq. 6
+    mean = v @ (mapping.g - mapping.g_ref)  # == Vr·G0·(x@W_eff), Eq. 12
+    sum_g = column_sum_g(mapping)  # (out,)
+    sigma = column_noise_sigma(sum_g, dp)
+    noise = jax.random.normal(key, mean.shape, dtype=jnp.float32) * sigma
+    return mean + noise, sigma
+
+
+def analog_matmul_zspace(
+    key: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    dp: DeviceParams,
+    quantize: bool = True,
+    map_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Analog matmul with *input-referred* noise, returned in z-units.
+
+    This is the "ideal-ADC readout" view used to wrap arbitrary matmuls in
+    large models (noise-aware training): y = x@W_eff + n/(V_r·G0).  The RACA
+    binary readout instead feeds ``analog_mac`` output into a comparator
+    (see neurons.py).
+    """
+    mapping = map_weights(w, dp, key=map_key, quantize=quantize)
+    delta_i, _ = analog_mac(key, x, mapping, dp)
+    return delta_i / (dp.v_read * dp.g0)
+
+
+def zspace_noise_sigma(w: jax.Array, dp: DeviceParams) -> jax.Array:
+    """Per-column noise std in z-units: sigma_I / (V_r·G0)."""
+    n_rows = w.shape[0]
+    sum_g = (w * dp.g0 + dp.g_ref).sum(axis=0) + n_rows * dp.g_ref
+    return column_noise_sigma(sum_g, dp) / (dp.v_read * dp.g0)
+
+
+def tile_count(n_rows: int, rows_per_tile: int) -> int:
+    """Physical arrays needed for a (n_rows, ·) matrix (cost model input)."""
+    return -(-n_rows // rows_per_tile)

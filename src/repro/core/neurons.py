@@ -1,0 +1,122 @@
+"""Binary stochastic Sigmoid neurons (paper §III-A, Eq. 8-13).
+
+A comparator on the noisy differential column current fires with probability
+
+    P(I_j > I_ref) = Phi( V_r·G0·z_j / sigma_col )            (Eq. 13)
+                   ~= logistic(z_j)        after SNR calibration,
+
+which is exactly the stochastic binarization rule of SBNNs (Eq. 8) with the
+sigmoid as activation probability.  Two forward paths are provided:
+
+* ``physical``  — full circuit simulation through crossbar.analog_mac
+                  (quantization, per-column ΣG noise, comparator).
+* ``calibrated``— the ideal limit P = logistic(beta·z); used as oracle in
+                  tests and as the cheap path in large-scale training.
+
+Both are wrapped in a straight-through estimator so the layers are trainable:
+forward emits the hard Bernoulli sample, backward uses d/dz E[y] =
+sigmoid'(z) — the standard SBNN surrogate the paper inherits ([20],[21]).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import crossbar
+from .physics import DeviceParams, PROBIT_SCALE, column_noise_sigma
+
+
+def fire_probability_physical(
+    z: jax.Array, sum_g: jax.Array, dp: DeviceParams
+) -> jax.Array:
+    """Exact comparator fire probability Phi(V_r·G0·z / sigma) (Eq. 13)."""
+    sigma = column_noise_sigma(sum_g, dp)
+    arg = dp.v_read * dp.g0 * z / sigma
+    return 0.5 * (1.0 + jax.scipy.special.erf(arg / jnp.sqrt(2.0)))
+
+
+def fire_probability_calibrated(z: jax.Array, beta: float = 1.0) -> jax.Array:
+    """The logistic limit the circuit is tuned to (right side of Eq. 13)."""
+    return jax.nn.sigmoid(beta * z)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through stochastic binarization.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def stochastic_binarize(key: jax.Array, p: jax.Array, hard: bool = True):
+    """Sample y ~ Bernoulli(p); gradient flows as if y == p (STE).
+
+    ``p`` is the fire probability (any of the paths above).  With
+    ``hard=False`` returns p itself (expectation propagation — used for
+    deterministic eval)."""
+    u = jax.random.uniform(key, p.shape, dtype=p.dtype)
+    y = (u < p).astype(p.dtype)
+    return y if hard else p
+
+
+def _binarize_fwd(key, p, hard):
+    y = stochastic_binarize(key, p, hard)
+    return y, None
+
+
+def _binarize_bwd(hard, _, g):
+    # dE[y]/dp = 1  =>  pass gradient straight through to p.
+    return (None, g)
+
+
+stochastic_binarize.defvjp(_binarize_fwd, _binarize_bwd)
+
+
+def sigmoid_neuron_calibrated(
+    key: jax.Array,
+    z: jax.Array,
+    beta: float = 1.0,
+    hard: bool = True,
+) -> jax.Array:
+    """Calibrated-limit stochastic sigmoid neuron: y ~ Bern(logistic(beta z))."""
+    return stochastic_binarize(key, fire_probability_calibrated(z, beta), hard)
+
+
+def sigmoid_neuron_physical(
+    key: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    dp: DeviceParams,
+    map_key: Optional[jax.Array] = None,
+    hard: bool = True,
+) -> jax.Array:
+    """Full-circuit stochastic sigmoid neuron layer.
+
+    x: (..., in) inputs (binary {0,1} for hidden layers — DAC-free — or
+    continuous in [0,1] for the input layer, which keeps its DAC per §III-C).
+    w: (in, out).  Returns binary activations (..., out).
+
+    Rather than thresholding one concrete noisy sample inside the STE (which
+    would hide the noise from the gradient), we compute the *exact* fire
+    probability of the comparator (Eq. 13 with the true per-column ΣG) and
+    sample through the STE — distributionally identical, trainable.
+    """
+    mapping = crossbar.map_weights(w, dp, key=map_key)
+    z = x.astype(jnp.float32) @ mapping.w_eff
+    sum_g = crossbar.column_sum_g(mapping)
+    p = fire_probability_physical(z, sum_g, dp)
+    return stochastic_binarize(key, p, hard)
+
+
+def comparator_sample(
+    key: jax.Array, x: jax.Array, w: jax.Array, dp: DeviceParams
+) -> jax.Array:
+    """Literal circuit path (no STE): sample currents, compare (Eq. 8-11).
+
+    Used by tests to verify that the STE path above is distributionally
+    identical to the physical comparator."""
+    mapping = crossbar.map_weights(w, dp)
+    delta_i, _ = crossbar.analog_mac(key, x, mapping, dp)
+    return (delta_i > 0.0).astype(jnp.float32)

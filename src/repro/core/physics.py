@@ -1,0 +1,147 @@
+"""Device physics for the RACA accelerator (paper §II, Eq. 1-3).
+
+Johnson-Nyquist thermal noise of ReRAM devices is the entropy source that the
+whole paper rests on: a bare comparator on a noisy column current becomes a
+stochastic binary neuron.  Everything here is in SI units.
+
+    i_RMS = sqrt(4 k T G Δf)                      (Eq. 1)
+    SNR   = 10 log10(P_signal / P_noise)          (Eq. 2)
+    P_noise = i_RMS^2 · R                         (Eq. 3)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Boltzmann constant [J/K].
+BOLTZMANN_K = 1.380649e-23
+
+# Probit->logit matching constant: logistic(z) ~= Phi(z / PROBIT_SCALE).
+# (Classical 1.702 approximation; max abs error < 0.0095 over all z.)
+PROBIT_SCALE = 1.702
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceParams:
+    """Physical parameters of the ReRAM array + readout (paper §II, §IV).
+
+    Defaults model the paper's Ag:Si devices in the *low-SNR read regime*:
+    the read voltage is deliberately much smaller than a normal ReRAM read so
+    that the signal lands inside the thermal-noise band (paper §IV-C).
+    """
+
+    g_min: float = 1.0e-6        # [S] low conductance state (1 MΩ)
+    g_max: float = 1.0e-4        # [S] high conductance state (10 kΩ)
+    n_levels: int = 32           # programmable conductance levels
+    sigma_program: float = 0.0   # programming noise, fraction of (g_max-g_min)
+    temperature: float = 300.0   # [K]
+    delta_f: float = 1.0e9       # [Hz] readout bandwidth
+    v_read: float = 1.0e-3       # [V] V_r, read voltage amplitude (calibrated)
+    w_max: float = 1.0           # algorithmic weight clip range
+    w_min: float = -1.0
+
+    # ---- Eq. 4 / Eq. 5: weight-to-conductance mapping constants ----
+    @property
+    def g0(self) -> float:
+        """Scaling factor G0 = (Gmax - Gmin) / (Wmax - Wmin)   (Eq. 4)."""
+        return (self.g_max - self.g_min) / (self.w_max - self.w_min)
+
+    @property
+    def g_ref(self) -> float:
+        """Reference conductance (Eq. 5).
+
+        G_ref = (Wmax·Gmin - Wmin·Gmax) / (Wmax - Wmin); for a symmetric
+        weight range this is the mid-point conductance (Gmax+Gmin)/2.
+        """
+        return (self.w_max * self.g_min - self.w_min * self.g_max) / (
+            self.w_max - self.w_min
+        )
+
+    def replace(self, **kw) -> "DeviceParams":
+        return dataclasses.replace(self, **kw)
+
+
+def thermal_noise_rms(g: jax.Array, dp: DeviceParams) -> jax.Array:
+    """RMS thermal-noise current of a device with conductance ``g`` (Eq. 1)."""
+    return jnp.sqrt(4.0 * BOLTZMANN_K * dp.temperature * g * dp.delta_f)
+
+
+def column_noise_sigma(sum_g: jax.Array, dp: DeviceParams) -> jax.Array:
+    """Std-dev of the summed column noise current.
+
+    Independent Gaussian device noises add in variance (Eq. 11 / denominator
+    of Eq. 13): sigma^2 = 4 k T Δf · Σ_i G_i, where ``sum_g`` already contains
+    the conductances of every device hanging off the summing node (both the
+    signal column and, for differential readout, the reference column).
+    """
+    return jnp.sqrt(4.0 * BOLTZMANN_K * dp.temperature * dp.delta_f * sum_g)
+
+
+def snr_db(p_signal: jax.Array, p_noise: jax.Array) -> jax.Array:
+    """Signal-to-noise ratio in dB (Eq. 2)."""
+    return 10.0 * jnp.log10(p_signal / p_noise)
+
+
+def column_snr_db(
+    z: jax.Array, sum_g: jax.Array, dp: DeviceParams, r_load: float = 1.0
+) -> jax.Array:
+    """SNR of a column readout given pre-activation ``z`` (Eq. 2-3).
+
+    Signal current is V_r·G0·z (Eq. 12); both powers share the load R so it
+    cancels, but we keep it for fidelity with Eq. 3.
+    """
+    i_sig = dp.v_read * dp.g0 * z
+    p_signal = jnp.square(i_sig) * r_load
+    p_noise = jnp.square(column_noise_sigma(sum_g, dp)) * r_load
+    return snr_db(p_signal, p_noise)
+
+
+def calibrate_v_read(
+    dp: DeviceParams,
+    n_rows: int,
+    mean_abs_w: float = 0.0,
+    beta: float = 1.0,
+) -> DeviceParams:
+    """Choose V_r so the comparator fires with logistic(beta·z) probability.
+
+    The comparator fire probability is Phi(V_r·G0·z / sigma_col) (Eq. 13).
+    Matching logistic(beta·z) ~= Phi(beta·z/1.702) requires
+
+        V_r·G0/sigma = beta/1.702   =>   V_r = beta·sigma_col / (1.702·G0).
+
+    sigma_col uses the *expected* total conductance on the differential pair:
+    Σ_i (G_ij + G_ref) ~= n_rows·(E[G] + G_ref) with E[G] = G_ref for
+    zero-mean weights (plus a |W| correction term).  This is the knob the
+    paper tunes in Fig. 4(c); Δf, G0 and N_col (Fig. 4(d)-(f)) enter through
+    ``sigma_col``.
+    """
+    e_g = dp.g_ref + mean_abs_w * 0.0  # E[G] = G_ref for zero-mean weights
+    sum_g = n_rows * (e_g + dp.g_ref)
+    sigma = float(
+        jnp.sqrt(4.0 * BOLTZMANN_K * dp.temperature * dp.delta_f * sum_g)
+    )
+    v_read = beta * sigma / (PROBIT_SCALE * dp.g0)
+    return dp.replace(v_read=v_read)
+
+
+def effective_beta(dp: DeviceParams, n_rows: int) -> float:
+    """Inverse: the logistic slope realized by a given DeviceParams."""
+    sum_g = n_rows * 2.0 * dp.g_ref
+    sigma = float(
+        jnp.sqrt(4.0 * BOLTZMANN_K * dp.temperature * dp.delta_f * sum_g)
+    )
+    return dp.v_read * dp.g0 * PROBIT_SCALE / sigma
+
+
+def sample_noise_current(
+    key: jax.Array, sum_g: jax.Array, dp: DeviceParams, shape=None
+) -> jax.Array:
+    """Draw summed Gaussian thermal-noise current for columns (Eq. 11)."""
+    sigma = column_noise_sigma(sum_g, dp)
+    if shape is None:
+        shape = jnp.shape(sigma)
+    return jax.random.normal(key, shape, dtype=jnp.float32) * sigma

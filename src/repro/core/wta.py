@@ -1,0 +1,139 @@
+"""WTA binary stochastic SoftMax neurons (paper §III-B, Eq. 14).
+
+Per decision trial every output neuron's noisy voltage V_j (proportional to
+I_j - I_ref) is compared against an adaptive threshold resting at V_th0.
+When one neuron crosses, the threshold is pulled to supply and suppresses the
+rest — so at most one winner per trial (Fig. 5(a)); physically the winner is
+the neuron furthest above threshold (the race is won by the largest drive).
+Counting winners over T trials yields a cumulative distribution (Fig. 5(c))
+that approximates SoftMax:
+
+    P_WTA(y_j = 1) = P(y_j=1)/Σ_k P(y_k=1) ~= e^{z_j} / Σ_k e^{z_k}   (Eq. 14)
+
+The Gaussian-tail argument fixes the operating point: with per-neuron voltage
+V_j = z_j + n, n ~ N(0, σ²) (z-units after calibration),
+
+    P(V_j > θ) ∝ exp(z_j·θ/σ² - z_j²/2σ²)   for θ >> |z_j|,
+
+so θ = σ² gives unit softmax temperature; θ ("V_th0") too small degrades the
+approximation, too large stretches decision time — exactly the paper's §IV-C
+trade-off (Fig. 6(b)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .physics import DeviceParams, PROBIT_SCALE
+
+
+class WTAResult(NamedTuple):
+    counts: jax.Array        # (..., C) winner counts over trials
+    n_decisions: jax.Array   # (...,)   trials with >=1 neuron fired
+    probs: jax.Array         # (..., C) normalized cumulative distribution
+
+
+def wta_sigma_z(beta: float = 1.0) -> float:
+    """Noise std in z-units at the calibrated operating point."""
+    return PROBIT_SCALE / beta
+
+
+def calibrated_threshold(beta: float = 1.0, temp: float = 1.0) -> float:
+    """θ = σ²/temp gives softmax with temperature ``temp`` (tail argument)."""
+    s = wta_sigma_z(beta)
+    return s * s / temp
+
+
+def wta_trials(
+    key: jax.Array,
+    z: jax.Array,
+    n_trials: int,
+    vth0: float,
+    sigma_z: float | None = None,
+    beta: float = 1.0,
+) -> WTAResult:
+    """Simulate T WTA decision trials on pre-activations ``z`` (..., C).
+
+    Vectorized over trials: each trial draws independent thermal noise for
+    every neuron, fires the set {V_j > vth0}, and the largest-drive firing
+    neuron wins the threshold race.  Returns winner counts and normalized
+    probabilities (the counter of §III-C).
+    """
+    if sigma_z is None:
+        sigma_z = wta_sigma_z(beta)
+    noise = (
+        jax.random.normal(key, (n_trials,) + z.shape, dtype=jnp.float32)
+        * sigma_z
+    )
+    v = z[None, ...] + noise                      # (T, ..., C)
+    fired = v > vth0                              # comparator bank
+    any_fired = jnp.any(fired, axis=-1)           # (T, ...)
+    # Winner: argmax over fired neurons' voltages (race to pull threshold up).
+    neg_inf = jnp.finfo(jnp.float32).min
+    v_masked = jnp.where(fired, v, neg_inf)
+    winner = jnp.argmax(v_masked, axis=-1)        # (T, ...)
+    onehot = jax.nn.one_hot(winner, z.shape[-1], dtype=jnp.float32)
+    onehot = onehot * any_fired[..., None].astype(jnp.float32)
+    counts = onehot.sum(axis=0)                   # (..., C)
+    n_dec = any_fired.sum(axis=0).astype(jnp.float32)
+    probs = counts / jnp.maximum(counts.sum(axis=-1, keepdims=True), 1.0)
+    return WTAResult(counts=counts, n_decisions=n_dec, probs=probs)
+
+
+def wta_classify(
+    key: jax.Array,
+    z: jax.Array,
+    n_trials: int,
+    vth0: float,
+    sigma_z: float | None = None,
+    beta: float = 1.0,
+) -> jax.Array:
+    """Majority-vote classification: argmax of cumulative winner counts."""
+    res = wta_trials(key, z, n_trials, vth0, sigma_z, beta)
+    return jnp.argmax(res.counts, axis=-1)
+
+
+def wta_fire_probability(
+    z: jax.Array, vth0: float, sigma_z: float | None = None, beta: float = 1.0
+) -> jax.Array:
+    """Per-neuron single-trial fire probability P(V_j > vth0)."""
+    if sigma_z is None:
+        sigma_z = wta_sigma_z(beta)
+    return 0.5 * (
+        1.0 + jax.scipy.special.erf((z - vth0) / (sigma_z * jnp.sqrt(2.0)))
+    )
+
+
+def wta_expected_probs(
+    z: jax.Array, vth0: float, sigma_z: float | None = None, beta: float = 1.0
+) -> jax.Array:
+    """First-order analytic P_WTA (Eq. 14 LHS): fire probs normalized.
+
+    Exact when at most one neuron fires per trial (the high-threshold
+    regime); tests compare this and true softmax against simulated counts.
+    """
+    p = wta_fire_probability(z, vth0, sigma_z, beta)
+    return p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+
+
+def wta_topk(
+    key: jax.Array,
+    z: jax.Array,
+    k: int,
+    n_trials: int,
+    vth0: float,
+    sigma_z: float | None = None,
+    beta: float = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """k-winner WTA: top-k of cumulative counts (MoE-router generalization).
+
+    Ties (zero counts) are broken by z so that the result is always a valid
+    set of k experts.  Returns (values=vote shares, indices)."""
+    res = wta_trials(key, z, n_trials, vth0, sigma_z, beta)
+    score = res.counts + 1e-6 * jax.nn.softmax(z, axis=-1)
+    vals, idx = jax.lax.top_k(score, k)
+    share = vals / jnp.maximum(res.counts.sum(axis=-1, keepdims=True), 1.0)
+    return share, idx

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the RACA hot spots.
+
+crossbar_mac — fused quantize→MAC→thermal-noise→comparator (the paper's core)
+wta_kernel   — multi-trial WTA vote counting (SoftMax neuron readout)
+stoch_round  — stochastic-rounding quantizer (conductance programming;
+               reused for optimizer-state rounding and grad compression)
+
+Validated bit-exactly against the pure-jnp oracles in ref.py (shared
+counter-based PRNG, see prng.py).  ops.py holds the public jit'd wrappers.
+EXAMPLE.md documents the layout convention.
+"""

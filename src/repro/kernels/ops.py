@@ -1,0 +1,338 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * shape padding to MXU-aligned blocks (and un-padding),
+  * jax PRNG key → kernel seed derivation,
+  * straight-through / QAT gradients via custom_vjp,
+  * backend dispatch: compiled Pallas on TPU, `pltpu.InterpretParams`
+    emulation on CPU (tests), pure-jnp oracle where a caller asks for it.
+
+All wrappers accept arbitrary leading batch dims on ``x``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import crossbar_mac as _cb
+from . import prng, ref
+from . import stoch_round as _sr
+from . import wta_kernel as _wta
+from repro.core.physics import BOLTZMANN_K, PROBIT_SCALE
+
+
+def _interpret_mode():
+    if jax.default_backend() == "tpu":
+        return False
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.InterpretParams()
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _seed_from_key(key: jax.Array) -> jax.Array:
+    s = prng.key_to_seed(key)
+    return jax.lax.bitcast_convert_type(s, jnp.int32).reshape((1,))
+
+
+def _qstep(dp) -> float:
+    return (dp.w_max - dp.w_min) / max(dp.n_levels - 1, 1)
+
+
+def _noise_params(dp, k_rows: int) -> tuple:
+    return (
+        4.0 * BOLTZMANN_K * dp.temperature * dp.delta_f,
+        dp.g0,
+        dp.g_ref,
+        dp.v_read,
+        float(k_rows),
+    )
+
+
+# ---------------------------------------------------------------------------
+# crossbar_mac: fused analog matmul (+ optional stochastic binarization).
+# ---------------------------------------------------------------------------
+
+
+def _range_scale(w):
+    """Per-layer dynamic-range scale s = max|W| (see core.analog)."""
+    return jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(w)), 1e-6))
+
+
+def _crossbar_fwd_impl(x2d, w, seed_arr, cfg, binarize, bm, bn, bk, interp):
+    m, k = x2d.shape
+    n = w.shape[1]
+    dp = cfg.device
+    if cfg.calibrated:
+        # dynamic-range mapping: devices hold w/s; the comparator slope (via
+        # per-layer V_r) absorbs s: sigma_norm = 1.702 / (beta·s) realizes
+        # P = sigmoid(beta·s·z_norm) = sigmoid(beta·z).
+        s = _range_scale(w)
+        w_in = w / s
+        if binarize:
+            sigma = jnp.float32(PROBIT_SCALE) / (cfg.beta * s)
+        else:
+            sigma = jnp.float32(cfg.linear_sigma)  # high-SNR linear read
+    else:
+        s = jnp.float32(1.0)
+        w_in = w
+        sigma = jnp.float32(PROBIT_SCALE / cfg.beta)  # unused (physical)
+    params = jnp.concatenate(
+        [seed_arr, jax.lax.bitcast_convert_type(sigma, jnp.int32).reshape(1)]
+    )
+    xp = _pad_to(_pad_to(x2d, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w_in, bk, 0), bn, 1)
+    out = _cb.crossbar_mac_pallas(
+        xp,
+        wp,
+        params,
+        binarize=binarize,
+        physical_noise=not cfg.calibrated,
+        noise_params=_noise_params(dp, k),
+        quantize=cfg.quantize,
+        qstep=_qstep(dp),
+        w_min=dp.w_min,
+        w_max=dp.w_max,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        valid_k=k,
+        interpret=interp,
+    )
+    out = out[:m, :n]
+    if not binarize and cfg.calibrated:
+        out = out * s  # scale normalized linear readout back
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _crossbar_mac_core(x2d, w, seed_arr, cfg, binarize):
+    interp = _interpret_mode()
+    return _crossbar_fwd_impl(
+        x2d, w, seed_arr, cfg, binarize, _cb.DEF_BM, _cb.DEF_BN, _cb.DEF_BK,
+        interp,
+    )
+
+
+def _crossbar_fwd(x2d, w, seed_arr, cfg, binarize):
+    y = _crossbar_mac_core(x2d, w, seed_arr, cfg, binarize)
+    return y, (x2d, w)
+
+
+def _crossbar_bwd(cfg, binarize, res, g):
+    """QAT/STE backward.
+
+    binarize=True : y ~ Bern(sigmoid(beta z)); STE surrogate E[y] gives
+                    dz = g · beta · p(1-p)   with p recomputed (remat).
+    binarize=False: y = z + noise (noise treated as additive const) => dz = g.
+    Quantizer: straight-through.  With dynamic-range normalization the clip
+    never saturates (w/s ∈ [-1,1]); the physical path keeps the clip mask.
+    """
+    x2d, w = res
+    dp = cfg.device
+    wq = w
+    if cfg.quantize:
+        step = _qstep(dp)
+        if cfg.calibrated:
+            s = _range_scale(w)
+            wn = jnp.clip(w / s, dp.w_min, dp.w_max)
+            wq = s * (
+                jnp.round((wn - dp.w_min) * jnp.float32(1.0 / step)) * step
+                + dp.w_min
+            )
+        else:
+            wq = jnp.clip(w, dp.w_min, dp.w_max)
+            wq = (
+                jnp.round((wq - dp.w_min) * jnp.float32(1.0 / step)) * step
+                + dp.w_min
+            )
+    if binarize:
+        z = x2d @ wq
+        p = jax.nn.sigmoid(cfg.beta * z)
+        dz = g * cfg.beta * p * (1.0 - p)
+    else:
+        dz = g
+    dx = dz @ wq.T
+    dw = x2d.T @ dz
+    if cfg.quantize and not cfg.calibrated:
+        dw = dw * ((w >= dp.w_min) & (w <= dp.w_max)).astype(dw.dtype)
+    return dx, dw, None
+
+
+_crossbar_mac_core.defvjp(_crossbar_fwd, _crossbar_bwd)
+
+
+def crossbar_mac(
+    x: jax.Array,
+    w: jax.Array,
+    key: jax.Array,
+    cfg: Any,
+    binarize: bool = True,
+) -> jax.Array:
+    """Fused RACA matmul.  x: (..., K) f32, w: (K, N) f32 → (..., N) f32."""
+    lead = x.shape[:-1]
+    x2d = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    y = _crossbar_mac_core(
+        x2d, w.astype(jnp.float32), _seed_from_key(key), cfg, binarize
+    )
+    return y.reshape(lead + (w.shape[1],))
+
+
+def crossbar_mac_reference(
+    x: jax.Array, w: jax.Array, key: jax.Array, cfg: Any, binarize: bool = True
+) -> jax.Array:
+    """Same padding/seed/normalization pipeline, oracle math — for
+    kernel-vs-ref tests."""
+    lead = x.shape[:-1]
+    x2d = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    m, k = x2d.shape
+    n = w.shape[1]
+    wf = w.astype(jnp.float32)
+    dp = cfg.device
+    if cfg.calibrated:
+        s = _range_scale(wf)
+        w_in = wf / s
+        if binarize:
+            sigma = jnp.float32(PROBIT_SCALE) / (cfg.beta * s)
+        else:
+            sigma = jnp.float32(cfg.linear_sigma)
+    else:
+        s = jnp.float32(1.0)
+        w_in = wf
+        sigma = jnp.float32(PROBIT_SCALE / cfg.beta)
+    xp = _pad_to(_pad_to(x2d, _cb.DEF_BM, 0), _cb.DEF_BK, 1)
+    wp = _pad_to(_pad_to(w_in, _cb.DEF_BK, 0), _cb.DEF_BN, 1)
+    out = ref.crossbar_mac_ref(
+        xp,
+        wp,
+        prng.key_to_seed(key),
+        binarize=binarize,
+        physical_noise=not cfg.calibrated,
+        sigma_z=sigma,
+        noise_params=_noise_params(dp, k),
+        quantize=cfg.quantize,
+        qstep=_qstep(dp),
+        w_min=dp.w_min,
+        w_max=dp.w_max,
+        valid_k=k,
+    )
+    out = out[:m, :n]
+    if not binarize and cfg.calibrated:
+        out = out * s
+    return out.reshape(lead + (n,))
+
+
+# ---------------------------------------------------------------------------
+# WTA vote counting.
+# ---------------------------------------------------------------------------
+
+
+def wta_counts(
+    z: jax.Array,
+    key: jax.Array,
+    *,
+    n_trials: int,
+    vth0: float,
+    sigma_z: float,
+) -> jax.Array:
+    """Winner counts over T WTA trials.  z: (..., C) → counts (..., C).
+
+    Inference-path readout: gradients are stopped (the training surrogate is
+    softmax cross-entropy on the pre-activations, as in the paper)."""
+    lead = z.shape[:-1]
+    c = z.shape[-1]
+    z2d = z.reshape((-1, c)).astype(jnp.float32)
+    bm = _wta.DEF_BM
+    zp = _pad_to(_pad_to(z2d, bm, 0), 128, 1)
+    out = _wta.wta_counts_pallas(
+        jax.lax.stop_gradient(zp),
+        _seed_from_key(key),
+        n_trials=n_trials,
+        vth0=vth0,
+        sigma_z=sigma_z,
+        valid_c=c,
+        bm=bm,
+        interpret=_interpret_mode(),
+    )
+    return out[: z2d.shape[0], :c].reshape(lead + (c,))
+
+
+def wta_counts_reference(
+    z: jax.Array, key: jax.Array, *, n_trials: int, vth0: float, sigma_z: float
+) -> jax.Array:
+    lead = z.shape[:-1]
+    c = z.shape[-1]
+    z2d = z.reshape((-1, c)).astype(jnp.float32)
+    bm = _wta.DEF_BM
+    zp = _pad_to(_pad_to(z2d, bm, 0), 128, 1)
+    out = ref.wta_counts_ref(
+        zp,
+        prng.key_to_seed(key),
+        n_trials=n_trials,
+        vth0=vth0,
+        sigma_z=sigma_z,
+        valid_c=c,
+        bm=bm,
+    )
+    return out[: z2d.shape[0], :c].reshape(lead + (c,))
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _stoch_round_core(x2d, seed_arr, step, lo, hi):
+    xp = _pad_to(_pad_to(x2d, _sr.DEF_BM, 0), _sr.DEF_BN, 1)
+    out = _sr.stoch_round_pallas(
+        xp, seed_arr, step=step, lo=lo, hi=hi, interpret=_interpret_mode()
+    )
+    return out[: x2d.shape[0], : x2d.shape[1]]
+
+
+def _sr_fwd(x2d, seed_arr, step, lo, hi):
+    return _stoch_round_core(x2d, seed_arr, step, lo, hi), x2d
+
+
+def _sr_bwd(step, lo, hi, x2d, g):
+    mask = ((x2d >= lo) & (x2d <= hi)).astype(g.dtype)
+    return g * mask, None
+
+
+_stoch_round_core.defvjp(_sr_fwd, _sr_bwd)
+
+
+def stoch_round(
+    x: jax.Array, key: jax.Array, *, step: float, lo: float, hi: float
+) -> jax.Array:
+    """Unbiased stochastic rounding onto {lo + k·step}; STE gradient."""
+    shape = x.shape
+    x2d = x.reshape((-1, shape[-1])).astype(jnp.float32)
+    y = _stoch_round_core(x2d, _seed_from_key(key), step, lo, hi)
+    return y.reshape(shape)
+
+
+def stoch_round_reference(
+    x: jax.Array, key: jax.Array, *, step: float, lo: float, hi: float
+) -> jax.Array:
+    shape = x.shape
+    x2d = x.reshape((-1, shape[-1])).astype(jnp.float32)
+    xp = _pad_to(_pad_to(x2d, _sr.DEF_BM, 0), _sr.DEF_BN, 1)
+    out = ref.stoch_round_ref(
+        xp, prng.key_to_seed(key), step=step, lo=lo, hi=hi
+    )
+    return out[: x2d.shape[0], : x2d.shape[1]].reshape(shape)

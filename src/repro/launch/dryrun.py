@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+        --shape train_4k --mesh multi --out runs/dryrun.json
+
+Results accumulate into a JSON keyed "arch|shape|mesh"; launch/report.py
+renders EXPERIMENTS.md tables from it.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import parallel
+from repro.configs import SHAPES, cells, get_config, skip_shapes
+from repro.launch import roofline as RL
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.train import TrainConfig, make_train_step
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    keys = [
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ]
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {
+        k: float(v)
+        for k, v in ca.items()
+        if isinstance(v, (int, float)) and (
+            k in ("flops", "transcendentals", "bytes accessed")
+            or k.startswith("bytes accessed")
+        )
+    }
+
+
+PROD_TRAIN_MICROBATCHES = 4  # grad accumulation in the production pass
+
+
+def _compile_cell(cfg, shape, mesh, tcfg: TrainConfig):
+    """Lower + compile the appropriate step for one cell; returns compiled."""
+    rules = SH.activation_rules(mesh, cfg, shape.global_batch)
+    with parallel.axis_rules(mesh, rules):
+        if shape.kind == "train":
+            state_sds = SP.train_state_specs(cfg, tcfg)
+            state_sh = SH.state_shardings(state_sds, mesh, cfg)
+            batch_sds = SP.train_batch_specs(cfg, shape)
+            batch_sh = SH.batch_shardings(batch_sds, mesh, shape.global_batch)
+            step = make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            params_sds = SP.params_specs(cfg)
+            params_sh = SH.param_shardings(params_sds, mesh, cfg)
+            batch_sds = SP.prefill_batch_specs(cfg, shape)
+            batch_sh = SH.batch_shardings(batch_sds, mesh, shape.global_batch)
+            step = SP.make_prefill_step(cfg, shape)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            params_sds = SP.params_specs(cfg)
+            params_sh = SH.param_shardings(params_sds, mesh, cfg)
+            cache_sds = SP.decode_cache_specs(cfg, shape)
+            cache_sh = SH.cache_shardings(
+                cache_sds, mesh, cfg, shape.global_batch
+            )
+            bax = SH.batch_axes(mesh, shape.global_batch)
+            tok_sh = NamedSharding(mesh, P(bax))
+            step = SP.make_serve_step(cfg)
+            tok_sds = SP._sds((shape.global_batch,), jnp.int32)
+            if cfg.wta_head:
+                # WTA stochastic sampling head needs a PRNG key input
+                key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(params_sh, cache_sh, tok_sh, None),
+                    out_shardings=(cache_sh, tok_sh),
+                    donate_argnums=(1,),
+                )
+                lowered = jitted.lower(
+                    params_sds, cache_sds, tok_sds, key_sds
+                )
+            else:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(params_sh, cache_sh, tok_sh),
+                    out_shardings=(cache_sh, tok_sh),
+                    donate_argnums=(1,),
+                )
+                lowered = jitted.lower(params_sds, cache_sds, tok_sds)
+        return lowered.compile()
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    cfg_overrides: dict | None = None,
+    save_hlo: str | None = None,
+    passes: str = "both",  # prod | cost | both
+    microbatches: int | None = None,
+) -> dict:
+    """Two compiles per cell:
+
+    * production pass — scan-over-layers + grad microbatching, exactly what
+      a real deployment runs: proves compile + records memory_analysis.
+    * cost pass — cost_exact=True (all scans unrolled, microbatches=1) so
+      cost_analysis and the HLO collective parse count EVERY loop iteration
+      (XLA counts a while-loop body once); feeds §Roofline.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        analog_mode = cfg_overrides.pop("analog_mode", None)
+        if analog_mode:
+            from repro.core.physics import DeviceParams, calibrate_v_read
+
+            acfg = dataclasses.replace(
+                cfg.analog.with_mode(analog_mode),
+                device=calibrate_v_read(DeviceParams(), cfg.d_model),
+                use_pallas="off",  # jnp path inside the SPMD compile
+            )
+            cfg_overrides["analog"] = acfg
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "overrides": {k: str(v) for k, v in (cfg_overrides or {}).items()},
+    }
+
+    if passes in ("prod", "both"):
+        t0 = time.time()
+        mb = microbatches or PROD_TRAIN_MICROBATCHES
+        rec["prod_microbatches"] = mb
+        compiled = _compile_cell(
+            cfg, shape, mesh, TrainConfig(microbatches=mb),
+        )
+        rec["compile_s"] = round(time.time() - t0, 2)
+        rec["memory"] = _mem_analysis(compiled)
+        del compiled
+
+    if passes in ("cost", "both"):
+        t1 = time.time()
+        rec["cost"], rec["collectives"] = _exact_cost(
+            cfg, shape, mesh, save_hlo
+        )
+        rec["cost_compile_s"] = round(time.time() - t1, 2)
+        rec["model_flops_global"] = RL.model_flops(cfg, shape)
+        rec["model_flops_per_chip"] = rec["model_flops_global"] / n_chips
+        rec["roofline"] = RL.roofline_terms(rec)
+    return rec
+
+
+def _with_units(cfg, k: int):
+    """Config with k repeating units (layer stack reduced), full-model
+    sharding policy pinned."""
+    fsdp = cfg.param_count() >= SH.FSDP_THRESHOLD
+    kw = dict(cost_exact=True, force_fsdp=fsdp)
+    if cfg.family == "encdec":
+        kw.update(enc_layers=k, dec_layers=k, n_layers=2 * k)
+    else:
+        kw.update(n_layers=k * len(cfg.layer_pattern))
+    return dataclasses.replace(cfg, **kw)
+
+
+def _n_units_of(cfg) -> int:
+    return cfg.enc_layers if cfg.family == "encdec" else cfg.n_units
+
+
+def _exact_cost(cfg, shape, mesh, save_hlo=None):
+    """Exact per-step cost via unit differencing.
+
+    XLA counts a while-loop body once, so the roofline pass unrolls every
+    scan (cost_exact).  Full unrolls compile slowly, so instead we compile
+    1-unit and 2-unit versions (identical HLO per unit after GSPMD) and
+    extrapolate linearly: cost(n) = cost(1) + (n-1)·(cost(2) - cost(1)).
+    Exact for identical scanned units; embed/logits/optimizer terms live in
+    the base.  fcnn-like flat models compile directly.
+    """
+    n_units = _n_units_of(cfg)
+    if cfg.family == "fcnn" or n_units <= 2:
+        compiled = _compile_cell(
+            dataclasses.replace(cfg, cost_exact=True), shape, mesh,
+            TrainConfig(),
+        )
+        cost = _cost_analysis(compiled)
+        colls = RL.parse_collectives(compiled.as_text())
+        return cost, colls
+
+    c1 = _compile_cell(_with_units(cfg, 1), shape, mesh, TrainConfig())
+    cost1 = _cost_analysis(c1)
+    coll1 = RL.parse_collectives(c1.as_text())
+    del c1
+    c2 = _compile_cell(_with_units(cfg, 2), shape, mesh, TrainConfig())
+    cost2 = _cost_analysis(c2)
+    coll2 = RL.parse_collectives(c2.as_text())
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(c2.as_text())
+    del c2
+
+    def extrap(d1, d2):
+        out = {}
+        for k in set(d1) | set(d2):
+            a, b = d1.get(k, 0.0), d2.get(k, 0.0)
+            if isinstance(a, str) or isinstance(b, str):
+                continue
+            out[k] = a + (n_units - 1) * (b - a)
+        return out
+
+    cost = extrap(cost1, cost2)
+    colls = extrap(coll1, coll2)
+    cost["extrapolated_from_units"] = 2.0
+    return cost, colls
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun.json")
+    ap.add_argument("--save-hlo")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", default="", help="suffix for result keys")
+    ap.add_argument("--passes", choices=["prod", "cost", "both"],
+                    default="both")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="grad-accumulation microbatches for the prod pass")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if skip is None]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch, shape in todo:
+        skips = skip_shapes(arch)
+        if shape in skips:
+            key = f"{arch}|{shape}|skipped"
+            results[key] = {"skipped": skips[shape]}
+            print(f"[skip] {arch} × {shape}: {skips[shape]}", flush=True)
+            continue
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            key = f"{arch}|{shape}|{mesh_name}" + (
+                f"|{args.tag}" if args.tag else ""
+            )
+            if key in results and "error" not in results[key] and not overrides:
+                print(f"[cached] {key}", flush=True)
+                continue
+            print(f"[run] {key} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, overrides or None,
+                               args.save_hlo, passes=args.passes,
+                               microbatches=args.microbatches)
+                results[key] = rec
+                msg = f"  ok compile={rec.get('compile_s')}s"
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    msg += (
+                        f" cost_compile={rec.get('cost_compile_s')}s"
+                        f" compute={r['compute_s']:.3e}s"
+                        f" memory={r['memory_s']:.3e}s"
+                        f" coll={r['collective_s']:.3e}s dom={r['dominant']}"
+                        f" frac={r['roofline_fraction']:.3f}"
+                    )
+                print(msg, flush=True)
+            except Exception as e:
+                results[key] = {
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print("done.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from runs/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report runs/dryrun.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES
+from repro.launch import roofline as RL
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}PB"
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def dryrun_table(results: dict) -> str:
+    """§Dry-run: per cell × mesh — compile ok, per-device memory."""
+    lines = [
+        "| arch | shape | mesh | compile | HBM/dev (args+temp) | fits 16G |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            skip_key = f"{arch}|{shape}|skipped"
+            if skip_key in results:
+                lines.append(
+                    f"| {arch} | {shape} | - | SKIP | "
+                    f"{results[skip_key]['skipped'][:46]} | - |"
+                )
+                continue
+            for mesh in ("single", "multi"):
+                key = f"{arch}|{shape}|{mesh}"
+                r = results.get(key)
+                if r is None:
+                    continue
+                if "error" in r:
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | **FAIL** | "
+                        f"{r['error'][:46]} | - |"
+                    )
+                    continue
+                mem = r.get("memory", {})
+                hbm = (
+                    mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0)
+                )
+                fits = "yes" if hbm <= RL.HBM_PER_CHIP else "**no**"
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | "
+                    f"{r.get('compile_s', '-')}s | {fmt_bytes(hbm)} | {fits} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(results: dict, tag: str = "") -> str:
+    """§Roofline: single-pod terms per cell."""
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPs/HLO_FLOPs | roofline frac | what would move it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            key = f"{arch}|{shape}|single" + (f"|{tag}" if tag else "")
+            r = results.get(key)
+            if r is None or "error" in r or "roofline" not in r:
+                continue
+            ro = RL.roofline_terms(r)
+            hint = RL.improvement_hint(r, ro)
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(ro['compute_s'])} | "
+                f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+                f"{ro['dominant']} | {ro['useful_flops_ratio']:.3f} | "
+                f"{ro['roofline_fraction']:.3f} | {hint} |"
+            )
+    return "\n".join(lines)
+
+
+def collective_table(results: dict) -> str:
+    lines = [
+        "| arch | shape | all-reduce | all-gather | reduce-scatter | "
+        "all-to-all | permute | #ops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            r = results.get(f"{arch}|{shape}|single")
+            if not r or "collectives" not in r:
+                continue
+            c = r["collectives"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_bytes(c['all-reduce'])} | "
+                f"{fmt_bytes(c['all-gather'])} | "
+                f"{fmt_bytes(c['reduce-scatter'])} | "
+                f"{fmt_bytes(c['all-to-all'])} | "
+                f"{fmt_bytes(c['collective-permute'])} | {int(c['count'])} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.json"
+    with open(path) as f:
+        results = json.load(f)
+    done = sum(1 for v in results.values()
+               if "error" not in v and "skipped" not in v)
+    failed = {k: v["error"] for k, v in results.items() if "error" in v}
+    print(f"## cells ok: {done}; failed: {len(failed)}\n")
+    for k, e in failed.items():
+        print(f"FAILED {k}: {e}")
+    print("\n### Dry-run\n")
+    print(dryrun_table(results))
+    print("\n### Roofline (single-pod, per device)\n")
+    print(roofline_table(results))
+    print("\n### Collectives (single-pod, per device per step)\n")
+    print(collective_table(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Roofline accounting from compiled dry-run artifacts (TPU v5e targets).
+
+Terms (per EXPERIMENTS.md §Roofline; the compiled module is the SPMD
+per-device program, so cost_analysis numbers are already per-chip):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+collective_bytes comes from parsing the optimized HLO text: per op type the
+bytes a chip moves over ICI are estimated as (ring algorithms, (n-1)/n ≈ 1):
+all-gather → result bytes; reduce-scatter → operand bytes; all-reduce →
+2 × operand bytes; all-to-all / collective-permute → operand bytes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link (formula uses one link per chip)
+HBM_PER_CHIP = 16e9     # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\("
+    r"(?P<operands>[^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-type byte totals (per device) from optimized HLO."""
+    out = {
+        "all-reduce": 0,
+        "all-gather": 0,
+        "reduce-scatter": 0,
+        "all-to-all": 0,
+        "collective-permute": 0,
+        "count": 0,
+    }
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        res_b = _shape_bytes(m.group("result"))
+        opd_b = _shape_bytes(m.group("operands"))
+        if op == "all-gather":
+            b = res_b
+        elif op == "all-reduce":
+            b = 2 * opd_b
+        else:  # reduce-scatter / all-to-all / collective-permute
+            b = opd_b
+        out[op] += b
+        out["count"] += 1
+    out["total_bytes"] = sum(
+        out[k] for k in
+        ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+    )
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step (global): 6·N·D train, 2·N·D forward-only;
+    MoE uses active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            d = shape.global_batch * (shape.seq_len + 448)
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one token
+
+
+def roofline_terms(record: dict) -> dict:
+    """record: one dry-run cell dict (see dryrun.py)."""
+    flops_pd = record["cost"].get("flops", 0.0)
+    bytes_pd = record["cost"].get("bytes accessed", 0.0)
+    coll_pd = record["collectives"]["total_bytes"]
+    t_c = flops_pd / PEAK_FLOPS
+    t_m = bytes_pd / HBM_BW
+    t_x = coll_pd / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = record["model_flops_per_chip"]
+    out = {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "useful_flops_ratio": (mf / flops_pd) if flops_pd else 0.0,
+        "bound_s": max(t_c, t_m, t_x),
+    }
+    # roofline fraction: useful work over the time the dominant term costs
+    out["roofline_fraction"] = (
+        (mf / PEAK_FLOPS) / out["bound_s"] if out["bound_s"] > 0 else 0.0
+    )
+    return out
+
+
+def improvement_hint(record: dict, ro: dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    kind = record.get("kind", "train")
+    dom = ro["dominant"]
+    ufr = ro["useful_flops_ratio"]
+    coll = record.get("collectives", {})
+    if dom == "compute":
+        if ufr < 0.5:
+            return ("compute is mostly remat/replication waste — relax the "
+                    "remat policy or shard the replicated attention heads")
+        return ("near-useful-compute bound — raise arithmetic intensity "
+                "(larger per-chip batch) or accept")
+    if dom == "memory":
+        if kind == "decode":
+            return ("decode reads the whole KV cache per token — shrink "
+                    "local-window caches / quantize KV to int8")
+        return ("activation traffic dominates — chunk the f32 logits/CE, "
+                "save dots instead of recomputing (remat policy)")
+    # collective
+    big = max(
+        ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute"),
+        key=lambda k: coll.get(k, 0),
+    )
+    return (f"{big} dominates — overlap it with compute, reduce its "
+            "precision (int8/bf16), or reshard to keep it on-pod")

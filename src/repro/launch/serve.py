@@ -1,0 +1,74 @@
+"""Serving launcher: batched requests against a (randomly initialized or
+checkpointed) model, greedy or WTA-stochastic sampling.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
+        --requests 4 --new-tokens 16 [--wta] [--ckpt-dir ckpts/stablelm-3b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.checkpoint import latest_step, load_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.models import get_model_fns
+from repro.serving import ServeConfig, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--wta", action="store_true",
+                    help="WTA stochastic SoftMax sampling (the paper's head)")
+    ap.add_argument("--ckpt-dir")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, wta_head=args.wta)
+    fns = get_model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        step = latest_step(args.ckpt_dir)
+        if step is not None:
+            like = jax.eval_shape(lambda: params)
+            state = load_checkpoint(args.ckpt_dir, step, like)
+            params = state  # params-only checkpoints
+            print(f"loaded checkpoint step {step}")
+
+    eng = ServingEngine(
+        params, cfg,
+        ServeConfig(
+            max_batch=args.requests,
+            max_new_tokens=args.new_tokens,
+            max_len=args.max_len,
+        ),
+    )
+    rng = jax.random.PRNGKey(7)
+    for i in range(args.requests):
+        rng, k = jax.random.split(rng)
+        n = int(jax.random.randint(k, (), 2, 9))
+        prompt = jax.random.randint(k, (n,), 0, cfg.vocab).tolist()
+        eng.submit(prompt)
+    t0 = time.time()
+    outs = eng.step()
+    dt = time.time() - t0
+    total = sum(len(o) for o in outs)
+    print(
+        f"served {len(outs)} requests, {total} tokens in {dt:.2f}s "
+        f"({total / max(dt, 1e-9):.1f} tok/s, sampler="
+        f"{'WTA votes' if args.wta else 'greedy'})"
+    )
+    for o in outs:
+        print("  ->", o)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Sharding policy: logical-axis rules for activations, path rules for
+parameters/optimizer state, and cache shardings for serving.
+
+Policy summary (baseline — hillclimbed variants in EXPERIMENTS.md §Perf):
+  * batch            → ("pod", "data")  (dropped per-dim when not divisible)
+  * heads/ffn/vocab/experts' F dim → "model" (tensor parallelism)
+  * params ≥ FSDP_THRESHOLD → largest replicated dim additionally sharded
+    over "data" (ZeRO-3); optimizer moments inherit parameter shardings
+  * decode KV caches → batch over data; kv_heads over "model" when
+    divisible, else the cache *sequence* dim over "model"
+Every rule is divisibility-guarded: a mesh axis that does not divide the
+dimension is dropped (replicated) rather than relying on GSPMD padding.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+FSDP_THRESHOLD = 8_000_000_000  # params; above this, shard states over data
+
+_FSDP = "__fsdp__"  # placeholder resolved per-mesh/per-shape
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh, batch_size: int) -> Optional[tuple]:
+    """Largest prefix of ("pod","data") that divides the batch."""
+    sizes = mesh_axis_sizes(mesh)
+    axes, prod = [], 1
+    for a in ("pod", "data"):
+        if a in sizes and batch_size % (prod * sizes[a]) == 0:
+            axes.append(a)
+            prod *= sizes[a]
+    return tuple(axes) or None
+
+
+def activation_rules(mesh: Mesh, cfg: ModelConfig, batch_size: int) -> dict:
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+    return {
+        "batch": batch_axes(mesh, batch_size),
+        "seq": None,
+        "embed": None,
+        "heads": "model" if cfg.n_heads % m == 0 else None,
+        "kv_heads": "model" if cfg.n_kv_heads % m == 0 else None,
+        "ffn": "model",
+        "vocab": "model",
+        "experts": None,
+        "layers": None,
+    }
+
+
+# (path regex, spec template).  _FSDP resolves to "data" (or None) per arch.
+_PARAM_RULES = [
+    (r"embed/embedding$", ("model", _FSDP)),            # (V, D)
+    (r"head/w$", (_FSDP, "model")),                     # (D, V)
+    (r"dec_pos$", (None, None)),
+    (r"(attn|self_attn|cross_attn)/w[qkv]$", (_FSDP, "model")),
+    (r"(attn|self_attn|cross_attn)/wo$", ("model", _FSDP)),
+    # MoE rules MUST precede the generic w_up/w_gate/w_down patterns —
+    # expert weights carry a leading (E,) axis.
+    (r"moe/router$", (_FSDP, None)),
+    (r"moe/w_(up|gate)$", (None, _FSDP, "model")),      # (E, D, F)
+    (r"moe/w_down$", (None, "model", _FSDP)),           # (E, F, D)
+    (r"(ffn|rec)/?w_up$|w_up$", (_FSDP, "model")),
+    (r"w_gate$", (_FSDP, "model")),
+    (r"w_down$", ("model", _FSDP)),
+    (r"mixer/in_proj$", (_FSDP, "model")),
+    (r"mixer/out_proj$", ("model", _FSDP)),
+    (r"mixer/conv_w$", (None, "model")),
+    (r"mixer/conv_b$", ("model",)),
+    (r"rec/w_main$|rec/w_gate_br$", (_FSDP, "model")),
+    (r"rec/w_out$", ("model", _FSDP)),
+    (r"rec/w[ax]$", (_FSDP, "model")),
+    (r"rec/conv_w$", (None, "model")),
+    (r"rec/conv_b$|rec/b[ax]$|rec/lam$", ("model",)),
+]
+
+# MoE weights (E,D,F)/(E,F,D): the rules above keep experts unsharded
+# (replicated across model, TP inside the expert).  Hillclimb variant adds
+# expert parallelism by mapping the E axis to a mesh axis.
+
+
+def _spec_for_path(
+    path: str,
+    shape: tuple,
+    mesh: Mesh,
+    fsdp: bool,
+) -> P:
+    sizes = mesh_axis_sizes(mesh)
+    ndim = len(shape)
+    # scanned-stack prefixes: units/, enc/, dec/ params carry a leading
+    # (n_layers-or-units,) axis not covered by the 2-D rule templates.
+    n_prefix = 1 if re.match(r"^(units|enc|dec)/", path) else 0
+    template: tuple = ()
+    for rx, tpl in _PARAM_RULES:
+        if re.search(rx, path):
+            template = tpl
+            break
+    template = (None,) * n_prefix + tuple(template)
+    template = template + (None,) * (ndim - len(template))
+    template = template[:ndim]
+
+    out = []
+    used = set()
+    for dim, ax in zip(shape, template):
+        if ax == _FSDP:
+            ax = "data" if fsdp else None
+        if ax is None or ax in used or ax not in sizes:
+            out.append(None)
+            continue
+        if dim % sizes[ax] != 0:
+            out.append(None)  # divisibility guard: replicate instead of pad
+            continue
+        used.add(ax)
+        out.append(ax)
+    return P(*out)
+
+
+def param_shardings(
+    params_sds: Any, mesh: Mesh, cfg: ModelConfig
+) -> Any:
+    """NamedSharding pytree for a params (or params-shaped) pytree of
+    ShapeDtypeStructs."""
+    fsdp = (
+        cfg.force_fsdp
+        if cfg.force_fsdp is not None
+        else cfg.param_count() >= FSDP_THRESHOLD
+    )
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_sds)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        spec = _spec_for_path(pstr, leaf.shape, mesh, fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(state_sds: Any, mesh: Mesh, cfg: ModelConfig) -> Any:
+    """TrainState shardings: params rules; opt moments inherit; scalars and
+    rng replicated; error-feedback buffers inherit param shardings."""
+    from repro.train.step import TrainState  # local import, no cycle
+
+    assert isinstance(state_sds, TrainState)
+    p_sh = param_shardings(state_sds.params, mesh, cfg)
+    rep = NamedSharding(mesh, P())
+    opt = state_sds.opt
+    opt_sh = type(opt)(
+        step=rep,
+        m=param_shardings(opt.m, mesh, cfg),
+        v=param_shardings(opt.v, mesh, cfg),
+    )
+    comp_sh = None
+    if state_sds.compress is not None:
+        comp_sh = type(state_sds.compress)(
+            error=param_shardings(state_sds.compress.error, mesh, cfg)
+        )
+    return TrainState(
+        params=p_sh, opt=opt_sh, compress=comp_sh, step=rep, rng=rep
+    )
+
+
+def batch_shardings(batch_sds: dict, mesh: Mesh, batch_size: int) -> dict:
+    ax = batch_axes(mesh, batch_size)
+    out = {}
+    for k, v in batch_sds.items():
+        spec = [ax] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(
+    cache_sds: dict, mesh: Mesh, cfg: ModelConfig, batch_size: int
+) -> dict:
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+    bax = batch_axes(mesh, batch_size)
+    kv_div = cfg.n_kv_heads % m == 0 if cfg.n_kv_heads else False
+    out = {}
+
+    def _guard(axes, shape):
+        """Drop mesh axes that do not divide their dimension."""
+        res = []
+        for dim, ax in zip(shape, axes):
+            if ax is None:
+                res.append(None)
+                continue
+            sz = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                sz *= sizes.get(a, 1)
+            res.append(ax if dim % sz == 0 else None)
+        return P(*res)
+
+    for k, v in cache_sds.items():
+        nd = len(v.shape)
+        if k == "pos":
+            spec = P(bax)
+        elif k in ("k", "v", "ck", "cv"):
+            # (..., B, S, Hkv, Dh) with 1-2 leading stack axes
+            lead = nd - 4
+            seq_ax = None if kv_div else "model"
+            spec = _guard(
+                ([None] * lead)
+                + [bax, seq_ax, "model" if kv_div else None, None],
+                v.shape,
+            )
+        elif k in ("k_scale", "v_scale"):
+            # (..., B, S, Hkv): follow the K/V cache layout minus head_dim
+            lead = nd - 3
+            seq_ax = None if kv_div else "model"
+            spec = _guard(
+                ([None] * lead) + [bax, seq_ax, "model" if kv_div else None],
+                v.shape,
+            )
+        elif k in ("ssm_conv", "rec_conv"):
+            lead = nd - 3
+            last = v.shape[-1]
+            spec = P(
+                *([None] * lead), bax, None,
+                "model" if last % m == 0 else None,
+            )
+        elif k == "ssm_state":
+            # (nu, n, B, H, P, N): shard heads over model
+            h = v.shape[-3]
+            spec = P(
+                None, None, bax, "model" if h % m == 0 else None, None, None
+            )
+        elif k == "rec_h":
+            w = v.shape[-1]
+            spec = P(None, None, bax, "model" if w % m == 0 else None)
+        else:
+            spec = P(*([None] * nd))
+        out[k] = NamedSharding(mesh, spec)
+    return out

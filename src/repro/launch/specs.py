@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+`input_specs(arch, shape)` returns weak-type-correct, shardable specs with
+no device allocation, for the step function the shape's kind lowers:
+  train   → train_step(state, batch)
+  prefill → prefill_step(params, batch)
+  decode  → serve_step(params, cache, token)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.models import ModelConfig, get_model_fns
+from repro.models import transformer as TF
+from repro.models import encdec as ED
+from repro.train import TrainConfig, TrainState, init_train_state
+
+WHISPER_DEC_PROMPT = 448  # decoder prompt length for encdec prefill cells
+
+_i32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s), _i32), "labels": _sds((b, s), _i32)}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((b, cfg.n_patches, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, s, cfg.d_model), cfg.dtype)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        # prefill_32k for whisper = encode S frames + short decoder prompt
+        return {
+            "frames": _sds((b, s, cfg.d_model), cfg.dtype),
+            "tokens": _sds((b, WHISPER_DEC_PROMPT), _i32),
+        }
+    out = {"tokens": _sds((b, s), _i32)}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((b, cfg.n_patches, cfg.d_model), cfg.dtype)
+    return out
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: ED.init_encdec_cache(cfg, b, s, cfg.enc_seq)
+        )
+    return jax.eval_shape(lambda: TF.init_decode_cache(cfg, b, s))
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    fns = get_model_fns(cfg)
+    return jax.eval_shape(lambda k: fns.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def train_state_specs(cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), jax.random.PRNGKey(0)
+    )
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, token(B,)) -> (cache, token).
+
+    With cfg.wta_head the next token comes from the paper's WTA stochastic
+    SoftMax circuit (vote counts over noisy comparator trials) instead of a
+    digital argmax — the serving-side integration of the technique."""
+    fns = get_model_fns(cfg)
+
+    def serve_step(params, cache, token, key=None):
+        cache, logits = fns.decode_step(params, cache, token, cfg)
+        if cfg.wta_head and key is not None:
+            from repro.core import wta as W
+
+            res = W.wta_trials(
+                key,
+                logits.astype(jnp.float32),
+                n_trials=cfg.analog.wta_trials,
+                vth0=cfg.analog.vth0,
+                beta=cfg.analog.beta,
+            )
+            nxt = jnp.argmax(res.counts, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, nxt
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeSpec):
+    fns = get_model_fns(cfg)
+    max_len = shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+
+    def prefill_step(params, batch):
+        return fns.prefill(params, batch, cfg, max_len)
+
+    return prefill_step
+
+
+def input_specs(arch: str, shape_name: str, tcfg: TrainConfig | None = None):
+    """The dry-run entry: (step_fn_kind, arg specs) for an (arch, shape)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        return {
+            "kind": "train",
+            "cfg": cfg,
+            "shape": shape,
+            "state": train_state_specs(cfg, tcfg),
+            "batch": train_batch_specs(cfg, shape),
+            "tcfg": tcfg,
+        }
+    if shape.kind == "prefill":
+        return {
+            "kind": "prefill",
+            "cfg": cfg,
+            "shape": shape,
+            "params": params_specs(cfg),
+            "batch": prefill_batch_specs(cfg, shape),
+        }
+    return {
+        "kind": "decode",
+        "cfg": cfg,
+        "shape": shape,
+        "params": params_specs(cfg),
+        "cache": decode_cache_specs(cfg, shape),
+        "token": _sds((shape.global_batch,), _i32),
+    }

@@ -1,0 +1,45 @@
+"""Model zoo registry: family → (init / loss / prefill / decode) functions."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from . import encdec as ED
+from . import fcnn as FC
+from . import transformer as TF
+from .config import ModelConfig
+
+
+class ModelFns(NamedTuple):
+    init: Callable          # (key, cfg) -> params
+    loss: Callable          # (params, batch, cfg, key) -> (loss, metrics)
+    prefill: Callable | None
+    decode_step: Callable | None
+
+
+def get_model_fns(cfg: ModelConfig) -> ModelFns:
+    if cfg.family == "encdec":
+        return ModelFns(
+            init=ED.init_encdec,
+            loss=ED.encdec_loss,
+            prefill=lambda params, batch, cfg, max_len: ED.encdec_prefill(
+                params, batch["frames"], batch["tokens"], cfg, max_len
+            ),
+            decode_step=ED.encdec_decode_step,
+        )
+    if cfg.family == "fcnn":
+        return ModelFns(
+            init=FC.init_fcnn, loss=FC.fcnn_loss, prefill=None, decode_step=None
+        )
+    # decoder_lm | moe_lm | ssm | hybrid | vlm
+    return ModelFns(
+        init=TF.init_lm,
+        loss=TF.lm_loss,
+        prefill=lambda params, batch, cfg, max_len: TF.lm_prefill(
+            params, batch["tokens"], cfg, max_len, batch.get("patches")
+        ),
+        decode_step=TF.lm_decode_step,
+    )
+
+
+__all__ = ["ModelConfig", "ModelFns", "get_model_fns"]

@@ -1,0 +1,357 @@
+"""Grouped-query attention with RoPE, local/global masking, soft-capping,
+KV caches, and memory-efficient (online-softmax) chunked computation.
+
+The chunked path never materializes the full (S, T) score matrix: queries
+attend to KV chunks under a lax.scan carrying running (max, denom, acc) —
+the standard flash-attention recurrence expressed in pure JAX so that GSPMD
+can shard it (the Pallas kernel budget of this repo belongs to the paper's
+crossbar pipeline, not attention).
+
+Attention softmax is intentionally digital: the paper's WTA neuron emits
+one-hot *samples*, not the weighted average attention requires (DESIGN.md
+§5).  QKV/O projections do route through core.analog (linear readout) in
+analog modes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.core import analog as A
+from .config import ModelConfig
+from .layers import apply_rope, dtype_of, softcap
+
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, Smax, Hkv, Dh)
+    v: jax.Array      # (B, Smax, Hkv, Dh)
+    length: jax.Array  # (B,) int32 — tokens currently valid
+
+
+def init_attn(key, cfg: ModelConfig, d_model: Optional[int] = None) -> dict:
+    d = d_model or cfg.d_model
+    hd, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    init = lambda k, shape, fan: (
+        jax.random.normal(k, shape, jnp.float32) * fan**-0.5
+    ).astype(dt)
+    return {
+        "wq": init(ks[0], (d, h * hd), d),
+        "wk": init(ks[1], (d, hkv * hd), d),
+        "wv": init(ks[2], (d, hkv * hd), d),
+        "wo": init(ks[3], (h * hd, d), h * hd),
+    }
+
+
+def _proj_cfg(cfg: ModelConfig) -> A.AnalogConfig:
+    a = cfg.analog
+    return a.with_mode("analog_linear") if a.mode == "analog_stochastic" else a
+
+
+def qkv(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+):
+    b, s, _ = x.shape
+    acfg = _proj_cfg(cfg)
+    keys = (None,) * 3 if key is None else jax.random.split(key, 3)
+    q = A.analog_matmul(acfg, keys[0], x, p["wq"])
+    k = A.analog_matmul(acfg, keys[1], x, p["wk"])
+    v = A.analog_matmul(acfg, keys[2], x, p["wv"])
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = parallel.shard(q, ("batch", "seq", "heads", None))
+    k = parallel.shard(k, ("batch", "seq", "kv_heads", None))
+    v = parallel.shard(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _group(q: jax.Array, hkv: int) -> jax.Array:
+    """(B,S,H,Dh) -> (B,S,Hkv,G,Dh) grouped query heads."""
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, hkv, h // hkv, dh)
+
+
+def _maybe_expand(q, k, v, cfg: ModelConfig):
+    """Perf transforms (§Perf): pad query heads to a shardable count and/or
+    repeat KV heads to the full head count.  Both are numerically identity
+    for the used heads; padded heads' outputs are sliced away by the caller
+    (the w_o projection only consumes the real heads)."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    # head padding with grouped KV would scramble the q->kv grouping, so
+    # padding implies the repeated-KV (MHA) layout
+    repeat = cfg.gqa_repeat_kv or (
+        cfg.attn_pad_heads and cfg.attn_pad_heads > h
+    )
+    if repeat and hkv < h:
+        # repeat at the ORIGINAL head count (preserves q-head → kv-head
+        # grouping), before any padding
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+        hkv = h
+    if cfg.attn_pad_heads and cfg.attn_pad_heads > h:
+        pad = cfg.attn_pad_heads - h
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if hkv == h:  # repeated layout: pad kv alongside q
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        h = cfg.attn_pad_heads
+    if repeat:
+        k = parallel.shard(k, ("batch", "seq", "heads", None))
+        v = parallel.shard(v, ("batch", "seq", "heads", None))
+    q = parallel.shard(q, ("batch", "seq", "heads", None))
+    return q, k, v
+
+
+def attend_full(
+    q: jax.Array,  # (B,S,H,Dh)
+    k: jax.Array,  # (B,T,Hkv,Dh)
+    v: jax.Array,
+    qpos: jax.Array,  # (S,) query positions
+    kpos: jax.Array,  # (T,) key positions
+    kind: str,        # global | local | none
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; returns (B,S,H,Dh).
+
+    The mask is computed per KV chunk from positions — the full (S,T) score
+    or bias matrix is never materialized (O(S·chunk) temporaries).  Probs
+    dtype and chunk length are perf knobs (EXPERIMENTS.md §Perf)."""
+    h_orig = q.shape[2]
+    q, k, v = _maybe_expand(q, k, v, cfg)
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    pdt = jnp.dtype(cfg.attn_probs_dtype)
+    qg = _group(q, hkv).astype(pdt) * jnp.asarray(dh**-0.5, pdt)
+    kf = k.astype(pdt)
+    vf = v.astype(pdt)
+    kv_chunk = cfg.attn_kv_chunk
+    nchunks = max(t // kv_chunk, 1)
+    cs = t // nchunks
+    assert t % cs == 0, (t, cs)
+
+    kc = kf.reshape(b, nchunks, cs, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(b, nchunks, cs, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kposc = kpos.reshape(nchunks, cs)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kci, vci, kpi = inp
+        # scores: (B, Hkv, G, S, cs); accumulate in f32 on the MXU even for
+        # bf16 operands
+        sc = jnp.einsum(
+            "bskgd,bckd->bkgsc", qg, kci,
+            preferred_element_type=jnp.float32,
+        )
+        if cfg.attn_softcap > 0.0:
+            sc = softcap(sc, cfg.attn_softcap)
+        d = qpos[:, None] - kpi[None, :]  # (S, cs)
+        if kind == "none":
+            ok = jnp.ones(d.shape, bool)
+        elif kind == "local":
+            ok = (d >= 0) & (d < cfg.local_window)
+        else:
+            ok = d >= 0
+        sc = sc + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None]).astype(pdt)
+        l_new = l * scale + p.sum(axis=-1).astype(jnp.float32)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, h // hkv, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, h // hkv, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, h // hkv, s, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, kposc),
+        unroll=True if cfg.cost_exact else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
+    return out[:, :, :h_orig, :].astype(q.dtype)
+
+
+def self_attention(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    kind: str = "global",
+    key: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    b, s, _ = x.shape
+    kq = ko = None
+    if key is not None:
+        kq, ko = jax.random.split(key)
+    q, k, v = qkv(p, x, cfg, kq)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    qpos = positions[0] if positions.ndim == 2 else positions
+    out = attend_full(q, k, v, qpos, qpos, kind, cfg)
+    out = out.reshape(b, s, -1)
+    o = A.analog_matmul(_proj_cfg(cfg), ko, out, p["wo"])
+    return parallel.shard(o, ("batch", "seq", "embed"))
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,
+    enc_out: jax.Array,
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Decoder cross-attention over encoder outputs (no mask, no RoPE)."""
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    acfg = _proj_cfg(cfg)
+    keys = (None,) * 4 if key is None else tuple(jax.random.split(key, 4))
+    q = A.analog_matmul(acfg, keys[0], x, p["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim
+    )
+    k = A.analog_matmul(acfg, keys[1], enc_out, p["wk"]).reshape(
+        b, t, cfg.n_kv_heads, cfg.head_dim
+    )
+    v = A.analog_matmul(acfg, keys[2], enc_out, p["wv"]).reshape(
+        b, t, cfg.n_kv_heads, cfg.head_dim
+    )
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(t)
+    out = attend_full(q, k, v, qpos, kpos, "none", cfg).reshape(b, s, -1)
+    o = A.analog_matmul(acfg, keys[3], out, p["wo"])
+    return parallel.shard(o, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token against a KV cache).
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    dt = dtype_of(cfg)
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_spec():
+    """Logical axes for a stacked KV cache (leading layer axis)."""
+    return ("layers", "batch", "seq", "kv_heads", None)
+
+
+def _write_at(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """buf: (B, Smax, Hkv, Dh); new: (B, 1, Hkv, Dh); pos: (B,) int32."""
+
+    def one(b, n, p):
+        return jax.lax.dynamic_update_slice(b, n, (p, 0, 0))
+
+    return jax.vmap(one)(buf, new, pos)
+
+
+def quantize_kv(x: jax.Array):
+    """Symmetric per-(batch, pos, head) int8 quantization of K/V rows.
+
+    The scale factors out of the head_dim contraction, so scoring against an
+    int8 cache multiplies *scores* (not the cache) by scale/127 — no
+    dequantized cache is ever materialized.  Conceptually this is the
+    paper's conductance-grid programming applied to the cache (the
+    stochastic-rounding variant runs through kernels/stoch_round on TPU)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (..., Hkv)
+    scale = jnp.maximum(scale, 1e-6)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None] * 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def decode_self_attention(
+    p: dict,
+    x: jax.Array,            # (B, 1, D)
+    k_cache: jax.Array,      # (B, Smax, Hkv, Dh)  bf16 or int8
+    v_cache: jax.Array,
+    pos: jax.Array,          # (B,) current position (0-based write index)
+    cfg: ModelConfig,
+    kind: str = "global",
+    use_rope: bool = True,
+    k_scale: Optional[jax.Array] = None,  # (B, Smax, Hkv) for int8 caches
+    v_scale: Optional[jax.Array] = None,
+):
+    """One-token attention against the cache.
+
+    Returns (out, k_cache, v_cache[, k_scale, v_scale]).  Cache reads use
+    mixed-precision einsums (operands stay in cache dtype, f32 MXU
+    accumulation) — no full-cache f32 casts."""
+    b = x.shape[0]
+    int8_cache = k_cache.dtype == jnp.int8
+    q, k, v = qkv(p, x, cfg, None)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    if int8_cache:
+        k8, ks = quantize_kv(k)
+        v8, vs = quantize_kv(v)
+        k_cache = _write_at(k_cache, k8, pos)
+        v_cache = _write_at(v_cache, v8, pos)
+        k_scale = jax.vmap(
+            lambda bscale, n, p_: jax.lax.dynamic_update_slice(
+                bscale, n, (p_, 0)
+            )
+        )(k_scale, ks[:, 0:1], pos)
+        v_scale = jax.vmap(
+            lambda bscale, n, p_: jax.lax.dynamic_update_slice(
+                bscale, n, (p_, 0)
+            )
+        )(v_scale, vs[:, 0:1], pos)
+    else:
+        k_cache = _write_at(k_cache, k, pos)
+        v_cache = _write_at(v_cache, v, pos)
+    t = k_cache.shape[1]
+    hkv = cfg.n_kv_heads
+    cdt = (
+        jnp.bfloat16 if int8_cache else jnp.dtype(cfg.attn_probs_dtype)
+    )
+    qg = _group(q, hkv).astype(cdt) * jnp.asarray(cfg.head_dim**-0.5, cdt)
+    sc = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k_cache.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    if int8_cache:
+        sc = sc * (k_scale.transpose(0, 2, 1) / 127.0)[:, :, None, None, :]
+    if cfg.attn_softcap > 0.0:
+        sc = softcap(sc, cfg.attn_softcap)
+    kpos = jnp.arange(t)[None]
+    ok = kpos <= pos[:, None]
+    if kind == "local":
+        ok &= kpos > (pos[:, None] - cfg.local_window)
+    sc = sc + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    w = jax.nn.softmax(sc, axis=-1)
+    if int8_cache:
+        w = w * (v_scale.transpose(0, 2, 1) / 127.0)[:, :, None, None, :]
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", w.astype(cdt), v_cache.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, 1, -1).astype(x.dtype)
+    o = A.analog_matmul(_proj_cfg(cfg), None, out, p["wo"])
+    if int8_cache:
+        return o, k_cache, v_cache, k_scale, v_scale
+    return o, k_cache, v_cache

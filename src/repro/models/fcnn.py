@@ -1,0 +1,114 @@
+"""The paper's FCNN [784, 500, 300, 10] with RACA neurons (§IV-C).
+
+Hidden layers: binary stochastic Sigmoid neurons (comparators on noisy
+crossbar columns); output layer: WTA binary stochastic SoftMax neurons with
+majority voting over repeated decision trials.  Trained with the STE
+surrogate (noise-aware QAT); inference runs the full stochastic circuit.
+
+Also provides the digital baseline (same weights, exact sigmoid + softmax)
+used for the accuracy-gap validation in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analog as A
+from repro.core import wta as W
+from .config import ModelConfig
+
+
+def init_fcnn(key, cfg: ModelConfig) -> dict:
+    sizes = cfg.fcnn_layers
+    params = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k1, (a, b), jnp.float32) * (
+            2.0 / a
+        ) ** 0.5
+        params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return params
+
+
+def fcnn_logits(
+    params: dict,
+    x: jax.Array,  # (B, 784) in [0, 1]
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Forward through hidden stochastic-binary layers, returning the final
+    layer's pre-activations z (the WTA neurons' drive)."""
+    n = len(cfg.fcnn_layers) - 1
+    acfg = cfg.analog
+    h = x
+    for i in range(n - 1):
+        ki = None if key is None else jax.random.fold_in(key, i)
+        h = A.analog_dense(acfg, ki, h, params[f"w{i}"], params[f"b{i}"])
+        if acfg.mode == "digital":
+            h = jax.nn.sigmoid(h)  # digital baseline: exact sigmoid
+    z = h @ params[f"w{n-1}"] + params[f"b{n-1}"]
+    return z
+
+
+def fcnn_loss(
+    params: dict,
+    batch: dict,  # {"image": (B,784), "label": (B,)}
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    """Softmax cross-entropy on the WTA drive (the paper trains the SBNN in
+    software with the standard surrogate; WTA replaces softmax at deploy)."""
+    z = fcnn_logits(params, batch["image"], cfg, key)
+    logp = jax.nn.log_softmax(z, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["label"][:, None], axis=1).mean()
+    acc = (jnp.argmax(z, -1) == batch["label"]).mean()
+    return nll, {"loss": nll, "acc": acc}
+
+
+def fcnn_predict_digital(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Digital software baseline: exact (unquantized) sigmoid hidden layers
+    + argmax — the paper's 'software-calculated' reference."""
+    import dataclasses
+
+    dcfg = dataclasses.replace(cfg, analog=cfg.analog.with_mode("digital"))
+    z = fcnn_logits(params, x, dcfg, None)
+    return jnp.argmax(z, axis=-1)
+
+
+def fcnn_predict_raca(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    key: jax.Array,
+    n_votes: int,
+    vth0: Optional[float] = None,
+) -> jax.Array:
+    """Full RACA stochastic inference: every hidden layer re-samples its
+    comparators per vote; the WTA output neuron accumulates winner counts
+    over ``n_votes`` decision trials; argmax of the counts is the prediction
+    (§III-C, Fig. 6)."""
+    import dataclasses
+
+    # deployment is always the hard stochastic circuit, regardless of the
+    # training-time forward mode (expectation vs sampled)
+    acfg = dataclasses.replace(cfg.analog, hard=True)
+    cfg = dataclasses.replace(cfg, analog=acfg)
+    theta = acfg.vth0 if vth0 is None else vth0
+    sigma = W.wta_sigma_z(acfg.beta)
+
+    def one_vote(carry, kv):
+        counts = carry
+        z = fcnn_logits(params, x, cfg, kv)
+        res = W.wta_trials(
+            jax.random.fold_in(kv, 99), z, n_trials=1, vth0=theta,
+            sigma_z=sigma, beta=acfg.beta,
+        )
+        return counts + res.counts, None
+
+    keys = jax.random.split(key, n_votes)
+    counts0 = jnp.zeros(x.shape[:-1] + (cfg.fcnn_layers[-1],), jnp.float32)
+    counts, _ = jax.lax.scan(one_vote, counts0, keys)
+    return jnp.argmax(counts, axis=-1)

@@ -1,0 +1,184 @@
+"""Shared neural-net layers: norms, embeddings, RoPE, MLP variants.
+
+Pure functional style: ``init_*`` builds param dicts, ``apply``-style
+functions consume them.  Every matmul routes through core.analog so any
+layer can execute in RACA analog mode (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.core import analog as A
+from .config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * (1.0 + p["scale"])).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings + logits.
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    emb = jax.random.normal(key, (vocab, d), jnp.float32) * (d**-0.5)
+    return {"embedding": emb.astype(dtype)}
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return parallel.shard(x, ("batch", "seq", "embed"))
+
+
+def logits_out(
+    p_emb: dict,
+    p_head: Optional[dict],
+    x: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Final logits; vocab axis is model-sharded (distributed LSE CE)."""
+    w = p_emb["embedding"].T if p_head is None else p_head["w"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_softcap > 0.0:
+        c = jnp.asarray(cfg.logit_softcap, logits.dtype)
+        logits = c * jnp.tanh(logits / c)
+    return parallel.shard(logits, ("batch", "seq", "vocab"))
+
+
+def init_lm_head(key, d: int, vocab: int, dtype) -> dict:
+    w = jax.random.normal(key, (d, vocab), jnp.float32) * (d**-0.5)
+    return {"w": w.astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants (all routed through core.analog).
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": (jax.random.normal(k1, (d, f), jnp.float32) * d**-0.5).astype(dt),
+        "w_down": (jax.random.normal(k2, (f, d), jnp.float32) * f**-0.5).astype(dt),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = (
+            jax.random.normal(k3, (d, f), jnp.float32) * d**-0.5
+        ).astype(dt)
+    return p
+
+
+def mlp_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """MLP with optional RACA analog execution.
+
+    ``analog_stochastic`` realizes the paper's binary stochastic Sigmoid
+    neuron as the hidden activation: the up-projection crossbar's comparator
+    bank emits b_up ~ Bern(sigmoid(z_up)) (Eq. 8/13).  Gated variants drive a
+    second comparator bank from the gate crossbar; the gating is then a
+    binary AND (b_up·b_gate) — binary×binary, free in hardware, keeping the
+    hidden layer fully DAC/ADC-free exactly as in the paper's hidden layers.
+    The down-projection feeds the (digital) residual stream, so it runs as
+    an analog crossbar with linear readout — the one conversion point the
+    technique cannot remove in residual architectures (DESIGN.md §5).
+
+    ``analog_linear`` keeps standard activations but adds crossbar
+    quantization + thermal noise to every matmul (noise-aware training for
+    non-sigmoidal archs, e.g. nemotron's squared-ReLU).
+    """
+    acfg = cfg.analog
+    k1 = k2 = None
+    if key is not None and acfg.mode != "digital":
+        k1, k2 = jax.random.split(key)
+    up = A.analog_matmul(acfg, k1, x, p["w_up"])
+    up = parallel.shard(up, ("batch", "seq", "ffn"))
+
+    if cfg.mlp == "swiglu":
+        act = jax.nn.silu
+    elif cfg.mlp == "relu2":
+        act = lambda v: jnp.square(jax.nn.relu(v))
+    else:  # geglu / gelu
+        act = lambda v: jax.nn.gelu(v, approximate=True)
+
+    if acfg.mode == "analog_stochastic":
+        h = up  # already binary: the comparator IS the activation
+        if "w_gate" in p:
+            b_gate = A.analog_matmul(acfg, k2, x, p["w_gate"])
+            h = h * parallel.shard(b_gate, ("batch", "seq", "ffn"))
+    else:
+        if "w_gate" in p:
+            gate = A.analog_matmul(acfg, k2, x, p["w_gate"])
+            gate = parallel.shard(gate, ("batch", "seq", "ffn"))
+            h = act(gate) * up
+        else:
+            h = act(up)
+
+    down_cfg = (
+        acfg.with_mode("analog_linear")
+        if acfg.mode == "analog_stochastic"
+        else acfg
+    )
+    k3 = None if k2 is None else jax.random.fold_in(k2, 7)
+    out = A.analog_matmul(down_cfg, k3, h, p["w_down"])
+    return parallel.shard(out, ("batch", "seq", "embed"))
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    c = jnp.asarray(cap, x.dtype)
+    return c * jnp.tanh(x / c)

@@ -1,0 +1,258 @@
+"""Mamba-2 (SSD — state-space duality) mixer block (arXiv:2405.21060).
+
+Chunked SSD algorithm: within-chunk interactions are computed in quadratic
+attention-like form (chunk length Q kept MXU-friendly); across chunks a
+recurrent state (B, H, P, N) is carried through a lax.scan.  Attention-free:
+decode keeps an O(1) state (this is why mamba2 runs the long_500k shape).
+
+in/out projections route through core.analog; the SSM gating branch (silu)
+is noted partially applicable to the paper's sigmoid neurons (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.core import analog as A
+from .config import ModelConfig
+from .layers import dtype_of, rmsnorm, init_rmsnorm
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (L, B, K-1, conv_channels)
+    state: jax.Array  # (L, B, H, P, N)
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_nheads
+    p_dim = cfg.ssm_headdim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * n  # x, B, C all go through the causal conv
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": (
+            jax.random.normal(ks[0], (d, proj_out), jnp.float32) * d**-0.5
+        ).astype(dt),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+            * 0.1
+        ).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h).astype(jnp.float32)
+        ),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": init_rmsnorm(di),
+        "out_proj": (
+            jax.random.normal(ks[2], (di, d), jnp.float32) * di**-0.5
+        ).astype(dt),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + n]
+    c = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  u: (B,S,C), w: (K,C).  f32 accumulation so
+    the decode step (which recomputes taps in f32) matches bit-for-bit."""
+    k = w.shape[0]
+    uf = u.astype(jnp.float32)
+    pad = jnp.pad(uf, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(uf)
+    wf = w.astype(jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps, no conv primitive needed
+        out = out + pad[:, i : i + u.shape[1], :] * wf[i]
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B,S,H,P) pre-scaled by dt
+    a_step: jax.Array,  # (B,S,H) per-step log-decay
+    bmat: jax.Array,  # (B,S,N)
+    cmat: jax.Array,  # (B,S,N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Core SSD recurrence over chunks.  Returns (y (B,S,H,P), final state
+    (B,H,P,N)).  Sequences not divisible by ``chunk`` are zero-padded with
+    identity dynamics (log-decay 0, zero input) so outputs and the final
+    state are unaffected."""
+    s_orig = x.shape[1]
+    pad = (-s_orig) % chunk
+    if pad:
+        pz = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, a_step, bmat, cmat = pz(x), pz(a_step), pz(bmat), pz(cmat)
+    a_cum = a_step
+    bsz, s, nh, pd = x.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, nh, pd).transpose(1, 0, 2, 3, 4)
+    ac = a_cum.reshape(bsz, nc, chunk, nh).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, pd, n), jnp.float32)
+
+    def step(h, inp):
+        xi, ai, bi, ci = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(ai, axis=1)  # (B,Q,H) within-chunk
+        # off-diagonal: contribution of the carried state
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", ci, h, jnp.exp(cum))
+        # within-chunk quadratic form; mask BEFORE exp — the upper triangle
+        # has positive exponents that overflow (inf·0 = NaN otherwise)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,K,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        li = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("bqn,bkn->bqk", ci, bi)
+        att = scores[:, :, :, None] * li
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", att, xi)
+        # state update: h' = decay_total·h + Σ_j exp(cum_Q - cum_j) B_j x_j
+        dec_last = jnp.exp(cum[:, -1, :])  # (B,H)
+        dec_rest = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        h_add = jnp.einsum("bqh,bqn,bqhp->bhpn", dec_rest, bi, xi)
+        h_new = h * dec_last[:, :, None, None] + h_add
+        return h_new, y_off + y_diag
+
+    hf, yc = jax.lax.scan(
+        step, h0, (xc, ac, bc, cc), unroll=True if unroll else 1
+    )
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, pd)
+    return y[:, :s_orig], hf
+
+
+def mamba_apply(
+    p: dict,
+    u: jax.Array,  # (B,S,D)
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    bsz, s, d = u.shape
+    acfg = cfg.analog
+    pcfg = (
+        acfg.with_mode("analog_linear")
+        if acfg.mode == "analog_stochastic"
+        else acfg
+    )
+    k1 = k2 = None
+    if key is not None:
+        k1, k2 = jax.random.split(key)
+    zxbcdt = A.analog_matmul(pcfg, k1, u, p["in_proj"])
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    di, n = cfg.d_inner, cfg.ssm_state
+    x = conv_out[..., :di]
+    bmat = conv_out[..., di : di + n].astype(jnp.float32)
+    cmat = conv_out[..., di + n :].astype(jnp.float32)
+
+    nh, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    xh = x.reshape(bsz, s, nh, pd).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+    log_decay = dtf * a  # (B,S,H)
+    xdt = xh * dtf[..., None]
+    y, _ = ssd_chunked(
+        xdt, log_decay, bmat, cmat, cfg.ssm_chunk, unroll=cfg.cost_exact
+    )
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    out = A.analog_matmul(pcfg, k2, y, p["out_proj"])
+    return parallel.shard(out, ("batch", "seq", "embed"))
+
+
+def mamba_prefill(
+    p: dict,
+    u: jax.Array,  # (B,S,D)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Forward pass that also returns decode-cache state:
+    (y (B,S,D), conv input tail (B,K-1,C), final ssm state (B,H,P,N))."""
+    bsz, s, d = u.shape
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    conv_tail = conv_in[:, -(cfg.ssm_conv - 1) :, :]
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    di, n = cfg.d_inner, cfg.ssm_state
+    x = conv_out[..., :di]
+    bmat = conv_out[..., di : di + n].astype(jnp.float32)
+    cmat = conv_out[..., di + n :].astype(jnp.float32)
+    nh, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    xh = x.reshape(bsz, s, nh, pd).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    log_decay = dtf * a
+    xdt = xh * dtf[..., None]
+    y, state = ssd_chunked(
+        xdt, log_decay, bmat, cmat, cfg.ssm_chunk, unroll=cfg.cost_exact
+    )
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    return out, conv_tail, state
+
+
+def mamba_decode_step(
+    p: dict,
+    u: jax.Array,        # (B,1,D)
+    conv_cache: jax.Array,  # (B,K-1,C)
+    state: jax.Array,       # (B,H,P,N) f32
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent update (O(1) in sequence length)."""
+    bsz = u.shape[0]
+    zxbcdt = u[:, 0, :] @ p["in_proj"].astype(u.dtype)  # (B, proj)
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)  # (B, C)
+    window = jnp.concatenate([conv_cache, conv_in[:, None, :]], axis=1)
+    w = p["conv_w"]  # (K, C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )
+    # round through the activation dtype to match the prefill path exactly
+    conv_out = conv_out.astype(u.dtype).astype(jnp.float32)
+    new_conv_cache = window[:, 1:, :]
+    di, n = cfg.d_inner, cfg.ssm_state
+    x = conv_out[:, :di]
+    bmat = conv_out[:, di : di + n]
+    cmat = conv_out[:, di + n :]
+    nh, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    xh = x.reshape(bsz, nh, pd)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtf * a)  # (B,H)
+    xdt = xh * dtf[..., None]
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, bmat
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    return out[:, None, :], new_conv_cache, state

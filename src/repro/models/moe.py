@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Dispatch is one-hot-free (MegaBlocks-style): per token group, tokens are
+assigned slots in an (E, C) buffer via cumulative positions; experts run as
+batched einsums over gathered tokens; outputs scatter-add back weighted by
+the router gate.  Overflow beyond capacity C is dropped (standard GShard
+semantics), underflow slots point at a zero pad row.
+
+The router is a literal use case for the paper's WTA circuit: top-k expert
+selection is a k-winner-take-all race (DESIGN.md §5).  With
+``analog.mode == "analog_stochastic"`` routing uses core.wta.wta_topk —
+vote counts over noisy comparator trials; digital mode uses exact top-k.
+
+Aux load-balancing loss (Switch-style) is returned alongside the output.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.core import analog as A
+from .config import ModelConfig
+from .layers import dtype_of
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    init = lambda k, shape, fan: (
+        jax.random.normal(k, shape, jnp.float32) * fan**-0.5
+    ).astype(dt)
+    p = {
+        "router": init(ks[0], (d, e), d).astype(jnp.float32),
+        "w_up": init(ks[1], (e, d, f), d),
+        "w_down": init(ks[2], (e, f, d), f),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = init(ks[3], (e, d, f), d)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.moe_topk * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.moe_topk)
+
+
+def _dispatch_group(xf, logits, gates, expert_ids, cap: int, cfg):
+    """Slot assignment + gather for ONE token group (T, D).
+
+    Groups are sequences (the batch dim), so the cumsum that assigns slot
+    positions is LOCAL to a data shard — a global-token dispatch would force
+    GSPMD to replicate expert compute across the data axis (16× waste; see
+    EXPERIMENTS.md §Perf notes)."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    flat_e = expert_ids.reshape(-1)            # (T*k,)
+    onehot_e = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot_e, axis=0) - onehot_e     # pre-count
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    kept = pos < cap
+    dest_c = jnp.where(kept, pos, cap)         # overflow -> dump column
+    tok_of_assign = jnp.repeat(jnp.arange(t), k)
+
+    # (E, C+1) buffers; sentinel T points at the zero pad row of x.
+    idx_buf = jnp.full((e, cap + 1), t, jnp.int32)
+    idx_buf = idx_buf.at[flat_e, dest_c].set(tok_of_assign)
+    gate_buf = jnp.zeros((e, cap + 1), jnp.float32)
+    gate_buf = gate_buf.at[flat_e, dest_c].set(gates.reshape(-1))
+    idx = idx_buf[:, :cap]                     # (E, C)
+    gate_slot = gate_buf[:, :cap]
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xg = xpad[idx]                             # (E, C, D)
+    frac = jnp.mean(
+        (onehot_e.reshape(t, k, e).sum(1) > 0).astype(jnp.float32), axis=0
+    )
+    return xg, idx, gate_slot, frac
+
+
+def _combine_group(out_e, idx, gate_slot, t: int):
+    e, cap, d = out_e.shape
+    out_flat = (out_e * gate_slot[..., None].astype(out_e.dtype)).reshape(
+        e * cap, d
+    )
+    y = jnp.zeros((t + 1, d), out_e.dtype)
+    y = y.at[idx.reshape(-1)].add(out_flat)
+    return y[:t]
+
+
+def moe_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar).  GShard-style grouped
+    dispatch: each sequence is a group, capacity C = S·k·cf/E per group."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    cap = _capacity(s, cfg)
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if key is not None and cfg.analog.mode == "analog_stochastic":
+        # k-winner WTA router: the paper's SoftMax neuron generalized.
+        gates, expert_ids = A.wta_router_topk(cfg.analog, key, logits, k)
+    else:
+        gates, expert_ids = jax.lax.top_k(probs, k)  # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jax.vmap(
+        lambda xf, lg, gt, ei: _dispatch_group(xf, lg, gt, ei, cap, cfg)
+    )
+    # The slot-assignment scatters defeat GSPMD's sharding propagation (it
+    # replicates them — 100s of GB at grok scale), so when a mesh is active
+    # the dispatch runs under shard_map over the batch axes: groups are
+    # sequences, so per-shard dispatch is exact, not an approximation.
+    ctx = parallel.current()
+    bax = None
+    if ctx is not None:
+        mesh, rules = ctx
+        bax = rules.get("batch")
+    if bax:
+        from jax.sharding import PartitionSpec as P
+
+        bspec = P(bax)
+        xg, idx, gate_slot, frac = jax.shard_map(
+            dispatch,
+            mesh=mesh,
+            in_specs=(bspec, bspec, bspec, bspec),
+            out_specs=(bspec, bspec, bspec, bspec),
+        )(x, logits, gates, expert_ids)
+    else:
+        xg, idx, gate_slot, frac = dispatch(x, logits, gates, expert_ids)
+    # xg: (B, E, C, D) — B over data, expert F dim over model.
+    xg = parallel.shard(xg, ("batch", "experts", None, "embed"))
+
+    up = jnp.einsum("becd,edf->becf", xg, p["w_up"].astype(xg.dtype))
+    up = parallel.shard(up, ("batch", "experts", None, "ffn"))
+    if "w_gate" in p:
+        gt = jnp.einsum("becd,edf->becf", xg, p["w_gate"].astype(xg.dtype))
+        act = jax.nn.silu if cfg.mlp == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True)
+        )
+        h = act(gt) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(h.dtype))
+
+    combine = jax.vmap(lambda o, i, g: _combine_group(o, i, g, s))
+    if bax:
+        y = jax.shard_map(
+            combine,
+            mesh=mesh,
+            in_specs=(bspec, bspec, bspec),
+            out_specs=bspec,
+        )(out_e, idx, gate_slot)
+    else:
+        y = combine(out_e, idx, gate_slot)
+    y = parallel.shard(y, ("batch", "seq", "embed"))
+
+    # Switch aux loss: E * Σ_e fraction_tokens_e · mean_prob_e
+    aux = cfg.router_aux_coef * e * jnp.sum(
+        frac.mean(axis=0) * probs.mean(axis=(0, 1))
+    )
+    return y, aux

@@ -1,0 +1,180 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    a_t = a^(c·r_t),  a = sigmoid(Λ)          (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+computed with an associative scan (log-depth, sub-quadratic — which is why
+recurrentgemma runs the long_500k shape).  The block wraps the RG-LRU with
+a temporal conv and a GeLU gate branch as in Griffin.
+
+Both sigmoid gates are exactly the paper's stochastic-binary neuron shape:
+in ``analog_stochastic`` mode they become comparator-sampled Bernoulli gates
+(unbiased: E[Bern(σ(z))] = σ(z)) — see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.core import analog as A
+from repro.core import neurons
+from .config import ModelConfig
+from .layers import dtype_of
+
+_C_EXP = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    init = lambda k, shape, fan: (
+        jax.random.normal(k, shape, jnp.float32) * fan**-0.5
+    ).astype(dt)
+    return {
+        "w_main": init(ks[0], (d, w), d),      # branch 1 -> conv -> RG-LRU
+        "w_gate_br": init(ks[1], (d, w), d),   # branch 2 -> GeLU
+        "w_out": init(ks[2], (w, d), w),
+        "conv_w": (
+            jax.random.normal(ks[3], (4, w), jnp.float32) * 0.1
+        ).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": init(ks[4], (w, w), w),          # recurrence gate
+        "wx": init(ks[5], (w, w), w),          # input gate
+        "ba": jnp.full((w,), 2.0, jnp.float32),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.linspace(2.0, 5.0, w).astype(jnp.float32),  # a=σ(Λ)
+    }
+
+
+def _conv(u, w, b):
+    """f32-accumulated causal conv (matches decode-step recomputation)."""
+    k = w.shape[0]
+    uf = u.astype(jnp.float32)
+    pad = jnp.pad(uf, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(uf)
+    wf = w.astype(jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i : i + u.shape[1], :] * wf[i]
+    return (out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def rglru_scan(
+    x: jax.Array,       # (B,S,W) gated input, f32
+    log_a: jax.Array,   # (B,S,W) per-step log decay, f32 (<0)
+    h0: Optional[jax.Array] = None,
+) -> jax.Array:
+    """h_t = a_t·h_{t-1} + b_t via associative scan; returns all h (B,S,W)."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * x
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(
+    p: dict,
+    x: jax.Array,  # (B,S,D)
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    acfg = cfg.analog
+    pcfg = (
+        acfg.with_mode("analog_linear")
+        if acfg.mode == "analog_stochastic"
+        else acfg
+    )
+    ks = (None,) * 4 if key is None else tuple(jax.random.split(key, 4))
+    main = A.analog_matmul(pcfg, ks[0], x, p["w_main"])
+    gate_br = A.analog_matmul(pcfg, ks[1], x, p["w_gate_br"])
+    main = _conv(main, p["conv_w"], p["conv_b"])
+    main = parallel.shard(main, ("batch", "seq", "ffn"))
+
+    mf = main.astype(jnp.float32)
+    za = mf @ p["wa"].astype(jnp.float32) + p["ba"]
+    zx = mf @ p["wx"].astype(jnp.float32) + p["bx"]
+    if acfg.mode == "analog_stochastic" and ks[2] is not None:
+        # RACA: both gates are comparator-sampled binary neurons (Eq. 8/13).
+        r = neurons.sigmoid_neuron_calibrated(ks[2], za, beta=acfg.beta)
+        i = neurons.sigmoid_neuron_calibrated(ks[3], zx, beta=acfg.beta)
+    else:
+        r = jax.nn.sigmoid(za)
+        i = jax.nn.sigmoid(zx)
+    log_a_unit = -jax.nn.softplus(-p["lam"])  # log σ(Λ) < 0
+    log_a = _C_EXP * r * log_a_unit[None, None, :]
+    h = rglru_scan(i * mf, log_a)
+    y = h.astype(x.dtype) * jax.nn.gelu(gate_br, approximate=True)
+    out = A.analog_matmul(pcfg, None, y, p["w_out"])
+    return parallel.shard(out, ("batch", "seq", "embed"))
+
+
+def rglru_prefill(
+    p: dict,
+    x: jax.Array,  # (B,S,D)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Forward that also returns decode state:
+    (out (B,S,D), conv input tail (B,3,W), final hidden h (B,W))."""
+    main = x @ p["w_main"].astype(x.dtype)
+    gate_br = x @ p["w_gate_br"].astype(x.dtype)
+    conv_tail = main[:, -3:, :]
+    main_c = _conv(main, p["conv_w"], p["conv_b"])
+    mf = main_c.astype(jnp.float32)
+    za = mf @ p["wa"].astype(jnp.float32) + p["ba"]
+    zx = mf @ p["wx"].astype(jnp.float32) + p["bx"]
+    r = jax.nn.sigmoid(za)
+    i = jax.nn.sigmoid(zx)
+    log_a_unit = -jax.nn.softplus(-p["lam"])
+    log_a = _C_EXP * r * log_a_unit[None, None, :]
+    h = rglru_scan(i * mf, log_a)
+    y = h.astype(x.dtype) * jax.nn.gelu(gate_br, approximate=True)
+    out = y @ p["w_out"].astype(y.dtype)
+    return out, conv_tail, h[:, -1, :]
+
+
+def rglru_decode_step(
+    p: dict,
+    x: jax.Array,       # (B,1,D)
+    conv_cache: jax.Array,  # (B,3,W)
+    h: jax.Array,           # (B,W) f32
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    main = x[:, 0, :] @ p["w_main"].astype(x.dtype)   # (B,W)
+    gate_br = x[:, 0, :] @ p["w_gate_br"].astype(x.dtype)
+    window = jnp.concatenate([conv_cache, main[:, None, :]], axis=1)
+    w = p["conv_w"]
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )
+    # round through the activation dtype to match the prefill path exactly
+    conv_out = conv_out.astype(x.dtype).astype(jnp.float32)
+    new_conv = window[:, 1:, :]
+    za = conv_out @ p["wa"].astype(jnp.float32) + p["ba"]
+    zx = conv_out @ p["wx"].astype(jnp.float32) + p["bx"]
+    r = jax.nn.sigmoid(za)
+    i = jax.nn.sigmoid(zx)
+    log_a = _C_EXP * r * (-jax.nn.softplus(-p["lam"]))[None, :]
+    a = jnp.exp(log_a)
+    h = a * h + jnp.sqrt(jnp.maximum(1 - jnp.square(a), 1e-12)) * (
+        i * conv_out
+    )
+    y = h.astype(x.dtype) * jax.nn.gelu(gate_br, approximate=True)
+    out = (y @ p["w_out"].astype(y.dtype))[:, None, :]
+    return out, new_conv, h

@@ -1,0 +1,23 @@
+"""Optimizers and distributed-optimization tricks.
+
+adamw      — AdamW with optional low-precision moments rounded stochastically
+             (the paper's conductance-programming primitive reused as an
+             optimizer trick: unbiased bf16 states, §kernels/stoch_round).
+compress   — int8 gradient compression with error feedback for the
+             cross-replica reduction path.
+schedule   — warmup-cosine LR.
+"""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .compress import CompressState, compress_grads, init_compress
+from .schedule import warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "CompressState",
+    "compress_grads",
+    "init_compress",
+    "warmup_cosine",
+]

@@ -1,0 +1,121 @@
+"""AdamW with optional low-precision moment states.
+
+At 340B-parameter scale, f32 Adam moments (8 bytes/param) dominate HBM; we
+store m and v in bf16 with *stochastic rounding* so the quantization is
+unbiased and training statistics are preserved — the rounding primitive is
+the same conductance-programming operator as the paper's weight writes
+(kernels/stoch_round; jnp path used off-TPU).
+
+All state tensors inherit the parameter's sharding (FSDP-compatible).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "bfloat16"   # moment storage dtype
+    stochastic_rounding: bool = True
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def _sround(x: jax.Array, dt, key: Optional[jax.Array]) -> jax.Array:
+    """Unbiased stochastic rounding f32 -> dt (bf16): perturb the mantissa
+    below the target precision with uniform noise, then truncate."""
+    if dt == jnp.float32 or key is None:
+        return x.astype(dt)
+    # bf16 keeps the top 16 bits of the f32 pattern; add uniform dither in
+    # the truncated 16 bits => unbiased round-to-nearest-or-down.
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.randint(
+        key, x.shape, 0, 1 << 16, dtype=jnp.uint32
+    )
+    rounded = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32).astype(dt)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    lr_scale: jax.Array | float = 1.0,
+    rng: Optional[jax.Array] = None,
+) -> tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    dt = jnp.dtype(cfg.state_dtype)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    use_sr = cfg.stochastic_rounding and rng is not None
+
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g, m, v) in enumerate(zip(flat_p, flat_g, flat_m, flat_v)):
+        gf = g.astype(jnp.float32) * clip
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            upd = upd + cfg.weight_decay * pf
+        pf = pf - lr * upd
+        if use_sr:
+            ki = jax.random.fold_in(rng, i)
+            k1, k2 = jax.random.split(ki)
+            new_m.append(_sround(mf, dt, k1))
+            new_v.append(_sround(vf, dt, k2))
+        else:
+            new_m.append(mf.astype(dt))
+            new_v.append(vf.astype(dt))
+        new_p.append(pf.astype(p.dtype))
+
+    params2 = jax.tree.unflatten(treedef, new_p)
+    m2 = jax.tree.unflatten(treedef, new_m)
+    v2 = jax.tree.unflatten(treedef, new_v)
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+    return params2, AdamWState(step=step, m=m2, v=v2), metrics

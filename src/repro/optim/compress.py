@@ -1,0 +1,63 @@
+"""int8 gradient compression with error feedback.
+
+Before the cross-replica reduction of microbatch gradients, each leaf is
+quantized to int8 (per-leaf absmax scale) with *stochastic rounding*
+(unbiased — the paper's programming primitive again) plus an error-feedback
+accumulator that carries the quantization residual into the next step, so
+the compressed SGD trajectory provably tracks the uncompressed one.
+
+In the grad-accumulation loop this models a compressed all-reduce: each
+microbatch contribution is compressed before summation (8× reduction of
+reduction traffic); flag-gated via TrainConfig.compress_grads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: Any  # error-feedback residual per leaf (param dtype)
+
+
+def init_compress(params: Any) -> CompressState:
+    return CompressState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _quantize_leaf(g: jax.Array, key: jax.Array) -> jax.Array:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-30
+    t = gf / scale
+    floor = jnp.floor(t)
+    frac = t - floor
+    up = jax.random.uniform(key, t.shape) < frac
+    q = jnp.clip(floor + up.astype(jnp.float32), -127, 127)
+    return q * scale  # dequantized int8 grid value
+
+
+def compress_grads(
+    grads: Any,
+    state: CompressState,
+    key: Optional[jax.Array],
+) -> tuple[Any, CompressState]:
+    """Returns (compressed grads, new error state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    out_g, out_e = [], []
+    for i, (g, e) in enumerate(zip(flat_g, flat_e)):
+        corrected = g.astype(jnp.float32) + e
+        if key is None:
+            q = corrected
+        else:
+            q = _quantize_leaf(corrected, jax.random.fold_in(key, i))
+        out_g.append(q.astype(g.dtype))
+        out_e.append(corrected - q)
+    return (
+        jax.tree.unflatten(treedef, out_g),
+        CompressState(error=jax.tree.unflatten(treedef, out_e)),
+    )

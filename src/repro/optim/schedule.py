@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step, *, warmup: int = 100, total: int = 10_000, floor: float = 0.1
+):
+    """Linear warmup then cosine decay to ``floor`` of peak; returns a scale
+    in [0, 1] multiplying AdamWConfig.lr."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,86 @@
+"""Batched serving engine: request queue → padded batch prefill → decode.
+
+Serving-side integration of the paper: with ``cfg.wta_head`` the sampler is
+the WTA stochastic SoftMax circuit — per emitted token, T comparator-bank
+decision trials vote and the majority wins (§III-B/C).  Repeated-vote
+majority is exactly the paper's accuracy-recovery mechanism (Fig. 6), here
+applied to LM decoding; greedy argmax is the digital baseline.
+
+The engine is deliberately simple (static batch, right-padded prompts,
+synchronous decode loop) but complete: queueing, batching, EOS handling,
+per-request detokenized outputs.  Continuous batching would slot into
+``step()`` without touching the model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.specs import make_serve_step
+from repro.models import ModelConfig, get_model_fns
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_new_tokens: int = 32
+    max_len: int = 512
+    eos_token: int = -1     # -1: never stop early
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, params, model_cfg: ModelConfig, cfg: ServeConfig):
+        self.params = params
+        self.mcfg = model_cfg
+        self.cfg = cfg
+        self.fns = get_model_fns(model_cfg)
+        self._serve_step = jax.jit(
+            make_serve_step(model_cfg), donate_argnums=(1,)
+        )
+        self._queue: list[Sequence[int]] = []
+        self._key = jax.random.PRNGKey(cfg.seed)
+
+    def submit(self, prompt_tokens: Sequence[int]) -> None:
+        self._queue.append(list(prompt_tokens))
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def step(self) -> list[list[int]]:
+        """Serve one batch from the queue; returns generated token lists."""
+        if not self._queue:
+            return []
+        batch_prompts = self._queue[: self.cfg.max_batch]
+        self._queue = self._queue[self.cfg.max_batch :]
+        b = len(batch_prompts)
+        # right-align prompts into a fixed prompt window (left-pad with 0)
+        plen = max(len(p) for p in batch_prompts)
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(batch_prompts):
+            toks[i, plen - len(p) :] = p
+        batch = {"tokens": jnp.asarray(toks)}
+        cache, logits = self.fns.prefill(
+            self.params, batch, self.mcfg, self.cfg.max_len
+        )
+        out = [[] for _ in range(b)]
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        done = np.zeros(b, bool)
+        for _ in range(self.cfg.max_new_tokens):
+            for i in range(b):
+                if not done[i]:
+                    t = int(token[i])
+                    out[i].append(t)
+                    if t == self.cfg.eos_token:
+                        done[i] = True
+            if done.all():
+                break
+            key = self._next_key() if self.mcfg.wta_head else None
+            cache, token = self._serve_step(self.params, cache, token, key)
+        return out

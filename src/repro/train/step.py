@@ -1,0 +1,142 @@
+"""The jitted training step: loss → (micro-batched, optionally compressed)
+gradients → AdamW update.
+
+This single function is what the multi-pod dry-run lowers for every
+(arch × train shape): data parallelism comes from batch sharding, tensor
+parallelism from the param/activation rules (launch/sharding.py), and the
+optimizer update runs on the FSDP-sharded states in place (donated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, get_model_fns
+from repro.optim import (
+    AdamWConfig,
+    CompressState,
+    adamw_init,
+    adamw_update,
+    compress_grads,
+    init_compress,
+    warmup_cosine,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    microbatches: int = 1
+    compress_grads: bool = False
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    seed: int = 0
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any                       # AdamWState
+    compress: Optional[CompressState]
+    step: jax.Array
+    rng: jax.Array
+
+
+def init_train_state(
+    key: jax.Array, model_cfg: ModelConfig, train_cfg: TrainConfig
+) -> TrainState:
+    fns = get_model_fns(model_cfg)
+    params = fns.init(key, model_cfg)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, train_cfg.opt),
+        compress=init_compress(params) if train_cfg.compress_grads else None,
+        step=jnp.zeros((), jnp.int32),
+        rng=jax.random.fold_in(key, 1),
+    )
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    fns = get_model_fns(model_cfg)
+    needs_key = model_cfg.analog.mode != "digital"
+
+    def loss_fn(params, batch, key):
+        return fns.loss(params, batch, model_cfg, key if needs_key else None)
+
+    def train_step(state: TrainState, batch: dict):
+        step_key = jax.random.fold_in(state.rng, state.step)
+        nmb = train_cfg.microbatches
+
+        if nmb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(state.params, batch, step_key)
+            comp = state.compress
+            if comp is not None:
+                grads, comp = compress_grads(
+                    grads, comp, jax.random.fold_in(step_key, 13)
+                )
+        else:
+            # micro-batched accumulation; per-microbatch compression models a
+            # compressed cross-replica reduction with error feedback.
+            def slice_mb(x):
+                b = x.shape[0]
+                return x.reshape((nmb, b // nmb) + x.shape[1:])
+
+            mb = jax.tree.map(slice_mb, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+
+            def body(carry, xs):
+                acc, comp, lsum = carry
+                mbatch, i = xs
+                kmb = jax.random.fold_in(step_key, i)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mbatch, kmb
+                )
+                if comp is not None:
+                    g, comp = compress_grads(
+                        g, comp, jax.random.fold_in(kmb, 13)
+                    )
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / nmb, acc, g
+                )
+                return (acc, comp, lsum + l / nmb), None
+
+            (grads, comp, loss), _ = jax.lax.scan(
+                body,
+                (zero_g, state.compress, jnp.zeros((), jnp.float32)),
+                (mb, jnp.arange(nmb)),
+            )
+            metrics = {"loss": loss}
+
+        lr_scale = warmup_cosine(
+            state.step,
+            warmup=train_cfg.warmup_steps,
+            total=train_cfg.total_steps,
+        )
+        params, opt, opt_metrics = adamw_update(
+            train_cfg.opt,
+            state.params,
+            grads,
+            state.opt,
+            lr_scale=lr_scale,
+            rng=jax.random.fold_in(step_key, 7)
+            if train_cfg.opt.stochastic_rounding
+            else None,
+        )
+        metrics = {**metrics, **opt_metrics}
+        new_state = TrainState(
+            params=params,
+            opt=opt,
+            compress=comp,
+            step=state.step + 1,
+            rng=state.rng,
+        )
+        return new_state, metrics
+
+    return train_step

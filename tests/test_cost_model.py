@@ -1,0 +1,37 @@
+"""Table I reproduction (paper §IV-C)."""
+
+import numpy as np
+
+from repro.core import cost_model as CM
+
+
+def test_table1_reproduces_paper():
+    t = CM.table1()
+    p = CM.PAPER_TABLE1
+    assert abs(t["adc1b"].energy_pj - p["adc1b"].energy_pj) / p[
+        "adc1b"
+    ].energy_pj < 0.005
+    assert abs(t["raca"].energy_pj - p["raca"].energy_pj) / p[
+        "raca"
+    ].energy_pj < 0.005
+    assert abs(t["adc1b"].area_mm2 - p["adc1b"].area_mm2) < 0.05
+    assert abs(t["raca"].area_mm2 - p["raca"].area_mm2) < 0.05
+    # the paper's headline deltas, within half a point
+    assert abs(t["energy_change_pct"] - (-58.29)) < 0.5
+    assert abs(t["area_change_pct"] - (-38.43)) < 0.5
+    assert abs(t["efficiency_change_pct"] - 142.37) < 0.5
+
+
+def test_raca_wins_scale_with_depth():
+    """The model generalizes: deeper FCNNs keep the energy advantage."""
+    layers = (784, 512, 512, 512, 10)
+    a = CM.cost_adc1b(layers)
+    r = CM.cost_raca(layers)
+    assert r.energy_pj < a.energy_pj
+    assert r.area_mm2 < a.area_mm2
+    assert r.tops_per_w > a.tops_per_w
+
+
+def test_comparator_cheaper_than_adc():
+    assert CM.E_CMP < CM.E_ADC
+    assert CM.A_CMP < CM.A_ADC

@@ -1,0 +1,225 @@
+"""Per-kernel validation: Pallas (TPU-interpret) vs pure-jnp oracles.
+
+The kernels share a counter-based PRNG with the oracles, so stochastic
+paths are compared bit-exactly (binary agreement / identical levels), and
+deterministic paths with f32-matmul tolerances.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analog import AnalogConfig
+from repro.core.physics import DeviceParams, calibrate_v_read
+from repro.kernels import ops, prng
+
+CFG = AnalogConfig(
+    mode="analog_stochastic", device=calibrate_v_read(DeviceParams(), 512)
+)
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# crossbar_mac
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    (8, 64, 16),       # tiny, all dims sub-block
+    (100, 300, 200),   # unaligned
+    (128, 512, 128),   # exactly one block
+    (64, 1200, 130),   # multi-K-block accumulation
+    (257, 513, 129),   # off-by-one on every dim
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_crossbar_linear_matches_oracle(m, k, n, dtype):
+    x = jax.random.normal(KEY, (m, k), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32) * 0.05
+    y_k = ops.crossbar_mac(x, w, KEY, CFG, binarize=False)
+    y_r = ops.crossbar_mac_reference(x, w, KEY, CFG, binarize=False)
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_r), atol=2e-5, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_crossbar_binary_agreement(m, k, n):
+    x = jax.random.normal(KEY, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    y_k = ops.crossbar_mac(x, w, KEY, CFG, binarize=True)
+    y_r = ops.crossbar_mac_reference(x, w, KEY, CFG, binarize=True)
+    assert set(np.unique(np.asarray(y_k))) <= {0.0, 1.0}
+    # identical PRNG; only f32 matmul reassociation at threshold can differ
+    agreement = float((y_k == y_r).mean())
+    assert agreement > 0.9995, agreement
+
+
+def test_crossbar_physical_noise_path():
+    cfgp = AnalogConfig(
+        mode="analog_stochastic", device=CFG.device, calibrated=False
+    )
+    x = jax.random.normal(KEY, (64, 512))
+    w = jax.random.normal(jax.random.PRNGKey(2), (512, 128)) * 0.05
+    y_k = ops.crossbar_mac(x, w, KEY, cfgp, binarize=True)
+    y_r = ops.crossbar_mac_reference(x, w, KEY, cfgp, binarize=True)
+    assert float((y_k == y_r).mean()) > 0.9995
+
+
+def test_crossbar_batched_leading_dims():
+    x = jax.random.normal(KEY, (4, 6, 96))
+    w = jax.random.normal(jax.random.PRNGKey(3), (96, 32)) * 0.1
+    y = ops.crossbar_mac(x, w, KEY, CFG, binarize=False)
+    assert y.shape == (4, 6, 32)
+
+
+def test_crossbar_gradients_match_ste_surrogate():
+    """Backward of the kernel == analytic STE formula."""
+    x = jax.random.normal(KEY, (32, 128))
+    w = jax.random.normal(jax.random.PRNGKey(4), (128, 64)) * 0.1
+
+    g_w = jax.grad(
+        lambda w: jnp.sum(ops.crossbar_mac(x, w, KEY, CFG, True) ** 2)
+    )(w)
+    assert bool(jnp.all(jnp.isfinite(g_w)))
+    # compare direction with the dense surrogate E[y]=sigmoid(z)
+    from repro.core import analog as A
+
+    wq = A.quantize_normalized(w, CFG)
+    y_hard = ops.crossbar_mac(x, w, KEY, CFG, True)
+
+    def surrogate(w2):
+        # identity-STE through the quantizer (jnp.round has zero grad)
+        wq2 = w2 + jax.lax.stop_gradient(wq - w2)
+        p = jax.nn.sigmoid(x @ wq2)
+        return jnp.sum(
+            y_hard**2 + 2 * y_hard * (p - jax.lax.stop_gradient(p))
+        )
+
+    # d/dw of sum(y^2) under STE: 2·y·dp/dw
+    g_ref = jax.grad(surrogate)(w)
+    np.testing.assert_allclose(
+        np.asarray(g_w), np.asarray(g_ref), atol=3e-5, rtol=1e-3
+    )
+
+
+def test_noise_statistics_linear_mode():
+    """Linear (high-SNR) readout: residual noise std == s·linear_sigma."""
+    x = jnp.zeros((256, 512))
+    w = jax.random.normal(jax.random.PRNGKey(9), (512, 256)) * 0.05
+    cfg_nq = AnalogConfig(
+        mode="analog_stochastic", device=CFG.device, quantize=False
+    )
+    y = ops.crossbar_mac(x, w, KEY, cfg_nq, binarize=False)
+    # x = 0 => output is pure noise: std = s·linear_sigma
+    s_expect = float(jnp.max(jnp.abs(w))) * cfg_nq.linear_sigma
+    assert abs(float(jnp.std(y)) - s_expect) / s_expect < 0.05
+    assert abs(float(jnp.mean(y))) < s_expect * 0.05
+
+
+def test_fire_rate_half_at_zero_drive():
+    """Comparator at z=0 fires with probability 1/2 (calibration anchor)."""
+    x = jnp.zeros((128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(10), (256, 128)) * 0.05
+    y = ops.crossbar_mac(x, w, KEY, CFG, binarize=True)
+    assert abs(float(y.mean()) - 0.5) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# wta kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,c", [(1, 10), (7, 10), (130, 5), (16, 200)])
+def test_wta_kernel_bit_exact(b, c):
+    z = jax.random.normal(jax.random.PRNGKey(5), (b, c))
+    kw = dict(n_trials=64, vth0=2.897, sigma_z=1.702)
+    ck = ops.wta_counts(z, KEY, **kw)
+    cr = ops.wta_counts_reference(z, KEY, **kw)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+
+def test_wta_kernel_matches_core_distribution():
+    """Kernel votes converge to the same softmax the core simulator gives."""
+    from repro.core import wta as W
+
+    z = jnp.asarray([[1.0, 0.0, -1.0, 0.5, 2.0, -0.5, 0.2, -1.5]])
+    theta = W.calibrated_threshold()
+    counts = ops.wta_counts(z, KEY, n_trials=20_000, vth0=theta, sigma_z=1.702)
+    probs = counts / counts.sum()
+    sm = jax.nn.softmax(z)
+    assert 0.5 * float(jnp.abs(probs - sm).sum()) < 0.08
+
+
+# ---------------------------------------------------------------------------
+# stoch_round kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(33, 70), (256, 512), (5, 1030)])
+def test_stoch_round_levels_match_oracle(shape):
+    x = jax.random.normal(jax.random.PRNGKey(6), shape)
+    step = 2.0 / 31
+    qk = ops.stoch_round(x, KEY, step=step, lo=-1, hi=1)
+    qr = ops.stoch_round_reference(x, KEY, step=step, lo=-1, hi=1)
+    np.testing.assert_allclose(
+        np.asarray(qk), np.asarray(qr), atol=step * 1e-3
+    )
+    lv = (np.asarray(qk) + 1) / step
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-3)
+
+
+@hypothesis.given(
+    step=st.sampled_from([2 / 31, 2 / 15, 0.1]),
+    seed=st.integers(0, 10_000),
+)
+@hypothesis.settings(deadline=None, max_examples=15)
+def test_stoch_round_unbiased(step, seed):
+    """E[q(x)] == clip(x) — the conductance-programming invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 16)) * 0.8
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), 300)
+    qs = jnp.stack(
+        [
+            ops.stoch_round_reference(x, k2, step=step, lo=-1, hi=1)
+            for k2 in keys
+        ]
+    ).mean(0)
+    err = np.abs(np.asarray(qs) - np.clip(np.asarray(x), -1, 1)).max()
+    assert err < step * 0.35, err
+
+
+def test_stoch_round_ste_gradient():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.7, 1.5])
+    g = jax.grad(
+        lambda v: jnp.sum(ops.stoch_round(v[None], KEY, step=0.1, lo=-1, hi=1))
+    )(x)
+    np.testing.assert_allclose(np.asarray(g), [0, 1, 1, 1, 0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# portable PRNG quality
+# ---------------------------------------------------------------------------
+
+
+def test_prng_gaussian_moments():
+    idx = jnp.arange(200_000, dtype=jnp.uint32)
+    g = prng.gaussian(idx, jnp.uint32(7))
+    assert abs(float(g.mean())) < 0.01
+    assert abs(float(g.std()) - 1.0) < 0.01
+    kurt = float(((g - g.mean()) ** 4).mean() / g.std() ** 4)
+    assert abs(kurt - 3.0) < 0.1
+
+
+def test_prng_streams_decorrelated():
+    idx = jnp.arange(100_000, dtype=jnp.uint32)
+    a = prng.gaussian(idx, jnp.uint32(1))
+    b = prng.gaussian(idx, jnp.uint32(2))
+    corr = float(jnp.corrcoef(a, b)[0, 1])
+    assert abs(corr) < 0.02
+    # sequential correlation within one stream
+    corr2 = float(jnp.corrcoef(a[:-1], a[1:])[0, 1])
+    assert abs(corr2) < 0.02

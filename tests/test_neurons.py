@@ -1,0 +1,78 @@
+"""Binary stochastic Sigmoid neurons (paper §III-A, Fig. 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar, neurons, physics
+
+DP = physics.calibrate_v_read(physics.DeviceParams(), n_rows=784)
+
+
+def test_fire_probability_matches_logistic_within_probit_bound():
+    """Eq. 13: after SNR calibration the comparator matches the logistic
+    within the 1.702-approximation bound (|err| < 0.0095) plus a small
+    column-ΣG variation term."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (784, 64)) * 0.05
+    x = (jax.random.uniform(jax.random.PRNGKey(1), (64, 784)) < 0.3).astype(
+        jnp.float32
+    )
+    m = crossbar.map_weights(w, DP)
+    z = x @ m.w_eff
+    p = neurons.fire_probability_physical(
+        z, crossbar.column_sum_g(m), DP
+    )
+    err = np.abs(np.asarray(p) - np.asarray(jax.nn.sigmoid(z)))
+    assert err.max() < 0.012
+
+
+def test_comparator_samples_match_fire_probability():
+    """The literal circuit (sample currents, compare) is distributionally
+    identical to the STE path's probability."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (256, 8)) * 0.1
+    dp = physics.calibrate_v_read(physics.DeviceParams(), 256)
+    x = (jax.random.uniform(jax.random.PRNGKey(3), (4, 256)) < 0.4).astype(
+        jnp.float32
+    )
+    n = 3000
+    keys = jax.random.split(jax.random.PRNGKey(4), n)
+    samp = jnp.stack(
+        [neurons.comparator_sample(k, x, w, dp) for k in keys[:n]]
+    ).mean(0)
+    m = crossbar.map_weights(w, dp)
+    p = neurons.fire_probability_physical(
+        x @ m.w_eff, crossbar.column_sum_g(m), dp
+    )
+    # MC error ~ 3·sqrt(p(1-p)/n) <= 3*0.5/sqrt(n) ≈ 0.027
+    assert np.abs(np.asarray(samp) - np.asarray(p)).max() < 0.04
+
+
+def test_ste_gradient_is_sigmoid_derivative():
+    """STE: d/dz E[stochastic_binarize(sigmoid(z))] == sigmoid'(z)."""
+    z = jnp.linspace(-3, 3, 31)
+
+    def f(z):
+        p = jax.nn.sigmoid(z)
+        y = neurons.stochastic_binarize(jax.random.PRNGKey(0), p)
+        return y.sum()
+
+    g = jax.grad(f)(z)
+    expected = jax.nn.sigmoid(z) * (1 - jax.nn.sigmoid(z))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expected), rtol=1e-5)
+
+
+def test_binarize_outputs_binary_and_unbiased():
+    p = jax.random.uniform(jax.random.PRNGKey(5), (2000,))
+    y = neurons.stochastic_binarize(jax.random.PRNGKey(6), p)
+    assert set(np.unique(np.asarray(y))) <= {0.0, 1.0}
+    keys = jax.random.split(jax.random.PRNGKey(7), 500)
+    ys = jnp.stack([neurons.stochastic_binarize(k, p) for k in keys]).mean(0)
+    assert np.abs(np.asarray(ys) - np.asarray(p)).max() < 0.09
+
+
+def test_soft_mode_returns_probability():
+    p = jnp.asarray([0.2, 0.8])
+    y = neurons.stochastic_binarize(jax.random.PRNGKey(0), p, False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(p))

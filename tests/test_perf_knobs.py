@@ -1,0 +1,91 @@
+"""Regression tests for the §Perf optimization knobs: every transform must
+be numerically identity (head padding, KV repeat) or bounded-error with
+argmax agreement (bf16 probs, int8 KV cache)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_model_fns, transformer as TF
+
+
+def _fwd(cfg, params, toks):
+    out, _ = TF.lm_forward(params, toks, cfg, None)
+    return out
+
+
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg0 = dataclasses.replace(
+        get_smoke_config("deepseek-coder-33b"), dtype="float32"
+    )
+    fns = get_model_fns(cfg0)
+    params = fns.init(jax.random.PRNGKey(1), cfg0)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 12), 0, cfg0.vocab)
+    return cfg0, params, toks, _fwd(cfg0, params, toks)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"attn_pad_heads": 8},
+        {"gqa_repeat_kv": True},
+        {"attn_pad_heads": 8, "gqa_repeat_kv": True},
+        {"attn_kv_chunk": 4},
+    ],
+)
+def test_knob_is_identity(gqa_setup, kw):
+    cfg0, params, toks, ref = gqa_setup
+    cfg = dataclasses.replace(cfg0, **kw)
+    got = _fwd(cfg, params, toks)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref), atol=5e-5, rtol=1e-4
+    )
+
+
+def test_bf16_probs_bounded_error(gqa_setup):
+    cfg0, params, toks, ref = gqa_setup
+    cfg = dataclasses.replace(cfg0, attn_probs_dtype="bfloat16")
+    got = _fwd(cfg, params, toks)
+    rel = float(jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 0.03, rel
+    assert bool(jnp.all(jnp.argmax(got, -1) == jnp.argmax(ref, -1)))
+
+
+def test_int8_kv_cache_decode_close():
+    cfg0 = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), dtype="float32"
+    )
+    cfg8 = dataclasses.replace(cfg0, kv_cache_dtype="int8")
+    fns = get_model_fns(cfg8)
+    params = fns.init(jax.random.PRNGKey(1), cfg8)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 12), 0, cfg8.vocab)
+    cache, lp = fns.prefill(params, {"tokens": toks[:, :-1]}, cfg8, 32)
+    assert cache["k"].dtype == jnp.int8
+    cache, ld = fns.decode_step(params, cache, toks[:, -1], cfg8)
+    full, _ = TF.lm_forward(params, toks, cfg0, None)
+    for got, want in ((lp, full[:, -2, :]), (ld, full[:, -1, :])):
+        rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+        assert rel < 0.05, rel
+        assert bool(jnp.all(jnp.argmax(got, -1) == jnp.argmax(want, -1)))
+
+
+def test_int8_cache_halves_cache_bytes():
+    # production head_dim (80): int8 + per-(pos,head) f32 scale ≈ 0.53×
+    cfg0 = dataclasses.replace(get_smoke_config("stablelm-3b"), d_head=80)
+    cfg8 = dataclasses.replace(cfg0, kv_cache_dtype="int8")
+    c16 = TF.init_decode_cache(cfg0, batch=2, max_len=64)
+    c8 = TF.init_decode_cache(cfg8, batch=2, max_len=64)
+    bytes16 = sum(
+        v.size * v.dtype.itemsize for k, v in c16.items() if k in ("k", "v")
+    )
+    bytes8 = sum(
+        v.size * v.dtype.itemsize
+        for k, v in c8.items()
+        if k in ("k", "v", "k_scale", "v_scale")
+    )
+    assert bytes8 < 0.6 * bytes16  # int8 + scales ≈ 0.53×

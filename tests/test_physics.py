@@ -1,0 +1,102 @@
+"""Unit + property tests for the device physics (paper Eq. 1-7, 13)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar, physics
+
+DP = physics.DeviceParams()
+
+
+def test_weight_mapping_constants():
+    # Eq. 4/5 closed forms for the symmetric default range
+    assert np.isclose(DP.g0, (DP.g_max - DP.g_min) / 2.0)
+    assert np.isclose(DP.g_ref, (DP.g_max + DP.g_min) / 2.0)
+
+
+def test_mapping_roundtrip_exact_without_quantization():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.3
+    m = crossbar.map_weights(w, DP, quantize=False)
+    # absolute tolerance: W -> G -> W round-trips through f32 with a large
+    # additive G_ref, so cancellation limits small-weight precision (this IS
+    # the physical programming-precision limit)
+    np.testing.assert_allclose(
+        np.asarray(m.w_eff), np.asarray(w), atol=5e-4, rtol=1e-3
+    )
+    # Eq. 7: G = W·G0 + Gref
+    np.testing.assert_allclose(
+        np.asarray(m.g), np.asarray(w) * DP.g0 + DP.g_ref, rtol=1e-6
+    )
+
+
+def test_quantization_grid():
+    w = jax.random.normal(jax.random.PRNGKey(1), (100, 10))
+    wq = crossbar.quantize_weights(w, DP)
+    step = (DP.w_max - DP.w_min) / (DP.n_levels - 1)
+    lv = (np.asarray(wq) - DP.w_min) / step
+    np.testing.assert_allclose(lv, np.round(lv), atol=1e-4)
+    assert np.abs(np.asarray(wq) - np.clip(np.asarray(w), -1, 1)).max() <= (
+        step / 2 + 1e-6
+    )
+
+
+def test_differential_mac_mean_is_exact():
+    """Eq. 12: E[I_j - I_ref] = Vr·G0·Σ W x (noise off via huge SNR)."""
+    dp = DP.replace(delta_f=1e-30)  # kill noise
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (128, 16)) * 0.2
+    x = jax.random.uniform(jax.random.PRNGKey(3), (8, 128))
+    m = crossbar.map_weights(w, dp, quantize=False)
+    delta, _ = crossbar.analog_mac(jax.random.PRNGKey(4), x, m, dp)
+    expected = dp.v_read * dp.g0 * (np.asarray(x) @ np.asarray(w))
+    np.testing.assert_allclose(np.asarray(delta), expected, rtol=2e-4)
+
+
+def test_calibration_gives_unit_beta():
+    for n_rows, beta in [(784, 1.0), (256, 1.0), (1024, 2.0)]:
+        dp = physics.calibrate_v_read(DP, n_rows, beta=beta)
+        assert np.isclose(physics.effective_beta(dp, n_rows), beta, rtol=1e-6)
+
+
+@hypothesis.given(
+    g=st.floats(1e-7, 1e-3),
+    df=st.floats(1e6, 1e12),
+    t=st.floats(200.0, 400.0),
+)
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_nyquist_scaling(g, df, t):
+    """Eq. 1: i_RMS = sqrt(4kTGΔf) — exact scaling law."""
+    dp = DP.replace(delta_f=df, temperature=t)
+    i1 = float(physics.thermal_noise_rms(jnp.asarray(g), dp))
+    i2 = float(physics.thermal_noise_rms(jnp.asarray(4 * g), dp))
+    assert np.isclose(i2, 2 * i1, rtol=1e-6)  # ∝ sqrt(G)
+    dp2 = dp.replace(delta_f=4 * df)
+    i3 = float(physics.thermal_noise_rms(jnp.asarray(g), dp2))
+    assert np.isclose(i3, 2 * i1, rtol=1e-6)  # ∝ sqrt(Δf)
+    expected = np.sqrt(4 * physics.BOLTZMANN_K * t * g * df)
+    assert np.isclose(i1, expected, rtol=1e-6)
+
+
+def test_snr_knobs_move_effective_beta():
+    """Fig. 4(c)-(f): Vr, G0 (via range), Δf and N_col all tune the SNR."""
+    base = physics.calibrate_v_read(DP, 512)
+    b0 = physics.effective_beta(base, 512)
+    assert physics.effective_beta(base.replace(v_read=base.v_read * 2), 512) > b0
+    assert physics.effective_beta(base.replace(delta_f=base.delta_f * 4), 512) < b0
+    assert physics.effective_beta(base, 2048) < b0  # more rows -> more noise
+    wider = base.replace(g_max=base.g_max * 2)  # larger G0
+    assert physics.effective_beta(wider, 512) > b0
+
+
+@hypothesis.given(st.integers(16, 2048))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_column_noise_additivity(n_rows):
+    """Column noise variance is the SUM of device variances (Eq. 11)."""
+    sum_g = jnp.asarray(n_rows * 2.0 * DP.g_ref)
+    sigma = float(physics.column_noise_sigma(sum_g, DP))
+    one = float(physics.column_noise_sigma(jnp.asarray(2.0 * DP.g_ref), DP))
+    assert np.isclose(sigma, one * np.sqrt(n_rows), rtol=1e-5)

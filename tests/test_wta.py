@@ -1,0 +1,86 @@
+"""WTA binary stochastic SoftMax neurons (paper §III-B, Fig. 5)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wta
+
+
+def test_single_winner_per_trial():
+    """Fig. 5(a): at most one neuron is activated per decision trial."""
+    z = jax.random.normal(jax.random.PRNGKey(0), (10,))
+    res = wta.wta_trials(
+        jax.random.PRNGKey(1), z, n_trials=500,
+        vth0=wta.calibrated_threshold(),
+    )
+    assert float(res.counts.sum()) == float(res.n_decisions)
+    assert float(res.n_decisions) <= 500
+
+
+def test_wta_approximates_softmax():
+    """Eq. 14 / Fig. 5(d): cumulative vote distribution ≈ SoftMax."""
+    z = jnp.asarray([1.5, 0.3, -0.5, 0.9, -1.2, 0.0, 2.0, -0.3, 0.5, 1.0])
+    res = wta.wta_trials(
+        jax.random.PRNGKey(2), z, n_trials=40_000,
+        vth0=wta.calibrated_threshold(),
+    )
+    sm = jax.nn.softmax(z)
+    tv = 0.5 * float(jnp.abs(res.probs - sm).sum())
+    assert tv < 0.08
+    assert int(jnp.argmax(res.probs)) == int(jnp.argmax(sm))
+
+
+def test_expected_probs_analytic_matches_simulation():
+    z = jax.random.normal(jax.random.PRNGKey(3), (6,))
+    theta = wta.calibrated_threshold()
+    res = wta.wta_trials(jax.random.PRNGKey(4), z, 40_000, theta)
+    ana = wta.wta_expected_probs(z, theta)
+    assert 0.5 * float(jnp.abs(res.probs - ana).sum()) < 0.05
+
+
+def test_threshold_tradeoff():
+    """§IV-C: small V_th0 degrades the SoftMax approximation (at realistic
+    logit spreads — the Gaussian-tail regime); large V_th0 lowers activation
+    probability (longer decision time)."""
+    z = jnp.asarray([2.0, 0.4, -1.2, 0.8, -2.0, 0.0, 2.8, -0.4])
+    sm = jax.nn.softmax(z)
+    theta_cal = wta.calibrated_threshold()
+    tvs, rates = {}, {}
+    for name, theta in [("zero", 0.0), ("cal", theta_cal),
+                        ("high", 2.5 * theta_cal)]:
+        res = wta.wta_trials(jax.random.PRNGKey(5), z, 30_000, theta)
+        tvs[name] = 0.5 * float(jnp.abs(res.probs - sm).sum())
+        rates[name] = float(res.n_decisions) / 30_000
+    assert tvs["cal"] < tvs["zero"]          # calibrated beats θ=0
+    assert rates["high"] < rates["cal"] < rates["zero"]  # decision time ↑
+
+
+def test_wta_classify_matches_argmax_for_clear_margins():
+    z = jnp.zeros((8, 10)).at[jnp.arange(8), jnp.arange(8)].set(4.0)
+    pred = wta.wta_classify(
+        jax.random.PRNGKey(6), z, 200, wta.calibrated_threshold()
+    )
+    np.testing.assert_array_equal(np.asarray(pred), np.arange(8))
+
+
+@hypothesis.given(
+    k=st.integers(1, 4),
+    c=st.integers(5, 12),
+    seed=st.integers(0, 1000),
+)
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_wta_topk_valid(k, c, seed):
+    """k-WTA (MoE router) always returns k distinct valid experts."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (3, c))
+    share, idx = wta.wta_topk(
+        jax.random.PRNGKey(seed + 1), z, k, 64, wta.calibrated_threshold()
+    )
+    assert idx.shape == (3, k)
+    assert share.shape == (3, k)
+    a = np.asarray(idx)
+    assert ((a >= 0) & (a < c)).all()
+    for row in a:
+        assert len(set(row.tolist())) == k
