@@ -1,12 +1,15 @@
-"""Serve a small LM with batched requests, comparing the digital greedy
+"""Serve a small LM with continuous batching, comparing the digital greedy
 sampler against the paper's WTA stochastic SoftMax sampling head (votes of
-noisy comparator trials pick each token).
+noisy comparator trials pick each token, independently per slot).
+
+Four requests with different prompt lengths and token budgets share three
+decode slots: the scheduler prefills each arrival into a free slot of the
+live batch and refills slots as short requests finish.
 
     PYTHONPATH=src python examples/serve_stochastic.py
 """
 
 import dataclasses
-import time
 
 import jax
 
@@ -23,23 +26,32 @@ def main():
     fns = get_model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
 
-    prompts = [[11, 42, 7], [3, 3, 3, 3], [250, 1, 99, 5, 17], [8]]
+    requests = [  # (prompt, max_new_tokens) — mixed lengths and budgets
+        ([11, 42, 7], 16),
+        ([3, 3, 3, 3], 6),
+        ([250, 1, 99, 5, 17], 12),
+        ([8], 8),
+    ]
 
     for mode, wta in (("greedy (digital argmax)", False),
                       ("WTA stochastic votes (RACA)", True)):
         mcfg = dataclasses.replace(cfg, wta_head=wta)
         eng = ServingEngine(
             params, mcfg,
-            ServeConfig(max_batch=4, max_new_tokens=16, max_len=128),
+            ServeConfig(max_batch=3, max_new_tokens=16, max_len=128),
         )
-        for p in prompts:
-            eng.submit(p)
-        t0 = time.time()
-        outs = eng.step()
-        dt = time.time() - t0
-        print(f"--- {mode} ({dt:.2f}s for {len(prompts)} requests) ---")
-        for p, o in zip(prompts, outs):
-            print(f"  prompt={p} -> {o}")
+        rids = [eng.submit(p, n) for p, n in requests]
+        outs = eng.run()
+        m = eng.metrics()
+        print(f"--- {mode} ---")
+        for rid, (p, _) in zip(rids, requests):
+            print(f"  prompt={p} -> {outs[rid]}")
+        print(
+            f"  {m.completed} requests, {m.total_tokens} tokens: "
+            f"{m.tokens_per_s:.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms, "
+            f"occupancy {m.occupancy_mean:.2f} "
+            f"over {m.decode_steps} decode steps"
+        )
 
 
 if __name__ == "__main__":

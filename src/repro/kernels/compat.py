@@ -1,0 +1,28 @@
+"""Pallas-TPU API compatibility across jax releases.
+
+The kernels target the current Pallas API; older jax releases (< 0.5) spell
+some symbols differently.  Centralizing the aliases here keeps every kernel
+module importable (and testable in interpret mode) on whichever jax the
+container ships.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams in jax 0.5
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def interpret_mode():
+    """Value for ``pallas_call(interpret=...)`` on the current backend."""
+    if jax.default_backend() == "tpu":
+        return False
+    # jax >= 0.6 structures TPU interpret-mode options in InterpretParams;
+    # older releases only take pallas_call(interpret=True)
+    if hasattr(pltpu, "InterpretParams"):
+        return pltpu.InterpretParams()
+    return True

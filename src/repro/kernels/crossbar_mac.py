@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams as _CompilerParams
+
 from . import prng
 
 DEF_BM, DEF_BN, DEF_BK = 128, 128, 512
@@ -53,6 +55,10 @@ def _kernel(
     w_min: float,
     w_max: float,
 ):
+    # grid indices read at the top level: program_id inside a pl.when branch
+    # is not substituted by interpret mode on older jax (cpu tests)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -91,8 +97,6 @@ def _kernel(
             # runtime sigma (depends on the traced dynamic-range scale)
             sigma = jax.lax.bitcast_convert_type(seed_ref[1], jnp.float32)
         # Globally-unique per-element counter -> reproducible thermal noise.
-        i = pl.program_id(0)
-        j = pl.program_id(1)
         bm, bn = z.shape
         rows = jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 0)
         cols = jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 1)
@@ -162,7 +166,7 @@ def crossbar_mac_pallas(
             pltpu.VMEM((1, bn), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(x.astype(jnp.float32), w.astype(jnp.float32), seed)

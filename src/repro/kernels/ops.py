@@ -26,11 +26,9 @@ from repro.core.physics import BOLTZMANN_K, PROBIT_SCALE
 
 
 def _interpret_mode():
-    if jax.default_backend() == "tpu":
-        return False
-    from jax.experimental.pallas import tpu as pltpu
+    from .compat import interpret_mode
 
-    return pltpu.InterpretParams()
+    return interpret_mode()
 
 
 def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:

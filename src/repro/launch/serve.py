@@ -1,8 +1,9 @@
-"""Serving launcher: batched requests against a (randomly initialized or
-checkpointed) model, greedy or WTA-stochastic sampling.
+"""Serving launcher: continuous-batching engine against a (randomly
+initialized or checkpointed) model, greedy or WTA-stochastic sampling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
-        --requests 4 --new-tokens 16 [--wta] [--ckpt-dir ckpts/stablelm-3b]
+        --requests 4 --new-tokens 16 [--wta] [--static] \
+        [--ckpt-dir ckpts/stablelm-3b]
 """
 
 from __future__ import annotations
@@ -16,7 +17,7 @@ import jax
 from repro.checkpoint import latest_step, load_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.models import get_model_fns
-from repro.serving import ServeConfig, ServingEngine
+from repro.serving import ServeConfig, ServingEngine, StaticServingEngine
 
 
 def main() -> None:
@@ -28,6 +29,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--wta", action="store_true",
                     help="WTA stochastic SoftMax sampling (the paper's head)")
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch reference engine (no slot refill)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (continuous-batching batch width)")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -43,10 +48,11 @@ def main() -> None:
             params = state  # params-only checkpoints
             print(f"loaded checkpoint step {step}")
 
-    eng = ServingEngine(
+    engine_cls = StaticServingEngine if args.static else ServingEngine
+    eng = engine_cls(
         params, cfg,
         ServeConfig(
-            max_batch=args.requests,
+            max_batch=args.slots,
             max_new_tokens=args.new_tokens,
             max_len=args.max_len,
         ),
@@ -58,12 +64,17 @@ def main() -> None:
         prompt = jax.random.randint(k, (n,), 0, cfg.vocab).tolist()
         eng.submit(prompt)
     t0 = time.time()
-    outs = eng.step()
+    # drain everything: the static engine's step() serves only one
+    # max_batch wave, so both engines go through their full-drain APIs
+    outs = eng.run() if args.static else eng.step()
     dt = time.time() - t0
+    m = eng.metrics()
     total = sum(len(o) for o in outs)
     print(
         f"served {len(outs)} requests, {total} tokens in {dt:.2f}s "
-        f"({total / max(dt, 1e-9):.1f} tok/s, sampler="
+        f"({total / max(dt, 1e-9):.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms,"
+        f" occupancy {m.occupancy_mean:.2f}, engine="
+        f"{'static' if args.static else 'continuous'}, sampler="
         f"{'WTA votes' if args.wta else 'greedy'})"
     )
     for o in outs:

@@ -64,6 +64,85 @@ def decode_cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
     return jax.eval_shape(lambda: TF.init_decode_cache(cfg, b, s))
 
 
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Concrete (allocated) decode cache for a live serving batch."""
+    if cfg.family == "encdec":
+        return ED.init_encdec_cache(cfg, batch, max_len, cfg.enc_seq)
+    return TF.init_decode_cache(cfg, batch, max_len)
+
+
+def cache_batch_axis(cfg: ModelConfig, leaf_name: str) -> int:
+    """Which axis of a decode-cache leaf is the request/slot axis.
+
+    ``pos`` is (B,); LM-family leaves are (n_units, n_per_unit, B, ...);
+    encdec leaves are (n_layers, B, ...) — the layout contract that
+    slot-addressable insertion below relies on.  Covered by
+    tests/test_specs.py so cache-layout refactors fail loudly.
+    """
+    if leaf_name == "pos":
+        return 0
+    return 1 if cfg.family == "encdec" else 2
+
+
+def make_cache_insert(cfg: ModelConfig):
+    """Insert one request's prefill cache into a live batch cache at ``slot``.
+
+    (batch_cache, one_cache(B=1), slot int32) -> batch_cache.  The slot index
+    is a traced scalar, so one jit of this function serves every slot of a
+    live batch without recompiling — the continuous-batching refill path.
+    """
+
+    def insert(batch_cache: dict, one_cache: dict, slot) -> dict:
+        out = {}
+        for name, leaf in batch_cache.items():
+            upd = one_cache[name].astype(leaf.dtype)
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, upd, slot, axis=cache_batch_axis(cfg, name)
+            )
+        return out
+
+    return insert
+
+
+def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):
+    """Next-token selection shared by prefill and decode steps.
+
+    ``logits`` is (B, V).  With ``key=None`` (or ``wta_head`` off) this is the
+    digital argmax baseline.  With ``cfg.wta_head``:
+
+      * ``key.ndim == 1`` — legacy whole-batch key: one WTA trial tensor for
+        the batch (the static engine's behavior).
+      * ``key.ndim == 2`` — per-slot keys (B, 2): each request votes with its
+        own comparator-noise stream, so a request's sampled tokens are a
+        function of (its key, its step counter, its logits) only — invariant
+        to which other requests share the batch, which continuous batching
+        requires.  ``steps`` (B,) int32, when given, is folded into each
+        slot's key so every decode step draws fresh noise.
+    """
+    if not (cfg.wta_head and key is not None):
+        return jnp.argmax(logits, axis=-1).astype(_i32)
+
+    from repro.core import wta as W
+
+    def counts_one(k, z):
+        res = W.wta_trials(
+            k,
+            z.astype(jnp.float32),
+            n_trials=cfg.analog.wta_trials,
+            vth0=cfg.analog.vth0,
+            beta=cfg.analog.beta,
+        )
+        return res.counts
+
+    if key.ndim == 2:  # per-slot keys
+        if steps is not None:
+            key = jax.vmap(jax.random.fold_in)(key, steps)
+        counts = jax.vmap(counts_one)(key, logits)
+    else:
+        counts = counts_one(key, logits)
+    return jnp.argmax(counts, axis=-1).astype(_i32)
+
+
 def params_specs(cfg: ModelConfig) -> Any:
     fns = get_model_fns(cfg)
     return jax.eval_shape(lambda k: fns.init(k, cfg), jax.random.PRNGKey(0))
@@ -80,25 +159,15 @@ def make_serve_step(cfg: ModelConfig):
 
     With cfg.wta_head the next token comes from the paper's WTA stochastic
     SoftMax circuit (vote counts over noisy comparator trials) instead of a
-    digital argmax — the serving-side integration of the technique."""
+    digital argmax — the serving-side integration of the technique.  ``key``
+    may be a single PRNG key (whole-batch trials) or a (B, 2) stack of
+    per-slot keys with an optional ``steps`` (B,) counter; see
+    :func:`sample_tokens`."""
     fns = get_model_fns(cfg)
 
-    def serve_step(params, cache, token, key=None):
+    def serve_step(params, cache, token, key=None, steps=None):
         cache, logits = fns.decode_step(params, cache, token, cfg)
-        if cfg.wta_head and key is not None:
-            from repro.core import wta as W
-
-            res = W.wta_trials(
-                key,
-                logits.astype(jnp.float32),
-                n_trials=cfg.analog.wta_trials,
-                vth0=cfg.analog.vth0,
-                beta=cfg.analog.beta,
-            )
-            nxt = jnp.argmax(res.counts, axis=-1).astype(jnp.int32)
-        else:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return cache, nxt
+        return cache, sample_tokens(cfg, logits, key, steps)
 
     return serve_step
 

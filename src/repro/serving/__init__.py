@@ -1,3 +1,18 @@
-from .engine import ServeConfig, ServingEngine
+from .engine import (
+    ServeConfig,
+    ServingEngine,
+    ServingMetrics,
+    StaticServingEngine,
+)
+from .scheduler import Request, RequestState, Scheduler, left_pad
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = [
+    "ServeConfig",
+    "ServingEngine",
+    "ServingMetrics",
+    "StaticServingEngine",
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "left_pad",
+]

@@ -1,4 +1,4 @@
-"""Batched serving engine: request queue → padded batch prefill → decode.
+"""Serving engines: continuous batching (default) + static-batch reference.
 
 Serving-side integration of the paper: with ``cfg.wta_head`` the sampler is
 the WTA stochastic SoftMax circuit — per emitted token, T comparator-bank
@@ -6,48 +6,325 @@ decision trials vote and the majority wins (§III-B/C).  Repeated-vote
 majority is exactly the paper's accuracy-recovery mechanism (Fig. 6), here
 applied to LM decoding; greedy argmax is the digital baseline.
 
-The engine is deliberately simple (static batch, right-padded prompts,
-synchronous decode loop) but complete: queueing, batching, EOS handling,
-per-request detokenized outputs.  Continuous batching would slot into
-``step()`` without touching the model code.
+``ServingEngine`` is a continuous-batching engine: a slot-based scheduler
+(`repro.serving.scheduler`) admits queued requests into free slots of a
+live decode batch.  Each admission prefills ONE request (prompt left-padded
+to a compile-size bucket) and inserts its cache at the free slot index via a
+jitted ``dynamic_update_slice`` — no recompilation, the decode step keeps
+running for the other slots.  Finished requests (EOS or per-request
+``max_new_tokens``) are evicted and their slot refilled mid-flight, which is
+what lifts slot occupancy over static batching on mixed-length traces.
+
+WTA sampling stays independent per request: every slot carries the key
+``fold_in(base_key, rid)`` and a step counter, so a request's vote noise is
+a function of (its rid, its token index) only — invariant to batch
+composition.  ``StaticServingEngine`` keeps the old static-batch semantics
+(whole batch prefilled together, slots held until the last request ends) as
+the baseline that benchmarks and equivalence tests compare against.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.specs import make_serve_step
+from repro.launch import specs as SP
 from repro.models import ModelConfig, get_model_fns
+from repro.serving.scheduler import Request, RequestState, Scheduler, left_pad
+
+
+def _default_buckets(max_len: int) -> tuple[int, ...]:
+    out, b = [], 8
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_batch: int = 8
-    max_new_tokens: int = 32
-    max_len: int = 512
-    eos_token: int = -1     # -1: never stop early
+    max_batch: int = 8          # decode slots
+    max_new_tokens: int = 32    # default per-request budget
+    max_len: int = 512          # cache capacity (prompt + generated)
+    eos_token: int = -1         # -1: never stop early
     seed: int = 0
+    # prompt lengths are left-padded up to the next bucket so prefill
+    # compiles once per bucket, not once per distinct prompt length.
+    prefill_buckets: tuple[int, ...] = ()
+
+    def buckets(self) -> tuple[int, ...]:
+        bs = self.prefill_buckets or _default_buckets(self.max_len)
+        return tuple(sorted(b for b in bs if b <= self.max_len))
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Aggregate serving statistics (completed requests only)."""
+
+    completed: int = 0
+    total_tokens: int = 0
+    wall_time: float = 0.0
+    tokens_per_s: float = 0.0
+    ttft_mean: float = 0.0      # submit → first generated token, seconds
+    ttft_max: float = 0.0
+    decode_steps: int = 0
+    prefills: int = 0
+    occupancy_mean: float = 0.0  # mean busy-slot fraction per decode step
+
+    def row(self) -> str:
+        return (
+            f"tok_per_s={self.tokens_per_s:.1f} "
+            f"ttft_ms={self.ttft_mean * 1e3:.1f} "
+            f"occupancy={self.occupancy_mean:.2f}"
+        )
 
 
 class ServingEngine:
+    """Continuous-batching engine over a slot-addressable decode cache."""
+
+    def __init__(self, params, model_cfg: ModelConfig, cfg: ServeConfig):
+        if get_model_fns(model_cfg).prefill is None:
+            raise ValueError(f"family {model_cfg.family!r} cannot decode")
+        if model_cfg.family == "encdec":
+            raise ValueError("encdec serving needs frames; token-LM only")
+        self.params = params
+        self.mcfg = model_cfg
+        self.cfg = cfg
+        self.sched = Scheduler(cfg.max_batch)
+        self._serve_step = jax.jit(
+            SP.make_serve_step(model_cfg), donate_argnums=(1,)
+        )
+        self._insert = jax.jit(
+            SP.make_cache_insert(model_cfg), donate_argnums=(0,)
+        )
+        self._prefill = jax.jit(self._make_prefill())
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        b = cfg.max_batch
+        self._cache = None  # allocated lazily on first admission
+        self._tokens = np.zeros((b,), np.int32)   # last emitted, per slot
+        self._req_keys = np.zeros((b, 2), np.uint32)
+        self._steps = np.zeros((b,), np.int32)    # tokens emitted, per slot
+        self._occ_sum = 0.0
+        self._decode_steps = 0
+        self._prefills = 0
+        self._total_tokens = 0
+        self._busy_time = 0.0
+
+    def _make_prefill(self):
+        cfg, max_len = self.mcfg, self.cfg.max_len
+
+        def prefill(params, tokens, key):  # tokens (1, L), key (2,) uint32
+            fns = get_model_fns(cfg)
+            cache, logits = fns.prefill(
+                params, {"tokens": tokens}, cfg, max_len
+            )
+            tok0 = SP.sample_tokens(
+                cfg, logits, key[None, :], jnp.zeros((1,), jnp.int32)
+            )
+            return cache, tok0
+
+        return prefill
+
+    # -- request API --------------------------------------------------------
+
+    def submit(
+        self,
+        prompt_tokens: Sequence[int],
+        max_new_tokens: Optional[int] = None,
+    ) -> int:
+        """Queue a request; returns its request id."""
+        n = len(prompt_tokens)
+        if n > max(self.cfg.buckets()):
+            raise ValueError(
+                f"prompt length {n} exceeds largest prefill bucket "
+                f"{max(self.cfg.buckets())}"
+            )
+        budget = (
+            self.cfg.max_new_tokens if max_new_tokens is None
+            else max_new_tokens
+        )
+        if budget < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+        need = self._bucket(n) + budget
+        if need > self.cfg.max_len:
+            # decode would write past cache capacity (the dynamic-slice
+            # write clamps and silently corrupts the last position)
+            raise ValueError(
+                f"prefill bucket {self._bucket(n)} + {budget} new tokens "
+                f"= {need} exceeds cache max_len={self.cfg.max_len}"
+            )
+        req = self.sched.submit(
+            prompt_tokens, budget, now=time.perf_counter()
+        )
+        return req.rid
+
+    def _bucket(self, n: int) -> int:
+        return next(b for b in self.cfg.buckets() if b >= n)
+
+    def _admit_one(self, req: Request) -> None:
+        slot = req.slot
+        plen = self._bucket(len(req.prompt))
+        toks = np.asarray(
+            [left_pad(req.prompt, plen)], np.int32
+        )
+        rkey = jax.random.fold_in(self._base_key, req.rid)
+        one_cache, tok0 = self._prefill(
+            self.params, jnp.asarray(toks), rkey
+        )
+        if self._cache is None:
+            self._cache = SP.init_decode_cache(
+                self.mcfg, self.cfg.max_batch, self.cfg.max_len
+            )
+        self._cache = self._insert(self._cache, one_cache, slot)
+        self._req_keys[slot] = np.asarray(rkey)
+        self._prefills += 1
+        self.sched.start_decode(req)
+        t0 = int(tok0[0])  # blocks on the prefill — TTFT stamps after it
+        self._tokens[slot] = t0
+        self._steps[slot] = 1
+        self._total_tokens += 1
+        self.sched.record_token(
+            req, t0, self.cfg.eos_token, time.perf_counter()
+        )
+
+    def tick(self) -> list[tuple[int, int]]:
+        """One engine iteration: admit+prefill, then one batched decode step.
+
+        Returns the (rid, token) pairs emitted during this tick.
+        """
+        t_start = time.perf_counter()
+        emitted: list[tuple[int, int]] = []
+        for req in self.sched.admit():
+            self._admit_one(req)
+            emitted.append((req.rid, req.output[-1]))
+        active = self.sched.active()
+        if active:
+            self._cache, nxt = self._serve_step(
+                self.params,
+                self._cache,
+                jnp.asarray(self._tokens),
+                jnp.asarray(self._req_keys),
+                jnp.asarray(self._steps),
+            )
+            nxt_np = np.asarray(nxt)
+            now = time.perf_counter()
+            self._occ_sum += len(active) / self.cfg.max_batch
+            self._decode_steps += 1
+            for req in active:
+                slot = req.slot
+                t = int(nxt_np[slot])
+                self._tokens[slot] = t
+                self._steps[slot] += 1
+                self._total_tokens += 1
+                self.sched.record_token(req, t, self.cfg.eos_token, now)
+                emitted.append((req.rid, t))
+        self._busy_time += time.perf_counter() - t_start
+        return emitted
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain queue + slots; returns {rid: generated tokens}."""
+        while self.sched.has_work():
+            self.tick()
+        return {
+            r.rid: r.output
+            for r in self.sched.all_requests()
+            if r.state is RequestState.DONE
+        }
+
+    def step(self) -> list[list[int]]:
+        """Legacy API: drain and return newly completed outputs in
+        submission order (the old static engine's ``step()`` contract)."""
+        before = {
+            r.rid
+            for r in self.sched.all_requests()
+            if r.state is RequestState.DONE
+        }
+        self.run()
+        return [
+            r.output
+            for r in self.sched.all_requests()
+            if r.state is RequestState.DONE and r.rid not in before
+        ]
+
+    def metrics(self) -> ServingMetrics:
+        done = [
+            r
+            for r in self.sched.all_requests()
+            if r.state is RequestState.DONE
+        ]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        wall = self._busy_time
+        return ServingMetrics(
+            completed=len(done),
+            total_tokens=self._total_tokens,
+            wall_time=wall,
+            tokens_per_s=self._total_tokens / max(wall, 1e-9),
+            ttft_mean=float(np.mean(ttfts)) if ttfts else 0.0,
+            ttft_max=float(np.max(ttfts)) if ttfts else 0.0,
+            decode_steps=self._decode_steps,
+            prefills=self._prefills,
+            occupancy_mean=self._occ_sum / max(self._decode_steps, 1),
+        )
+
+
+class StaticServingEngine:
+    """The pre-continuous-batching reference: whole batch prefilled
+    together (prompts left-padded to the batch max), every slot held until
+    the LAST request of the batch finishes.  Kept as the equivalence oracle
+    for tests and the occupancy baseline for benchmarks."""
+
     def __init__(self, params, model_cfg: ModelConfig, cfg: ServeConfig):
         self.params = params
         self.mcfg = model_cfg
         self.cfg = cfg
         self.fns = get_model_fns(model_cfg)
         self._serve_step = jax.jit(
-            make_serve_step(model_cfg), donate_argnums=(1,)
+            SP.make_serve_step(model_cfg), donate_argnums=(1,)
         )
-        self._queue: list[Sequence[int]] = []
+        self._queue: list[tuple[list[int], int, float]] = []
         self._key = jax.random.PRNGKey(cfg.seed)
+        self._occ_sum = 0.0
+        self._decode_steps = 0
+        self._total_tokens = 0
+        self._busy_time = 0.0
+        self._ttfts: list[float] = []
+        self._completed = 0
 
-    def submit(self, prompt_tokens: Sequence[int]) -> None:
-        self._queue.append(list(prompt_tokens))
+    def submit(
+        self,
+        prompt_tokens: Sequence[int],
+        max_new_tokens: Optional[int] = None,
+        submit_time: Optional[float] = None,
+    ) -> None:
+        budget = (
+            self.cfg.max_new_tokens if max_new_tokens is None
+            else max_new_tokens
+        )
+        if budget < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+        if len(prompt_tokens) + budget > self.cfg.max_len:
+            raise ValueError(
+                f"prompt {len(prompt_tokens)} + {budget} new tokens "
+                f"exceeds cache max_len={self.cfg.max_len}"
+            )
+        self._queue.append(
+            (
+                list(prompt_tokens),
+                budget,
+                submit_time if submit_time is not None
+                else time.perf_counter(),
+            )
+        )
+
+    def pending(self) -> int:
+        """Requests queued for a future batch wave."""
+        return len(self._queue)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -57,30 +334,71 @@ class ServingEngine:
         """Serve one batch from the queue; returns generated token lists."""
         if not self._queue:
             return []
-        batch_prompts = self._queue[: self.cfg.max_batch]
+        t_start = time.perf_counter()
+        batch = self._queue[: self.cfg.max_batch]
         self._queue = self._queue[self.cfg.max_batch :]
-        b = len(batch_prompts)
-        # right-align prompts into a fixed prompt window (left-pad with 0)
-        plen = max(len(p) for p in batch_prompts)
-        toks = np.zeros((b, plen), np.int32)
-        for i, p in enumerate(batch_prompts):
-            toks[i, plen - len(p) :] = p
-        batch = {"tokens": jnp.asarray(toks)}
+        prompts = [p for p, _, _ in batch]
+        budgets = [m for _, m, _ in batch]
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        # decode starts at the batch-max padded length for EVERY slot, so a
+        # short prompt co-batched with a long one can overflow the cache
+        # even when its own (prompt + budget) fit at submit time
+        worst = plen + max(budgets)
+        if worst > self.cfg.max_len:
+            raise ValueError(
+                f"padded prompt window {plen} + max budget {max(budgets)} "
+                f"= {worst} exceeds cache max_len={self.cfg.max_len}"
+            )
+        toks = np.asarray(
+            [left_pad(p, plen) for p in prompts], np.int32
+        )
         cache, logits = self.fns.prefill(
-            self.params, batch, self.mcfg, self.cfg.max_len
+            self.params, {"tokens": jnp.asarray(toks)}, self.mcfg,
+            self.cfg.max_len,
         )
         out = [[] for _ in range(b)]
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         done = np.zeros(b, bool)
-        for _ in range(self.cfg.max_new_tokens):
+        now = time.perf_counter()
+        for _, _, t_sub in batch:
+            self._ttfts.append(now - t_sub)
+        for _ in range(max(budgets)):
             for i in range(b):
                 if not done[i]:
                     t = int(token[i])
                     out[i].append(t)
-                    if t == self.cfg.eos_token:
+                    self._total_tokens += 1
+                    if t == self.cfg.eos_token or len(out[i]) >= budgets[i]:
                         done[i] = True
             if done.all():
                 break
             key = self._next_key() if self.mcfg.wta_head else None
             cache, token = self._serve_step(self.params, cache, token, key)
+            # slots stay held for the whole batch: idle ones count against
+            # occupancy, which is the cost continuous batching removes
+            self._occ_sum += (b - int(done.sum())) / self.cfg.max_batch
+            self._decode_steps += 1
+        self._completed += b
+        self._busy_time += time.perf_counter() - t_start
         return out
+
+    def run(self) -> list[list[int]]:
+        outs: list[list[int]] = []
+        while self._queue:
+            outs.extend(self.step())
+        return outs
+
+    def metrics(self) -> ServingMetrics:
+        wall = self._busy_time
+        return ServingMetrics(
+            completed=self._completed,
+            total_tokens=self._total_tokens,
+            wall_time=wall,
+            tokens_per_s=self._total_tokens / max(wall, 1e-9),
+            ttft_mean=float(np.mean(self._ttfts)) if self._ttfts else 0.0,
+            ttft_max=float(np.max(self._ttfts)) if self._ttfts else 0.0,
+            decode_steps=self._decode_steps,
+            prefills=self._completed,
+            occupancy_mean=self._occ_sum / max(self._decode_steps, 1),
+        )

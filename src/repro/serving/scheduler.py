@@ -1,0 +1,171 @@
+"""Continuous-batching scheduler: request lifecycle + slot bookkeeping.
+
+Pure host-side logic (no JAX) so it unit-tests in microseconds.  The engine
+owns the device state (decode cache, token buffer, per-slot PRNG keys); this
+module owns *which request lives in which slot and when*:
+
+    QUEUED ──admit──▶ PREFILL ──start_decode──▶ DECODE ──evict──▶ DONE
+       ▲  FIFO, into the                           │ EOS hit or
+       └─ lowest free slot                         │ max_new_tokens
+          (mid-flight refill)                      ▼ frees the slot
+
+Admission is strictly FIFO over the submit order; a freed slot is refilled
+from the queue head on the next ``admit()`` call, while the other slots keep
+decoding — that mid-flight refill is what lifts slot occupancy over static
+batching on mixed-length traces.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+def left_pad(prompt: Sequence[int], length: int, pad: int = 0) -> list[int]:
+    """Right-align ``prompt`` in a window of ``length`` (pad on the left).
+
+    Left padding keeps the last prompt token — the one whose logits seed
+    decoding — at a fixed position, so prefill of a short prompt and a long
+    prompt produce caches with the same alignment contract.
+    """
+    if len(prompt) > length:
+        raise ValueError(f"prompt len {len(prompt)} > window {length}")
+    return [pad] * (length - len(prompt)) + list(prompt)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    output: list[int] = dataclasses.field(default_factory=list)
+    done_reason: Optional[str] = None  # "eos" | "length"
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    done_time: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+
+class Scheduler:
+    """Slot table + FIFO queue; single-threaded, driven by the engine."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self._queue: collections.deque[Request] = collections.deque()
+        self._slots: list[Optional[Request]] = [None] * n_slots
+        self._requests: dict[int, Request] = {}
+        self._next_rid = 0
+
+    # -- submission / admission --------------------------------------------
+
+    def submit(
+        self, prompt: Sequence[int], max_new_tokens: int, now: float = 0.0
+    ) -> Request:
+        req = Request(
+            rid=self._next_rid,
+            prompt=list(prompt),
+            max_new_tokens=int(max_new_tokens),
+            submit_time=now,
+        )
+        self._next_rid += 1
+        self._requests[req.rid] = req
+        self._queue.append(req)
+        return req
+
+    def admit(self) -> list[Request]:
+        """Move queued requests into free slots (FIFO, lowest slot first).
+
+        Returns the newly admitted requests, now in PREFILL state; the
+        engine must prefill each and call :meth:`start_decode`.
+        """
+        admitted = []
+        for slot in range(self.n_slots):
+            if not self._queue:
+                break
+            if self._slots[slot] is not None:
+                continue
+            req = self._queue.popleft()
+            req.state = RequestState.PREFILL
+            req.slot = slot
+            self._slots[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def start_decode(self, req: Request) -> None:
+        assert req.state is RequestState.PREFILL, req.state
+        req.state = RequestState.DECODE
+
+    # -- token accounting / eviction ---------------------------------------
+
+    def record_token(
+        self, req: Request, token: int, eos_token: int, now: float = 0.0
+    ) -> bool:
+        """Append one generated token; evict on EOS / length.  True if done.
+
+        ``eos_token < 0`` (the default -1) disables early stopping — real
+        token ids are non-negative, so -1 can never match.
+        """
+        assert req.state is RequestState.DECODE, req.state
+        if req.first_token_time is None:
+            req.first_token_time = now
+        req.output.append(int(token))
+        if eos_token >= 0 and int(token) == eos_token:
+            self.evict(req, "eos", now)
+            return True
+        if len(req.output) >= req.max_new_tokens:
+            self.evict(req, "length", now)
+            return True
+        return False
+
+    def evict(self, req: Request, reason: str, now: float = 0.0) -> None:
+        assert req.slot is not None
+        self._slots[req.slot] = None
+        req.state = RequestState.DONE
+        req.done_reason = reason
+        req.done_time = now
+
+    # -- views --------------------------------------------------------------
+
+    def active(self) -> list[Request]:
+        """Requests currently decoding, in slot order."""
+        return [
+            r
+            for r in self._slots
+            if r is not None and r.state is RequestState.DECODE
+        ]
+
+    def occupancy(self) -> float:
+        return sum(r is not None for r in self._slots) / self.n_slots
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(
+            r is not None for r in self._slots
+        )
+
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+    def all_requests(self) -> list[Request]:
+        """Every request ever submitted, in submission (rid) order."""
+        return [self._requests[rid] for rid in sorted(self._requests)]

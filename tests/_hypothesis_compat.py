@@ -1,0 +1,98 @@
+"""`hypothesis` if installed, else a tiny deterministic fallback sampler.
+
+Tier-1 must collect and run on a bare container without the `hypothesis`
+wheel.  When the real library is present we re-export it untouched; when it
+is missing we provide just the surface the suite uses — ``given`` /
+``settings`` decorators and the ``integers`` / ``floats`` / ``sampled_from``
+strategies — drawing examples from a ``random.Random`` seeded by the test's
+qualified name, so every run of the fallback explores the same examples
+(reproducible failures, no flake).
+
+Usage in test modules:
+
+    from _hypothesis_compat import hypothesis, st
+"""
+
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # fallback sampler
+    import functools
+    import inspect
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    def _integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: rng.choice(items))
+
+    st = types.SimpleNamespace(
+        integers=_integers, floats=_floats, sampled_from=_sampled_from
+    )
+
+    def _settings(deadline=None, max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            # like real hypothesis, positional strategies fill the RIGHTMOST
+            # parameters (the leftmost ones may be pytest fixtures)
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            pos_names = (
+                names[len(names) - len(pos_strategies):]
+                if pos_strategies else []
+            )
+            strategies = dict(zip(pos_names, pos_strategies), **kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_fallback_max_examples", 10)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {
+                        k: s.example(rng) for k, s in strategies.items()
+                    }
+                    fn(*args, **kwargs, **drawn)
+
+            # hide strategy-filled params from pytest's fixture resolution:
+            # wraps() copies __wrapped__, making inspect.signature report the
+            # original params, which pytest would then request as fixtures
+            del wrapper.__wrapped__
+            params = [
+                p for p in sig.parameters.values()
+                if p.name not in strategies
+            ]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco
+
+    hypothesis = types.SimpleNamespace(
+        given=_given, settings=_settings, strategies=st
+    )
+
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

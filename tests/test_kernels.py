@@ -5,12 +5,11 @@ paths are compared bit-exactly (binary agreement / identical levels), and
 deterministic paths with f32-matmul tolerances.
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.analog import AnalogConfig
 from repro.core.physics import DeviceParams, calibrate_v_read

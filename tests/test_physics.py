@@ -1,11 +1,10 @@
 """Unit + property tests for the device physics (paper Eq. 1-7, 13)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import crossbar, physics
 

@@ -1,0 +1,243 @@
+"""Continuous-batching serving engine: scheduler lifecycle, engine
+equivalence with the static reference, and the WTA vote-concentration
+property (paper Fig. 6) at the serving layer."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch import specs as SP
+from repro.models import get_model_fns
+from repro.serving import (
+    RequestState,
+    Scheduler,
+    ServeConfig,
+    ServingEngine,
+    StaticServingEngine,
+    left_pad,
+)
+
+# ---------------------------------------------------------------------------
+# Scheduler (pure host logic, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_admission_order():
+    s = Scheduler(n_slots=2)
+    rids = [s.submit([1], 4).rid for _ in range(4)]
+    admitted = s.admit()
+    assert [r.rid for r in admitted] == rids[:2]
+    assert [r.slot for r in admitted] == [0, 1]
+    assert all(r.state is RequestState.PREFILL for r in admitted)
+    assert s.queued() == 2
+    # no free slot -> nothing admitted
+    assert s.admit() == []
+    # free slot 1 -> the NEXT queued rid goes there (FIFO, not LIFO)
+    admitted[1].state = RequestState.DECODE
+    s.evict(admitted[1], "length")
+    refill = s.admit()
+    assert [r.rid for r in refill] == [rids[2]]
+    assert refill[0].slot == 1
+
+
+def test_slot_refill_after_eos_eviction():
+    s = Scheduler(n_slots=1)
+    a = s.submit([1, 2], max_new_tokens=8)
+    b = s.submit([3], max_new_tokens=8)
+    (req,) = s.admit()
+    assert req is a
+    s.start_decode(req)
+    assert s.record_token(req, 5, eos_token=5) is True
+    assert a.state is RequestState.DONE
+    assert a.done_reason == "eos"
+    assert a.output == [5]
+    # the freed slot is immediately refillable by the next queued request
+    (req2,) = s.admit()
+    assert req2 is b and req2.slot == 0
+    assert s.occupancy() == 1.0
+
+
+def test_left_pad_alignment():
+    assert left_pad([1, 2], 5) == [0, 0, 0, 1, 2]
+    assert left_pad([1, 2, 3], 3) == [1, 2, 3]
+    assert left_pad([], 2) == [0, 0]
+    with pytest.raises(ValueError):
+        left_pad([1, 2, 3], 2)
+
+
+def test_eos_negative_never_stops_early():
+    """eos_token=-1 (the default) must never match a real token id —
+    including token 0, the pad id."""
+    s = Scheduler(n_slots=1)
+    req = s.submit([1], max_new_tokens=4)
+    s.admit()
+    s.start_decode(req)
+    for tok in (0, -0, 7, 0):
+        done = s.record_token(req, tok, eos_token=-1)
+    assert done is True
+    assert req.done_reason == "length"
+    assert req.output == [0, 0, 7, 0]
+
+
+def test_scheduler_views():
+    s = Scheduler(n_slots=4)
+    assert not s.has_work()
+    r = s.submit([1], 2)
+    assert s.has_work() and s.occupancy() == 0.0
+    s.admit()
+    s.start_decode(r)
+    assert s.occupancy() == 0.25
+    assert s.active() == [r]
+    s.record_token(r, 1, eos_token=-1)
+    s.record_token(r, 1, eos_token=-1)
+    assert not s.has_work()
+    assert s.all_requests() == [r]
+
+
+# ---------------------------------------------------------------------------
+# Engine (smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("stablelm-3b")
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_static_vs_continuous_byte_identical(smoke):
+    """With matching padded prompt windows (prompt lengths on the single
+    prefill bucket boundary == the static batch max), greedy decoding must
+    be byte-identical between the old static path and the scheduler."""
+    cfg, params = smoke
+    prompts = [
+        [5, 6, 7, 1, 2, 3, 4, 9],
+        [1, 2, 3],          # mixed length: both engines left-pad to 8
+        [9, 8, 7, 6, 5, 4, 3, 2],
+    ]
+    sc = ServeConfig(
+        max_batch=3, max_new_tokens=6, max_len=64, prefill_buckets=(8,)
+    )
+    cont = ServingEngine(params, cfg, sc)
+    stat = StaticServingEngine(params, cfg, sc)
+    for p in prompts:
+        cont.submit(p)
+        stat.submit(p)
+    assert cont.step() == stat.step()
+
+
+def test_mid_flight_slot_refill(smoke):
+    """More requests than slots: the queue drains through freed slots and
+    every request still completes with its full budget."""
+    cfg, params = smoke
+    eng = ServingEngine(
+        params, cfg, ServeConfig(max_batch=2, max_new_tokens=3, max_len=32)
+    )
+    rids = [eng.submit([3 + i, 7], max_new_tokens=3) for i in range(5)]
+    outs = eng.run()
+    assert sorted(outs) == rids
+    assert all(len(outs[r]) == 3 for r in rids)
+    m = eng.metrics()
+    assert m.completed == 5
+    assert m.prefills == 5
+    assert 0.0 < m.occupancy_mean <= 1.0
+    assert m.tokens_per_s > 0
+    assert m.ttft_mean > 0
+
+
+def test_engine_eos_never_stops_early(smoke):
+    cfg, params = smoke
+    eng = ServingEngine(
+        params, cfg,
+        ServeConfig(max_batch=2, max_new_tokens=4, max_len=32, eos_token=-1),
+    )
+    eng.submit([5, 6, 7])
+    (out,) = eng.step()
+    assert len(out) == 4
+
+
+def test_engine_eos_evicts_and_truncates(smoke):
+    """Learn what the model emits greedily, then declare that token EOS —
+    the request must stop at it and the engine must stay healthy."""
+    cfg, params = smoke
+    probe = ServingEngine(
+        params, cfg, ServeConfig(max_batch=1, max_new_tokens=4, max_len=32)
+    )
+    probe.submit([5, 6, 7])
+    (ref,) = probe.step()
+    eos = ref[1]  # stop on the second emitted token
+    eng = ServingEngine(
+        params, cfg,
+        ServeConfig(max_batch=1, max_new_tokens=4, max_len=32, eos_token=eos),
+    )
+    eng.submit([5, 6, 7])
+    eng.submit([5, 6, 7])  # refills the slot after the eviction
+    outs = eng.step()
+    assert len(outs) == 2
+    for out in outs:
+        assert out == ref[: ref.index(eos) + 1]
+    done = eng.sched.all_requests()
+    assert all(r.done_reason == "eos" for r in done)
+
+
+def test_per_request_sampling_invariant_to_batch_composition(smoke):
+    """Per-slot PRNG keys: a WTA-sampled request emits the same tokens
+    whether it runs alone or alongside other requests."""
+    cfg, params = smoke
+    wcfg = dataclasses.replace(cfg, wta_head=True)
+    sc = ServeConfig(max_batch=3, max_new_tokens=4, max_len=32, seed=11)
+    solo = ServingEngine(params, wcfg, sc)
+    rid_solo = solo.submit([5, 6, 7])
+    out_solo = solo.run()[rid_solo]
+
+    crowd = ServingEngine(params, wcfg, sc)
+    rid = crowd.submit([5, 6, 7])  # same rid 0 -> same per-request key
+    crowd.submit([1, 2, 3, 4])
+    crowd.submit([9])
+    out_crowd = crowd.run()[rid]
+    assert out_solo == out_crowd
+
+
+# ---------------------------------------------------------------------------
+# WTA majority-vote concentration (paper Fig. 6 at the serving layer)
+# ---------------------------------------------------------------------------
+
+
+def test_wta_vote_concentration_with_trials(smoke):
+    """As the trial count T grows, the majority vote concentrates on the
+    argmax token — the paper's accuracy-recovery mechanism, exercised
+    through the serving sampler (`sample_tokens`) with per-slot keys."""
+    cfg, _ = smoke
+    z = jnp.asarray(
+        [0.0, -0.5, 0.3, 2.0, 0.8, -1.0, 0.5, -0.2,
+         0.1, -0.8, 0.4, 0.0, -0.3, 0.6, -0.6, 0.2],
+        jnp.float32,
+    )
+    target = int(jnp.argmax(z))
+    n_samples = 256
+    logits = jnp.broadcast_to(z, (n_samples, z.shape[0]))
+    base = jax.random.PRNGKey(123)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(n_samples)
+    )
+    steps = jnp.zeros((n_samples,), jnp.int32)
+
+    rates = {}
+    for trials in (1, 16, 256):
+        wcfg = dataclasses.replace(
+            cfg,
+            wta_head=True,
+            analog=dataclasses.replace(cfg.analog, wta_trials=trials),
+        )
+        toks = SP.sample_tokens(wcfg, logits, keys, steps)
+        rates[trials] = float(jnp.mean(toks == target))
+    # monotone concentration (with sampling slack) ... Fig. 6 mechanism
+    assert rates[16] > rates[1] - 0.05
+    assert rates[256] > rates[16] - 0.05
+    assert rates[256] > 0.9, rates
+    assert rates[256] > rates[1] + 0.1, rates

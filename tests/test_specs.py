@@ -1,0 +1,130 @@
+"""Shape contracts for the serving specs layer: `decode_cache_specs`,
+`make_serve_step`, and the slot-addressable cache insert.  Cache-layout
+refactors must fail HERE, loudly, instead of surfacing as silent XLA
+recompiles or wrong-slot writes in the serving engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.shapes import ShapeSpec
+from repro.launch import specs as SP
+
+B, S = 4, 32
+DSHAPE = ShapeSpec("d", S, B, "decode")
+
+
+def _tree_specs(tree):
+    return jax.tree.map(lambda l: (tuple(l.shape), jnp.dtype(l.dtype)), tree)
+
+
+@pytest.mark.parametrize(
+    "arch", ["stablelm-3b", "recurrentgemma-2b", "mamba2-1.3b"]
+)
+def test_decode_cache_batch_axis_contract(arch):
+    """Every cache leaf carries the request/slot axis where
+    `cache_batch_axis` says it is — the invariant slot insertion needs."""
+    cfg = get_smoke_config(arch)
+    specs = SP.decode_cache_specs(cfg, DSHAPE)
+    assert "pos" in specs
+    assert specs["pos"].shape == (B,)
+    assert specs["pos"].dtype == jnp.int32
+    for name, leaf in specs.items():
+        ax = SP.cache_batch_axis(cfg, name)
+        assert leaf.shape[ax] == B, (arch, name, leaf.shape, ax)
+
+
+def test_decode_cache_attn_layout():
+    cfg = get_smoke_config("stablelm-3b")
+    specs = SP.decode_cache_specs(cfg, DSHAPE)
+    n_attn = sum(1 for k in cfg.layer_pattern if k in ("global", "local"))
+    want = (cfg.n_units, n_attn, B, S, cfg.n_kv_heads, cfg.head_dim)
+    assert specs["k"].shape == want
+    assert specs["v"].shape == want
+
+
+def test_init_decode_cache_matches_specs():
+    cfg = get_smoke_config("stablelm-3b")
+    live = SP.init_decode_cache(cfg, B, S)
+    assert _tree_specs(live) == _tree_specs(SP.decode_cache_specs(cfg, DSHAPE))
+
+
+@pytest.mark.parametrize("wta", [False, True])
+def test_serve_step_shape_contract(wta):
+    """(params, cache, token(B,)) -> (cache, token(B,)): the output cache
+    must have exactly the input cache's specs (donation + no recompile)."""
+    cfg = dataclasses.replace(get_smoke_config("stablelm-3b"), wta_head=wta)
+    ps = SP.params_specs(cfg)
+    cs = SP.decode_cache_specs(cfg, DSHAPE)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    step = SP.make_serve_step(cfg)
+    out_cache, out_tok = jax.eval_shape(step, ps, cs, tok)
+    assert _tree_specs(out_cache) == _tree_specs(cs)
+    assert out_tok.shape == (B,)
+    assert out_tok.dtype == jnp.int32
+
+
+def test_serve_step_per_slot_key_contract():
+    """Per-slot PRNG path: keys (B, 2) + step counters (B,) keep the same
+    (cache, token) output contract."""
+    cfg = dataclasses.replace(get_smoke_config("stablelm-3b"), wta_head=True)
+    ps = SP.params_specs(cfg)
+    cs = SP.decode_cache_specs(cfg, DSHAPE)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    keys = jax.ShapeDtypeStruct((B, 2), jnp.uint32)
+    steps = jax.ShapeDtypeStruct((B,), jnp.int32)
+    out_cache, out_tok = jax.eval_shape(
+        SP.make_serve_step(cfg), ps, cs, tok, keys, steps
+    )
+    assert _tree_specs(out_cache) == _tree_specs(cs)
+    assert out_tok.shape == (B,)
+
+
+def test_cache_insert_writes_only_the_target_slot():
+    cfg = get_smoke_config("stablelm-3b")
+    batch_cache = SP.init_decode_cache(cfg, B, S)
+    one = jax.tree.map(
+        lambda l: jnp.full_like(l, 7), SP.init_decode_cache(cfg, 1, S)
+    )
+    insert = jax.jit(SP.make_cache_insert(cfg))
+    out = insert(batch_cache, one, 2)
+    assert _tree_specs(out) == _tree_specs(batch_cache)
+    for name, leaf in out.items():
+        ax = SP.cache_batch_axis(cfg, name)
+        arr = np.moveaxis(np.asarray(leaf, np.float32), ax, 0)
+        np.testing.assert_array_equal(arr[2], 7)
+        np.testing.assert_array_equal(arr[[0, 1, 3]], 0)
+
+
+def test_cache_insert_slot_index_is_traced():
+    """One compile serves every slot index — insertion must not specialize
+    on the slot value (that would recompile per refill)."""
+    cfg = get_smoke_config("stablelm-3b")
+    batch_cache = SP.init_decode_cache(cfg, B, S)
+    one = SP.init_decode_cache(cfg, 1, S)
+    insert = jax.jit(SP.make_cache_insert(cfg))
+    for slot in range(B):
+        insert(batch_cache, one, slot)
+    ntraces = insert._cache_size()
+    assert ntraces == 1, f"cache insert recompiled {ntraces}x across slots"
+
+
+def test_sample_tokens_greedy_and_legacy_key():
+    cfg = get_smoke_config("stablelm-3b")
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, cfg.vocab))
+    toks = SP.sample_tokens(cfg, logits)  # no key -> argmax
+    np.testing.assert_array_equal(
+        np.asarray(toks), np.asarray(jnp.argmax(logits, axis=-1))
+    )
+    # wta off: a provided key must be ignored
+    toks2 = SP.sample_tokens(cfg, logits, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
+    # legacy single-key WTA path still returns (B,) int32
+    wcfg = dataclasses.replace(cfg, wta_head=True)
+    toks3 = SP.sample_tokens(wcfg, logits, jax.random.PRNGKey(1))
+    assert toks3.shape == (B,)
+    assert toks3.dtype == jnp.int32

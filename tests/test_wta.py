@@ -1,10 +1,9 @@
 """WTA binary stochastic SoftMax neurons (paper §III-B, Fig. 5)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import wta
 
