@@ -35,7 +35,10 @@ def main() -> None:
     failed = False
     for tag, mod in mods:
         try:
-            for name, us, derived in mod.run():
+            out = mod.run()
+            # bench_serving returns (rows, machine-readable report)
+            rows = out[0] if isinstance(out, tuple) else out
+            for name, us, derived in rows:
                 print(f"{tag}/{name},{us:.1f},{derived}")
                 sys.stdout.flush()
         except Exception:

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the RACA hot spots.
 
-crossbar_mac — fused quantize→MAC→thermal-noise→comparator (the paper's core)
-wta_kernel   — multi-trial WTA vote counting (SoftMax neuron readout)
-stoch_round  — stochastic-rounding quantizer (conductance programming;
-               reused for optimizer-state rounding and grad compression)
+crossbar_mac    — fused quantize→MAC→thermal-noise→comparator (paper core)
+wta_kernel      — multi-trial WTA vote counting (SoftMax neuron readout)
+stoch_round     — stochastic-rounding quantizer (conductance programming;
+                  reused for optimizer-state rounding and grad compression)
+paged_attention — serving decode: block-table gather + online-softmax over
+                  a paged KV cache (scalar-prefetched table drives the DMA)
 
 Validated bit-exactly against the pure-jnp oracles in ref.py (shared
 counter-based PRNG, see prng.py).  ops.py holds the public jit'd wrappers.

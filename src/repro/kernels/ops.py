@@ -289,6 +289,44 @@ def wta_counts_reference(
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (serving decode path).
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: jax.Array,        # (B, H, Dh)
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh)
+    v_pages: jax.Array,
+    table: jax.Array,    # (B, W) int32
+    pos: jax.Array,      # (B,) int32
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Block-table decode attention: compiled Pallas kernel on TPU, the
+    pure-jnp oracle elsewhere.
+
+    Unlike the crossbar kernels, the off-TPU fallback is the oracle rather
+    than interpret-mode emulation: this sits in the serving engine's
+    per-token hot loop, where interpret mode would bury the very latency
+    the paged layout removes.  Kernel-vs-oracle agreement is pinned by
+    tests/test_kernels.py (interpret mode on small shapes)."""
+    from . import paged_attention as _pa
+
+    if jax.default_backend() != "tpu":
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, table, pos,
+            kind=kind, local_window=local_window, softcap=softcap,
+        )
+    return _pa.paged_attention_pallas(
+        q, k_pages, v_pages, table, pos,
+        kind=kind, local_window=local_window, softcap=softcap,
+        interpret=False,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Stochastic rounding.
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,177 @@
+"""Paged-attention decode kernel: block-table gather + online-softmax.
+
+Serving-side analogue of the paper's memory-path restructuring (removing
+the DAC/ADC round-trips): the decode hot spot is not the MAC but the HBM
+traffic of re-reading a dense (max_len,) KV window per emitted token.  This
+kernel attends over exactly the blocks a request has filled:
+
+  * the block table (scalar-prefetched into SMEM) drives the BlockSpec
+    index_map, so each grid step DMAs ONE (block_size,) KV page from HBM —
+    pages the request never touched are never fetched;
+  * the flash-attention recurrence (running max / denom / accumulator)
+    lives in VMEM scratch across the sequential block axis;
+  * blocks entirely beyond the request's position are skipped via pl.when.
+
+Grid: (B, W) with W = table width (blocks per slot), W innermost and
+sequential — the accumulator carries across a slot's blocks.
+
+The pure-jnp oracle is kernels/ref.py:paged_attention_ref; CPU tests run
+this kernel in interpret mode (see compat.py) and the serving engine off
+TPU uses the gather + shared-attend jnp path in models/attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams as _CompilerParams
+
+NEG_INF = -2.0e38
+
+
+def _kernel(
+    tbl_ref,   # (B, W) int32 SMEM (scalar prefetch): block table
+    pos_ref,   # (B,) int32 SMEM (scalar prefetch): last valid position
+    q_ref,     # (1, H, Dh) f32
+    k_ref,     # (1, bs, Hkv, Dh) f32 — page tbl[b, w]
+    v_ref,     # (1, bs, Hkv, Dh) f32
+    o_ref,     # (1, H, Dh) f32
+    m_ref,     # (Hkv, G) f32 VMEM scratch: running max
+    l_ref,     # (Hkv, G) f32 VMEM scratch: running denominator
+    acc_ref,   # (Hkv, G, Dh) f32 VMEM scratch: weighted-value accumulator
+    *,
+    nw: int,
+    bs: int,
+    hkv: int,
+    kind: str,
+    local_window: int,
+    softcap: float,
+):
+    b = pl.program_id(0)
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = pos_ref[b]
+
+    # A block whose first position is beyond ``pos`` holds no valid keys:
+    # skip its DMA'd page entirely (compute AND accumulator update).
+    @pl.when(w * bs <= p)
+    def _block():
+        q = q_ref[0]                       # (H, Dh)
+        h, dh = q.shape
+        g = h // hkv
+        qg = q.reshape(hkv, g, dh).astype(jnp.float32) * jnp.float32(
+            dh**-0.5
+        )
+        k = k_ref[0].astype(jnp.float32)   # (bs, Hkv, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        sc = jnp.einsum(
+            "kgd,tkd->kgt", qg, k, preferred_element_type=jnp.float32
+        )
+        if softcap > 0.0:
+            sc = jnp.tanh(sc / jnp.float32(softcap)) * jnp.float32(softcap)
+        kpos = (
+            jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+            + w * bs
+        )
+        ok = kpos <= p
+        if kind == "local":
+            ok &= kpos > (p - local_window)
+        sc = sc + jnp.where(ok, 0.0, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(sc - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+            "kgt,tkd->kgd", pexp, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(w == nw - 1)
+    def _readout():
+        _, h, dh = o_ref.shape
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(h, dh)
+
+
+def paged_attention_pallas(
+    q: jax.Array,        # (B, H, Dh) f32 — one query token per slot
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) f32 block pool
+    v_pages: jax.Array,
+    table: jax.Array,    # (B, W) int32 page ids; <0 treated as page 0
+    pos: jax.Array,      # (B,) int32 last valid key position per slot
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool | object = False,
+) -> jax.Array:
+    """Returns the (B, H, Dh) attention readout over each slot's blocks."""
+    b, h, dh = q.shape
+    n_pages, bs, hkv, dh2 = k_pages.shape
+    assert dh == dh2 and h % hkv == 0, (q.shape, k_pages.shape)
+    nw = table.shape[1]
+    kern = functools.partial(
+        _kernel,
+        nw=nw,
+        bs=bs,
+        hkv=hkv,
+        kind=kind,
+        local_window=local_window,
+        softcap=softcap,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nw),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda bi, wi, tbl, ps: (bi, 0, 0)),
+            pl.BlockSpec(
+                (1, bs, hkv, dh),
+                lambda bi, wi, tbl, ps: (
+                    jnp.maximum(tbl[bi, wi], 0), 0, 0, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, bs, hkv, dh),
+                lambda bi, wi, tbl, ps: (
+                    jnp.maximum(tbl[bi, wi], 0), 0, 0, 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, h, dh), lambda bi, wi, tbl, ps: (bi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, h // hkv), jnp.float32),
+            pltpu.VMEM((hkv, h // hkv), jnp.float32),
+            pltpu.VMEM((hkv, h // hkv, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            # W must stay sequential (the scratch accumulator carries across
+            # a slot's blocks); B revisits scratch only after a full W sweep.
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(
+        table.astype(jnp.int32),
+        pos.astype(jnp.int32),
+        q.astype(jnp.float32),
+        k_pages.astype(jnp.float32),
+        v_pages.astype(jnp.float32),
+    )

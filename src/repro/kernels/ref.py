@@ -98,6 +98,51 @@ def wta_counts_ref(
     )
 
 
+def paged_attention_ref(
+    q: jax.Array,        # (B, H, Dh)
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh)
+    v_pages: jax.Array,
+    table: jax.Array,    # (B, W) int32 page ids; <0 treated as page 0
+    pos: jax.Array,      # (B,) int32 last valid key position
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Oracle for paged_attention_pallas: gather the table's blocks into a
+    contiguous (W·bs) window, then masked full-softmax attention.  Block i
+    holds logical positions [i·bs, (i+1)·bs); positions beyond ``pos`` (and
+    outside the local window) get NEG_INF scores — exactly zero probability
+    in f32."""
+    neg_inf = jnp.float32(-2.0e38)
+    b, h, dh = q.shape
+    _, bs, hkv, _ = k_pages.shape
+    g = h // hkv
+    kb = k_pages[jnp.maximum(table, 0)].reshape(b, -1, hkv, dh)
+    vb = v_pages[jnp.maximum(table, 0)].reshape(b, -1, hkv, dh)
+    t = kb.shape[1]
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32) * jnp.float32(
+        dh**-0.5
+    )
+    sc = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, kb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if softcap > 0.0:
+        sc = jnp.tanh(sc / jnp.float32(softcap)) * jnp.float32(softcap)
+    kpos = jnp.arange(t)[None]
+    ok = kpos <= pos[:, None]
+    if kind == "local":
+        ok &= kpos > (pos[:, None] - local_window)
+    sc = sc + jnp.where(ok, 0.0, neg_inf)[:, None, None, :]
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd", w, vb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, h, dh)
+
+
 def stoch_round_ref(
     x: jax.Array,
     seed: jax.Array,

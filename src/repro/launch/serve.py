@@ -33,6 +33,14 @@ def main() -> None:
                     help="static-batch reference engine (no slot refill)")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots (continuous-batching batch width)")
+    ap.add_argument("--kv-layout", choices=("paged", "dense"),
+                    default="paged",
+                    help="KV cache layout: paged block pool (default) or "
+                         "the dense per-slot max_len oracle")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV block (paged layout)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="pool size in blocks; 0 = dense-parity capacity")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -55,6 +63,9 @@ def main() -> None:
             max_batch=args.slots,
             max_new_tokens=args.new_tokens,
             max_len=args.max_len,
+            kv_layout=args.kv_layout,
+            kv_block_size=args.kv_block_size,
+            num_kv_blocks=args.kv_blocks,
         ),
     )
     rng = jax.random.PRNGKey(7)

@@ -71,6 +71,23 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return TF.init_decode_cache(cfg, batch, max_len)
 
 
+def init_paged_decode_cache(
+    cfg: ModelConfig, batch: int, n_pages: int, block_size: int
+) -> dict:
+    """Concrete paged decode cache (shared block pool + per-slot states)."""
+    if cfg.family == "encdec":
+        raise ValueError("paged KV cache is token-LM only (no encdec)")
+    return TF.init_paged_decode_cache(cfg, batch, n_pages, block_size)
+
+
+def paged_decode_cache_specs(
+    cfg: ModelConfig, batch: int, n_pages: int, block_size: int
+) -> dict:
+    return jax.eval_shape(
+        lambda: init_paged_decode_cache(cfg, batch, n_pages, block_size)
+    )
+
+
 def cache_batch_axis(cfg: ModelConfig, leaf_name: str) -> int:
     """Which axis of a decode-cache leaf is the request/slot axis.
 
@@ -99,6 +116,47 @@ def make_cache_insert(cfg: ModelConfig):
             out[name] = jax.lax.dynamic_update_slice_in_dim(
                 leaf, upd, slot, axis=cache_batch_axis(cfg, name)
             )
+        return out
+
+    return insert
+
+
+def make_paged_cache_insert(cfg: ModelConfig):
+    """Insert one request's prefill cache into the paged batch cache.
+
+    (paged_cache, one_cache(B=1, len=L·), slot int32, table_row int32) →
+    paged_cache.  The one-request cache comes out of the ordinary dense
+    prefill, built at a window already padded to a block multiple; its
+    K/V are reshaped into blocks and scattered to the pages named by the
+    first ``L/block_size`` entries of ``table_row``.  Dense per-slot leaves
+    (pos, recurrent/SSM states) use the slot-addressable update.  Slot and
+    page ids are traced, so one compile per prefill bucket serves every
+    (slot, page set) of a live batch.
+    """
+
+    def insert(
+        batch_cache: dict, one_cache: dict, slot, table_row
+    ) -> dict:
+        out = {}
+        for name, leaf in batch_cache.items():
+            if name in ("k_pages", "v_pages"):
+                src = one_cache[name[0]]  # dense "k"/"v": (nu,na,1,L,Hkv,Dh)
+                nu, na, _, lpad, hkv, dh = src.shape
+                bs = leaf.shape[3]
+                assert lpad % bs == 0, (
+                    f"prefill window {lpad} not a multiple of the KV block "
+                    f"size {bs}"
+                )
+                nb = lpad // bs
+                blocks = src[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
+                out[name] = leaf.at[:, :, table_row[:nb]].set(
+                    blocks.astype(leaf.dtype)
+                )
+            else:
+                upd = one_cache[name].astype(leaf.dtype)
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, upd, slot, axis=cache_batch_axis(cfg, name)
+                )
         return out
 
     return insert
@@ -167,6 +225,26 @@ def make_serve_step(cfg: ModelConfig):
 
     def serve_step(params, cache, token, key=None, steps=None):
         cache, logits = fns.decode_step(params, cache, token, cfg)
+        return cache, sample_tokens(cfg, logits, key, steps)
+
+    return serve_step
+
+
+def make_paged_serve_step(cfg: ModelConfig):
+    """One decode step over a paged cache:
+    (params, cache, table(B,W), token(B,)) -> (cache, token).
+
+    ``table`` is the host scheduler's block table, sliced to the current
+    window of W blocks — the only width the step touches, which is where
+    the O(max_len) → O(valid blocks) decode saving comes from.  Each
+    distinct W is one retrace of the same jit (the engine buckets W to a
+    power of two, so compiles stay logarithmic in max_len).  ``key`` /
+    ``steps`` follow the :func:`sample_tokens` contract."""
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+
+    def serve_step(params, cache, table, token, key=None, steps=None):
+        cache, logits = TF.lm_decode_step(params, cache, token, cfg, table)
         return cache, sample_tokens(cfg, logits, key, steps)
 
     return serve_step

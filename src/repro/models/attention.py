@@ -283,6 +283,58 @@ def quantize_kv(x: jax.Array):
     return q.astype(jnp.int8), scale
 
 
+def attend_one_token(
+    q: jax.Array,        # (B, 1, H, Dh), RoPE already applied
+    k_buf: jax.Array,    # (B, T, Hkv, Dh)  bf16/f32 or int8
+    v_buf: jax.Array,
+    pos: jax.Array,      # (B,) int32 — last valid key position
+    cfg: ModelConfig,
+    kind: str = "global",
+    k_scale: Optional[jax.Array] = None,  # (B, T, Hkv) for int8 buffers
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Single-token attention readout over a contiguous KV window.
+
+    Shared by the dense decode path (k_buf = the per-slot max_len cache) and
+    the paged decode path (k_buf = the blocks gathered through the block
+    table) — using the *same* einsum/softmax computation on both is what
+    makes dense-vs-paged greedy decode byte-identical.  Key positions beyond
+    ``pos`` contribute exactly-zero probability (NEG_INF scores underflow to
+    0 in the softmax), so a longer window only appends exact zeros.
+
+    Returns the (B, 1, H*Dh) attention output before the w_o projection.
+    """
+    b = q.shape[0]
+    int8_cache = k_buf.dtype == jnp.int8
+    t = k_buf.shape[1]
+    hkv = cfg.n_kv_heads
+    cdt = (
+        jnp.bfloat16 if int8_cache else jnp.dtype(cfg.attn_probs_dtype)
+    )
+    qg = _group(q, hkv).astype(cdt) * jnp.asarray(cfg.head_dim**-0.5, cdt)
+    sc = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k_buf.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    if int8_cache:
+        sc = sc * (k_scale.transpose(0, 2, 1) / 127.0)[:, :, None, None, :]
+    if cfg.attn_softcap > 0.0:
+        sc = softcap(sc, cfg.attn_softcap)
+    kpos = jnp.arange(t)[None]
+    ok = kpos <= pos[:, None]
+    if kind == "local":
+        ok &= kpos > (pos[:, None] - cfg.local_window)
+    sc = sc + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    w = jax.nn.softmax(sc, axis=-1)
+    if int8_cache:
+        w = w * (v_scale.transpose(0, 2, 1) / 127.0)[:, :, None, None, :]
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", w.astype(cdt), v_buf.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, -1)
+
+
 def decode_self_attention(
     p: dict,
     x: jax.Array,            # (B, 1, D)
@@ -300,7 +352,6 @@ def decode_self_attention(
     Returns (out, k_cache, v_cache[, k_scale, v_scale]).  Cache reads use
     mixed-precision einsums (operands stay in cache dtype, f32 MXU
     accumulation) — no full-cache f32 casts."""
-    b = x.shape[0]
     int8_cache = k_cache.dtype == jnp.int8
     q, k, v = qkv(p, x, cfg, None)
     if use_rope:
@@ -324,34 +375,95 @@ def decode_self_attention(
     else:
         k_cache = _write_at(k_cache, k, pos)
         v_cache = _write_at(v_cache, v, pos)
-    t = k_cache.shape[1]
-    hkv = cfg.n_kv_heads
-    cdt = (
-        jnp.bfloat16 if int8_cache else jnp.dtype(cfg.attn_probs_dtype)
-    )
-    qg = _group(q, hkv).astype(cdt) * jnp.asarray(cfg.head_dim**-0.5, cdt)
-    sc = jnp.einsum(
-        "bskgd,btkd->bkgst", qg, k_cache.astype(cdt),
-        preferred_element_type=jnp.float32,
-    )
-    if int8_cache:
-        sc = sc * (k_scale.transpose(0, 2, 1) / 127.0)[:, :, None, None, :]
-    if cfg.attn_softcap > 0.0:
-        sc = softcap(sc, cfg.attn_softcap)
-    kpos = jnp.arange(t)[None]
-    ok = kpos <= pos[:, None]
-    if kind == "local":
-        ok &= kpos > (pos[:, None] - cfg.local_window)
-    sc = sc + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
-    w = jax.nn.softmax(sc, axis=-1)
-    if int8_cache:
-        w = w * (v_scale.transpose(0, 2, 1) / 127.0)[:, :, None, None, :]
-    out = jnp.einsum(
-        "bkgst,btkd->bskgd", w.astype(cdt), v_cache.astype(cdt),
-        preferred_element_type=jnp.float32,
-    )
-    out = out.reshape(b, 1, -1).astype(x.dtype)
+    out = attend_one_token(
+        q, k_cache, v_cache, pos, cfg, kind,
+        k_scale=k_scale, v_scale=v_scale,
+    ).astype(x.dtype)
     o = A.analog_matmul(_proj_cfg(cfg), None, out, p["wo"])
     if int8_cache:
         return o, k_cache, v_cache, k_scale, v_scale
     return o, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged decode path (block-table KV cache).
+# ---------------------------------------------------------------------------
+
+
+def paged_write(
+    pages: jax.Array,   # (P, bs, Hkv, Dh) block pool
+    new: jax.Array,     # (B, 1, Hkv, Dh) this step's K or V rows
+    table: jax.Array,   # (B, W) int32 block table (page ids)
+    pos: jax.Array,     # (B,) int32 logical write position per slot
+) -> jax.Array:
+    """Scatter one token's K/V rows into each slot's current block.
+
+    The target page is ``table[b, pos[b] // bs]``; active slots own disjoint
+    pages so the scatter never collides.  Slots whose table row is all-trash
+    (page 0, the engine's reserved scratch block) write into page 0, which no
+    live request ever reads.  ``pos // bs`` is clamped into the table width
+    so evicted slots whose ``pos`` keeps advancing stay in bounds.
+    """
+    bs = pages.shape[1]
+    blk = jnp.clip(pos // bs, 0, table.shape[1] - 1)
+    page_ids = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
+    page_ids = jnp.maximum(page_ids, 0)  # unassigned (-1) → trash page 0
+    return pages.at[page_ids, pos % bs].set(new[:, 0].astype(pages.dtype))
+
+
+def paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """(P, bs, Hkv, Dh), (B, W) → (B, W·bs, Hkv, Dh) contiguous window.
+
+    Block i of a slot's table holds logical positions [i·bs, (i+1)·bs), so
+    the gathered window is exactly the prefix of the dense per-slot cache —
+    the invariant the dense-vs-paged equivalence tests pin down.
+    """
+    b, w = table.shape
+    _, bs, hkv, dh = pages.shape
+    return pages[jnp.maximum(table, 0)].reshape(b, w * bs, hkv, dh)
+
+
+def paged_decode_self_attention(
+    p: dict,
+    x: jax.Array,        # (B, 1, D)
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — this layer's block pool
+    v_pages: jax.Array,
+    table: jax.Array,    # (B, W) int32 block table (W·bs covers max(pos)+1)
+    pos: jax.Array,      # (B,) int32
+    cfg: ModelConfig,
+    kind: str = "global",
+    use_rope: bool = True,
+):
+    """One-token attention against a paged (block-table) KV cache.
+
+    Writes this step's K/V into each slot's current block, then attends over
+    the W gathered blocks only — O(W·bs) work per token instead of
+    O(max_len).  On TPU the gather+attend runs as the fused Pallas
+    paged-attention kernel (kernels/paged_attention.py); elsewhere it is the
+    pure-jnp gather + the shared :func:`attend_one_token` (bit-identical to
+    the dense path over the valid prefix).
+
+    Returns (out, k_pages, v_pages).
+    """
+    q, k, v = qkv(p, x, cfg, None)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    k_pages = paged_write(k_pages, k, table, pos)
+    v_pages = paged_write(v_pages, v, table, pos)
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops as KOPS
+
+        out = KOPS.paged_attention(
+            q[:, 0], k_pages, v_pages, table, pos,
+            kind=kind,
+            local_window=cfg.local_window,
+            softcap=cfg.attn_softcap,
+        )[:, None].reshape(x.shape[0], 1, -1)
+    else:
+        k_buf = paged_gather(k_pages, table)
+        v_buf = paged_gather(v_pages, table)
+        out = attend_one_token(q, k_buf, v_buf, pos, cfg, kind)
+    out = out.astype(x.dtype)
+    o = A.analog_matmul(_proj_cfg(cfg), None, out, p["wo"])
+    return o, k_pages, v_pages

@@ -265,23 +265,13 @@ def lm_loss(
 # ---------------------------------------------------------------------------
 
 
-def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
-    """Family-appropriate cache pytree with a leading n_units axis."""
+def _state_cache_leaves(cfg: ModelConfig, batch: int) -> dict:
+    """Recurrent/SSM per-slot states — O(1) per token, so they stay dense
+    (slot-addressable) in both the dense and the paged cache layouts."""
     dt = dtype_of(cfg)
     nu = cfg.n_units
-    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
     pat = cfg.layer_pattern
-    n_attn = sum(1 for k in pat if k in ("global", "local"))
-    if n_attn:
-        shape = (nu, n_attn, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-        if cfg.kv_cache_dtype == "int8":
-            cache["k"] = jnp.zeros(shape, jnp.int8)
-            cache["v"] = jnp.zeros(shape, jnp.int8)
-            cache["k_scale"] = jnp.ones(shape[:-1], jnp.float32)
-            cache["v_scale"] = jnp.ones(shape[:-1], jnp.float32)
-        else:
-            cache["k"] = jnp.zeros(shape, dt)
-            cache["v"] = jnp.zeros(shape, dt)
+    cache: dict = {}
     n_rec = sum(1 for k in pat if k == "rec")
     if n_rec:
         w = cfg.lru_width or cfg.d_model
@@ -300,40 +290,115 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return cache
 
 
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Family-appropriate cache pytree with a leading n_units axis."""
+    dt = dtype_of(cfg)
+    nu = cfg.n_units
+    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+    pat = cfg.layer_pattern
+    n_attn = sum(1 for k in pat if k in ("global", "local"))
+    if n_attn:
+        shape = (nu, n_attn, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            cache["k"] = jnp.zeros(shape, jnp.int8)
+            cache["v"] = jnp.zeros(shape, jnp.int8)
+            cache["k_scale"] = jnp.ones(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.ones(shape[:-1], jnp.float32)
+        else:
+            cache["k"] = jnp.zeros(shape, dt)
+            cache["v"] = jnp.zeros(shape, dt)
+    cache.update(_state_cache_leaves(cfg, batch))
+    return cache
+
+
+def init_paged_decode_cache(
+    cfg: ModelConfig, batch: int, n_pages: int, block_size: int
+) -> dict:
+    """Paged-layout cache: a shared pool of fixed-size KV blocks.
+
+    Attention K/V live in (nu, n_attn, n_pages, block_size, Hkv, Dh) pools
+    shared by ALL slots; which pages a slot owns is the engine's block
+    table (host state, passed to the decode step each tick).  Capacity is
+    pooled: n_pages · block_size tokens total, instead of the dense
+    batch · max_len per-slot reservation.  Recurrent/SSM states keep the
+    dense slot layout (they are O(1) per slot).
+    """
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError(
+            "paged KV cache does not support kv_cache_dtype='int8' yet; "
+            "use the dense layout (ServeConfig.kv_layout='dense')"
+        )
+    dt = dtype_of(cfg)
+    nu = cfg.n_units
+    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+    pat = cfg.layer_pattern
+    n_attn = sum(1 for k in pat if k in ("global", "local"))
+    if n_attn:
+        shape = (
+            nu, n_attn, n_pages, block_size, cfg.n_kv_heads, cfg.head_dim
+        )
+        cache["k_pages"] = jnp.zeros(shape, dt)
+        cache["v_pages"] = jnp.zeros(shape, dt)
+    cache.update(_state_cache_leaves(cfg, batch))
+    return cache
+
+
 def _unit_decode(
     x: jax.Array,         # (B,1,D)
     up: dict,
     ucache: dict,
     pos: jax.Array,       # (B,)
     cfg: ModelConfig,
+    table: Optional[jax.Array] = None,  # (B, W) block table (paged cache)
 ) -> tuple[jax.Array, dict]:
     new_cache = dict(ucache)
+    paged = "k_pages" in ucache
     i_attn = i_rec = i_ssm = 0
     for i, kind in enumerate(cfg.layer_pattern):
         sub = up[f"l{i}"]
         if kind in ("global", "local"):
-            int8 = cfg.kv_cache_dtype == "int8"
-            res = ATT.decode_self_attention(
-                sub["attn"],
-                rmsnorm(sub["ln1"], x, cfg.norm_eps),
-                ucache["k"][i_attn],
-                ucache["v"][i_attn],
-                pos,
-                cfg,
-                kind=kind,
-                k_scale=ucache["k_scale"][i_attn] if int8 else None,
-                v_scale=ucache["v_scale"][i_attn] if int8 else None,
-            )
-            a, kc, vc = res[:3]
-            new_cache["k"] = new_cache["k"].at[i_attn].set(kc)
-            new_cache["v"] = new_cache["v"].at[i_attn].set(vc)
-            if int8:
-                new_cache["k_scale"] = (
-                    new_cache["k_scale"].at[i_attn].set(res[3])
+            # attention + cache write is the only paged/dense divergence;
+            # the norm/FFN tail below is shared so the layouts cannot drift
+            if paged:
+                a, kp, vp = ATT.paged_decode_self_attention(
+                    sub["attn"],
+                    rmsnorm(sub["ln1"], x, cfg.norm_eps),
+                    ucache["k_pages"][i_attn],
+                    ucache["v_pages"][i_attn],
+                    table,
+                    pos,
+                    cfg,
+                    kind=kind,
                 )
-                new_cache["v_scale"] = (
-                    new_cache["v_scale"].at[i_attn].set(res[4])
+                new_cache["k_pages"] = (
+                    new_cache["k_pages"].at[i_attn].set(kp)
                 )
+                new_cache["v_pages"] = (
+                    new_cache["v_pages"].at[i_attn].set(vp)
+                )
+            else:
+                int8 = cfg.kv_cache_dtype == "int8"
+                res = ATT.decode_self_attention(
+                    sub["attn"],
+                    rmsnorm(sub["ln1"], x, cfg.norm_eps),
+                    ucache["k"][i_attn],
+                    ucache["v"][i_attn],
+                    pos,
+                    cfg,
+                    kind=kind,
+                    k_scale=ucache["k_scale"][i_attn] if int8 else None,
+                    v_scale=ucache["v_scale"][i_attn] if int8 else None,
+                )
+                a, kc, vc = res[:3]
+                new_cache["k"] = new_cache["k"].at[i_attn].set(kc)
+                new_cache["v"] = new_cache["v"].at[i_attn].set(vc)
+                if int8:
+                    new_cache["k_scale"] = (
+                        new_cache["k_scale"].at[i_attn].set(res[3])
+                    )
+                    new_cache["v_scale"] = (
+                        new_cache["v_scale"].at[i_attn].set(res[4])
+                    )
             i_attn += 1
             if cfg.post_norms:
                 a = rmsnorm(sub["post_ln1"], a, cfg.norm_eps)
@@ -381,15 +446,20 @@ def lm_decode_step(
     cache: dict,
     token: jax.Array,  # (B,) int32 — last emitted token
     cfg: ModelConfig,
+    table: Optional[jax.Array] = None,  # (B, W) block table (paged cache)
 ) -> tuple[dict, jax.Array]:
-    """One decode step; returns (new cache, logits (B,V))."""
+    """One decode step; returns (new cache, logits (B,V)).
+
+    With a paged cache (``k_pages`` leaves + a block ``table``) attention
+    reads/writes go through the block pool; the recurrence is otherwise
+    identical to the dense path."""
     pos = cache["pos"]
     x = embed(params["embed"], token[:, None], cfg)
 
     def body(carry, xs):
         h = carry
         up, uc = xs
-        h, uc_new = _unit_decode(h, up, uc, pos, cfg)
+        h, uc_new = _unit_decode(h, up, uc, pos, cfg, table)
         return h, uc_new
 
     layer_cache = {k: v for k, v in cache.items() if k != "pos"}

@@ -4,9 +4,16 @@ from .engine import (
     ServingMetrics,
     StaticServingEngine,
 )
-from .scheduler import Request, RequestState, Scheduler, left_pad
+from .scheduler import (
+    BlockAllocator,
+    Request,
+    RequestState,
+    Scheduler,
+    left_pad,
+)
 
 __all__ = [
+    "BlockAllocator",
     "ServeConfig",
     "ServingEngine",
     "ServingMetrics",

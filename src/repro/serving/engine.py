@@ -9,11 +9,23 @@ applied to LM decoding; greedy argmax is the digital baseline.
 ``ServingEngine`` is a continuous-batching engine: a slot-based scheduler
 (`repro.serving.scheduler`) admits queued requests into free slots of a
 live decode batch.  Each admission prefills ONE request (prompt left-padded
-to a compile-size bucket) and inserts its cache at the free slot index via a
-jitted ``dynamic_update_slice`` — no recompilation, the decode step keeps
-running for the other slots.  Finished requests (EOS or per-request
-``max_new_tokens``) are evicted and their slot refilled mid-flight, which is
-what lifts slot occupancy over static batching on mixed-length traces.
+to a compile-size bucket) and inserts its cache at the free slot index —
+no recompilation, the decode step keeps running for the other slots.
+Finished requests (EOS or per-request ``max_new_tokens``) are evicted and
+their slot refilled mid-flight, which is what lifts slot occupancy over
+static batching on mixed-length traces.
+
+The KV cache is **paged** by default (``ServeConfig.kv_layout``): a global
+pool of fixed-size blocks plus a per-slot block table, so cache capacity is
+shared across slots and a decode step only touches the blocks a request has
+actually filled — O(blocks·block_size) attention work per token instead of
+O(max_len).  Blocks are taken from a free-list allocator at admission
+(covering the whole prompt+budget, so a request can never starve
+mid-decode), returned at eviction, and pool exhaustion back-pressures
+admission (the queue head waits, FIFO preserved).  ``kv_layout="dense"``
+keeps the PR-1 per-slot ``max_len`` window as the equivalence oracle:
+greedy decode is byte-identical between the two layouts
+(tests/test_serving.py).
 
 WTA sampling stays independent per request: every slot carries the key
 ``fold_in(base_key, rid)`` and a step counter, so a request's vote noise is
@@ -35,7 +47,13 @@ import numpy as np
 
 from repro.launch import specs as SP
 from repro.models import ModelConfig, get_model_fns
-from repro.serving.scheduler import Request, RequestState, Scheduler, left_pad
+from repro.serving.scheduler import (
+    BlockAllocator,
+    Request,
+    RequestState,
+    Scheduler,
+    left_pad,
+)
 
 
 def _default_buckets(max_len: int) -> tuple[int, ...]:
@@ -51,16 +69,44 @@ def _default_buckets(max_len: int) -> tuple[int, ...]:
 class ServeConfig:
     max_batch: int = 8          # decode slots
     max_new_tokens: int = 32    # default per-request budget
-    max_len: int = 512          # cache capacity (prompt + generated)
+    max_len: int = 512          # per-request capacity (prompt + generated)
     eos_token: int = -1         # -1: never stop early
     seed: int = 0
     # prompt lengths are left-padded up to the next bucket so prefill
     # compiles once per bucket, not once per distinct prompt length.
     prefill_buckets: tuple[int, ...] = ()
+    # KV cache layout: "paged" (block pool + per-slot block table, the
+    # default) or "dense" (per-slot max_len window, the PR-1 oracle).
+    kv_layout: str = "paged"
+    kv_block_size: int = 16     # tokens per KV block (paged layout)
+    # total pool size in blocks; 0 → dense-parity capacity
+    # (max_batch · ceil(max_len / block) + 1 trash block).  Set it lower to
+    # shrink cache memory — admission back-pressures when the pool runs dry.
+    num_kv_blocks: int = 0
 
     def buckets(self) -> tuple[int, ...]:
-        bs = self.prefill_buckets or _default_buckets(self.max_len)
-        return tuple(sorted(b for b in bs if b <= self.max_len))
+        if not self.prefill_buckets:
+            return tuple(_default_buckets(self.max_len))
+        bs = tuple(sorted(set(self.prefill_buckets)))
+        if any(b < 1 for b in bs):
+            raise ValueError(f"prefill_buckets must be >= 1: {bs}")
+        kept = tuple(b for b in bs if b <= self.max_len)
+        if not kept:
+            raise ValueError(
+                f"every prefill bucket in {bs} exceeds max_len="
+                f"{self.max_len}; no prompt could ever be admitted"
+            )
+        return kept
+
+    def max_kv_blocks(self) -> int:
+        """Block-table width: blocks covering one request's max_len."""
+        return -(-self.max_len // self.kv_block_size)
+
+    def pool_blocks(self) -> int:
+        """Total pool pages (incl. the reserved trash page 0)."""
+        if self.num_kv_blocks:
+            return self.num_kv_blocks
+        return self.max_batch * self.max_kv_blocks() + 1
 
 
 @dataclasses.dataclass
@@ -76,11 +122,17 @@ class ServingMetrics:
     decode_steps: int = 0
     prefills: int = 0
     occupancy_mean: float = 0.0  # mean busy-slot fraction per decode step
+    decode_time: float = 0.0     # seconds inside batched decode steps only
+
+    @property
+    def decode_step_ms(self) -> float:
+        return self.decode_time * 1e3 / max(self.decode_steps, 1)
 
     def row(self) -> str:
         return (
             f"tok_per_s={self.tokens_per_s:.1f} "
             f"ttft_ms={self.ttft_mean * 1e3:.1f} "
+            f"step_ms={self.decode_step_ms:.2f} "
             f"occupancy={self.occupancy_mean:.2f}"
         )
 
@@ -93,19 +145,47 @@ class ServingEngine:
             raise ValueError(f"family {model_cfg.family!r} cannot decode")
         if model_cfg.family == "encdec":
             raise ValueError("encdec serving needs frames; token-LM only")
+        if cfg.kv_layout not in ("paged", "dense"):
+            raise ValueError(
+                f"kv_layout must be 'paged' or 'dense', got {cfg.kv_layout!r}"
+            )
+        cfg.buckets()  # validate prefill_buckets eagerly, not at admission
+        self.paged = cfg.kv_layout == "paged"
+        if self.paged and model_cfg.kv_cache_dtype == "int8":
+            raise ValueError(
+                "paged KV cache does not support kv_cache_dtype='int8' yet; "
+                "use ServeConfig(kv_layout='dense')"
+            )
         self.params = params
         self.mcfg = model_cfg
         self.cfg = cfg
         self.sched = Scheduler(cfg.max_batch)
-        self._serve_step = jax.jit(
-            SP.make_serve_step(model_cfg), donate_argnums=(1,)
-        )
-        self._insert = jax.jit(
-            SP.make_cache_insert(model_cfg), donate_argnums=(0,)
-        )
+        b = cfg.max_batch
+        if self.paged:
+            if cfg.kv_block_size < 1:
+                raise ValueError(f"kv_block_size must be >= 1: {cfg}")
+            self._max_blocks = cfg.max_kv_blocks()
+            self.blocks = BlockAllocator(cfg.pool_blocks(), n_reserved=1)
+            # host-authoritative block table; row = trash page 0 when free
+            self._table = np.zeros((b, self._max_blocks), np.int32)
+            # host mirror of cache["pos"] (drives the decode window width)
+            self._host_pos = np.zeros((b,), np.int64)
+            self._serve_step = jax.jit(
+                SP.make_paged_serve_step(model_cfg), donate_argnums=(1,)
+            )
+            self._insert = jax.jit(
+                SP.make_paged_cache_insert(model_cfg), donate_argnums=(0,)
+            )
+        else:
+            self.blocks = None
+            self._serve_step = jax.jit(
+                SP.make_serve_step(model_cfg), donate_argnums=(1,)
+            )
+            self._insert = jax.jit(
+                SP.make_cache_insert(model_cfg), donate_argnums=(0,)
+            )
         self._prefill = jax.jit(self._make_prefill())
         self._base_key = jax.random.PRNGKey(cfg.seed)
-        b = cfg.max_batch
         self._cache = None  # allocated lazily on first admission
         self._tokens = np.zeros((b,), np.int32)   # last emitted, per slot
         self._req_keys = np.zeros((b, 2), np.uint32)
@@ -115,14 +195,21 @@ class ServingEngine:
         self._prefills = 0
         self._total_tokens = 0
         self._busy_time = 0.0
+        self._decode_time = 0.0
 
     def _make_prefill(self):
         cfg, max_len = self.mcfg, self.cfg.max_len
+        paged, bs = self.paged, self.cfg.kv_block_size
 
         def prefill(params, tokens, key):  # tokens (1, L), key (2,) uint32
             fns = get_model_fns(cfg)
+            # paged: build the one-request cache at the bucket rounded up to
+            # a block multiple (O(bucket) memory) instead of max_len — the
+            # insert scatters it into whole pool pages.
+            lb = tokens.shape[1]
+            window = -(-lb // bs) * bs if paged else max_len
             cache, logits = fns.prefill(
-                params, {"tokens": tokens}, cfg, max_len
+                params, {"tokens": tokens}, cfg, window
             )
             tok0 = SP.sample_tokens(
                 cfg, logits, key[None, :], jnp.zeros((1,), jnp.int32)
@@ -159,6 +246,13 @@ class ServingEngine:
                 f"prefill bucket {self._bucket(n)} + {budget} new tokens "
                 f"= {need} exceeds cache max_len={self.cfg.max_len}"
             )
+        if self.paged:
+            nb = self._blocks_needed(self._bucket(n), budget)
+            if nb > self.blocks.capacity:
+                raise ValueError(
+                    f"request needs {nb} KV blocks but the pool only has "
+                    f"{self.blocks.capacity}; raise num_kv_blocks"
+                )
         req = self.sched.submit(
             prompt_tokens, budget, now=time.perf_counter()
         )
@@ -167,6 +261,51 @@ class ServingEngine:
     def _bucket(self, n: int) -> int:
         return next(b for b in self.cfg.buckets() if b >= n)
 
+    def _blocks_needed(self, bucket: int, budget: int) -> int:
+        """Whole-lifetime block budget: prefill window + decode tokens.
+
+        Allocated up-front at admission so a decoding request can never hit
+        pool exhaustion mid-flight (the paged analogue of the dense
+        engine's max_len check in :meth:`submit`)."""
+        return -(-(bucket + budget) // self.cfg.kv_block_size)
+
+    def _init_cache(self):
+        if self.paged:
+            return SP.init_paged_decode_cache(
+                self.mcfg, self.cfg.max_batch, self.cfg.pool_blocks(),
+                self.cfg.kv_block_size,
+            )
+        return SP.init_decode_cache(
+            self.mcfg, self.cfg.max_batch, self.cfg.max_len
+        )
+
+    def _try_reserve_blocks(self, req: Request) -> bool:
+        """Admission gate: reserve the request's whole block budget, or
+        refuse.  Reserving *inside* the gate (not later in the prefill) is
+        what makes multi-admission ticks safe: each True answer has already
+        taken its pages, so the next queue head is gated against what is
+        actually left.  A True from the gate always leads to admission, so
+        a reservation can never leak."""
+        nb = self._blocks_needed(
+            self._bucket(len(req.prompt)), req.max_new_tokens
+        )
+        if not self.blocks.can_alloc(nb):
+            return False
+        self.blocks.alloc(req.rid, nb)
+        return True
+
+    def _release_if_done(self, req: Request) -> None:
+        """Reclaim an evicted request's KV blocks and neutralize its slot.
+
+        The freed pages go back to the allocator (eligible for the next
+        admission), and the slot's table row is pointed at the trash page so
+        the still-running batched decode step writes nowhere a live request
+        reads — this is how a mid-flight refill recycles memory."""
+        if not (self.paged and req.state is RequestState.DONE):
+            return
+        self.blocks.free(req.rid)
+        self._table[req.slot, :] = 0
+
     def _admit_one(self, req: Request) -> None:
         slot = req.slot
         plen = self._bucket(len(req.prompt))
@@ -174,14 +313,23 @@ class ServingEngine:
             [left_pad(req.prompt, plen)], np.int32
         )
         rkey = jax.random.fold_in(self._base_key, req.rid)
+        if self.paged:
+            pages = self.blocks.owned(req.rid)  # reserved by the gate
+            row = np.zeros((self._max_blocks,), np.int32)
+            row[: len(pages)] = pages
+            self._table[slot] = row
+            self._host_pos[slot] = plen
         one_cache, tok0 = self._prefill(
             self.params, jnp.asarray(toks), rkey
         )
         if self._cache is None:
-            self._cache = SP.init_decode_cache(
-                self.mcfg, self.cfg.max_batch, self.cfg.max_len
+            self._cache = self._init_cache()
+        if self.paged:
+            self._cache = self._insert(
+                self._cache, one_cache, slot, jnp.asarray(self._table[slot])
             )
-        self._cache = self._insert(self._cache, one_cache, slot)
+        else:
+            self._cache = self._insert(self._cache, one_cache, slot)
         self._req_keys[slot] = np.asarray(rkey)
         self._prefills += 1
         self.sched.start_decode(req)
@@ -192,6 +340,7 @@ class ServingEngine:
         self.sched.record_token(
             req, t0, self.cfg.eos_token, time.perf_counter()
         )
+        self._release_if_done(req)  # budget=1 or instant EOS
 
     def tick(self) -> list[tuple[int, int]]:
         """One engine iteration: admit+prefill, then one batched decode step.
@@ -200,20 +349,35 @@ class ServingEngine:
         """
         t_start = time.perf_counter()
         emitted: list[tuple[int, int]] = []
-        for req in self.sched.admit():
+        gate = self._try_reserve_blocks if self.paged else None
+        for req in self.sched.admit(gate):
             self._admit_one(req)
             emitted.append((req.rid, req.output[-1]))
         active = self.sched.active()
         if active:
-            self._cache, nxt = self._serve_step(
-                self.params,
-                self._cache,
-                jnp.asarray(self._tokens),
-                jnp.asarray(self._req_keys),
-                jnp.asarray(self._steps),
-            )
-            nxt_np = np.asarray(nxt)
+            t_dec = time.perf_counter()
+            if self.paged:
+                w = self._window_blocks(active)
+                self._cache, nxt = self._serve_step(
+                    self.params,
+                    self._cache,
+                    jnp.asarray(self._table[:, :w]),
+                    jnp.asarray(self._tokens),
+                    jnp.asarray(self._req_keys),
+                    jnp.asarray(self._steps),
+                )
+                self._host_pos += 1  # mirrors the step's pos+1, every slot
+            else:
+                self._cache, nxt = self._serve_step(
+                    self.params,
+                    self._cache,
+                    jnp.asarray(self._tokens),
+                    jnp.asarray(self._req_keys),
+                    jnp.asarray(self._steps),
+                )
+            nxt_np = np.asarray(nxt)  # device sync — decode_time is honest
             now = time.perf_counter()
+            self._decode_time += now - t_dec
             self._occ_sum += len(active) / self.cfg.max_batch
             self._decode_steps += 1
             for req in active:
@@ -223,9 +387,24 @@ class ServingEngine:
                 self._steps[slot] += 1
                 self._total_tokens += 1
                 self.sched.record_token(req, t, self.cfg.eos_token, now)
+                self._release_if_done(req)
                 emitted.append((req.rid, t))
         self._busy_time += time.perf_counter() - t_start
         return emitted
+
+    def _window_blocks(self, active: list[Request]) -> int:
+        """Decode window width in blocks for this tick.
+
+        The smallest power-of-two block count covering every active slot's
+        current position — power-of-two bucketing keeps the number of
+        distinct (table-width) step compiles logarithmic in max_len while
+        the window still tracks the *occupied* prefix, not max_len."""
+        bs = self.cfg.kv_block_size
+        need = max(int(self._host_pos[r.slot]) // bs + 1 for r in active)
+        w = 1
+        while w < need:
+            w *= 2
+        return min(w, self._max_blocks)
 
     def run(self) -> dict[int, list[int]]:
         """Drain queue + slots; returns {rid: generated tokens}."""
@@ -270,7 +449,20 @@ class ServingEngine:
             decode_steps=self._decode_steps,
             prefills=self._prefills,
             occupancy_mean=self._occ_sum / max(self._decode_steps, 1),
+            decode_time=self._decode_time,
         )
+
+    def compile_counts(self) -> dict[str, int]:
+        """Traced-computation counts per jitted entry point.
+
+        The recompile-guard tests pin these: a whole trace must cost one
+        compile per prefill bucket (prefill + insert) and one per decode
+        window bucket (serve_step) — never one per tick or per slot."""
+        return {
+            "prefill": self._prefill._cache_size(),
+            "insert": self._insert._cache_size(),
+            "serve_step": self._serve_step._cache_size(),
+        }
 
 
 class StaticServingEngine:
@@ -293,6 +485,7 @@ class StaticServingEngine:
         self._decode_steps = 0
         self._total_tokens = 0
         self._busy_time = 0.0
+        self._decode_time = 0.0
         self._ttfts: list[float] = []
         self._completed = 0
 
@@ -374,7 +567,10 @@ class StaticServingEngine:
             if done.all():
                 break
             key = self._next_key() if self.mcfg.wta_head else None
+            t_dec = time.perf_counter()
             cache, token = self._serve_step(self.params, cache, token, key)
+            token.block_until_ready()
+            self._decode_time += time.perf_counter() - t_dec
             # slots stay held for the whole batch: idle ones count against
             # occupancy, which is the cost continuous batching removes
             self._occ_sum += (b - int(done.sum())) / self.cfg.max_batch
@@ -401,4 +597,5 @@ class StaticServingEngine:
             decode_steps=self._decode_steps,
             prefills=self._completed,
             occupancy_mean=self._occ_sum / max(self._decode_steps, 1),
+            decode_time=self._decode_time,
         )

@@ -20,7 +20,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 
 class RequestState(enum.Enum):
@@ -62,6 +62,65 @@ class Request:
         return self.first_token_time - self.submit_time
 
 
+class BlockAllocator:
+    """Free-list allocator over a fixed pool of KV-cache blocks.
+
+    Pure host bookkeeping for the paged cache: the engine asks for a
+    request's whole block budget at admission (prefill blocks + decode
+    budget blocks, so a decoding request can never run out mid-flight) and
+    returns them on eviction.  Block 0 is reserved as the *trash page*:
+    evicted slots' table rows point at it, so the decode step's writes from
+    idle slots land somewhere no live request ever reads.
+    """
+
+    def __init__(self, n_blocks: int, n_reserved: int = 1):
+        if n_blocks <= n_reserved:
+            raise ValueError(
+                f"pool of {n_blocks} blocks leaves nothing to allocate "
+                f"after {n_reserved} reserved"
+            )
+        self.n_blocks = n_blocks
+        self.n_reserved = n_reserved
+        # pop() from the tail → lowest-numbered pages are handed out first
+        self._free = list(range(n_blocks - 1, n_reserved - 1, -1))
+        self._owned: dict[int, list[int]] = {}
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes reserved pages)."""
+        return self.n_blocks - self.n_reserved
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, owner: int, n: int) -> list[int]:
+        """Take ``n`` blocks for ``owner`` (a request id)."""
+        if n < 1:
+            raise ValueError(f"need at least one block, got {n}")
+        if owner in self._owned:
+            raise ValueError(f"owner {owner} already holds blocks")
+        if n > len(self._free):
+            raise ValueError(
+                f"pool exhausted: want {n}, have {len(self._free)}"
+            )
+        blocks = [self._free.pop() for _ in range(n)]
+        self._owned[owner] = blocks
+        return list(blocks)
+
+    def free(self, owner: int) -> int:
+        """Return ``owner``'s blocks to the pool; returns how many."""
+        blocks = self._owned.pop(owner)
+        self._free.extend(reversed(blocks))
+        return len(blocks)
+
+    def owned(self, owner: int) -> list[int]:
+        return list(self._owned.get(owner, []))
+
+
 class Scheduler:
     """Slot table + FIFO queue; single-threaded, driven by the engine."""
 
@@ -90,8 +149,16 @@ class Scheduler:
         self._queue.append(req)
         return req
 
-    def admit(self) -> list[Request]:
+    def admit(
+        self, gate: Optional[Callable[[Request], bool]] = None
+    ) -> list[Request]:
         """Move queued requests into free slots (FIFO, lowest slot first).
+
+        ``gate``, when given, is asked per queue-head request whether it can
+        be admitted right now (the paged engine's block-pool back-pressure).
+        A gated-out head STOPS admission — skipping ahead would break FIFO
+        and could starve large requests behind a stream of small ones.  The
+        request simply stays QUEUED for a later ``admit()``.
 
         Returns the newly admitted requests, now in PREFILL state; the
         engine must prefill each and call :meth:`start_decode`.
@@ -102,6 +169,8 @@ class Scheduler:
                 break
             if self._slots[slot] is not None:
                 continue
+            if gate is not None and not gate(self._queue[0]):
+                break
             req = self._queue.popleft()
             req.state = RequestState.PREFILL
             req.slot = slot

@@ -200,6 +200,79 @@ def test_stoch_round_ste_gradient():
 
 
 # ---------------------------------------------------------------------------
+# paged attention (serving decode kernel)
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(seed, b, h, hkv, dh, n_pages, bs, w):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, bs, hkv, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, bs, hkv, dh), jnp.float32)
+    # distinct pages per slot (page 0 = trash, never tabled)
+    perm = jax.random.permutation(ks[3], n_pages - 1)[: b * w] + 1
+    table = perm.reshape(b, w).astype(jnp.int32)
+    return q, kp, vp, table
+
+
+@pytest.mark.parametrize("kind,local_window", [("global", 0), ("local", 5)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_paged_attention_kernel_matches_oracle(kind, local_window, softcap):
+    """Interpret-mode kernel vs the pure-jnp gather oracle: GQA heads,
+    positions mid-block, both mask kinds, with/without soft-capping."""
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    b, w, bs = 4, 3, 8
+    q, kp, vp, table = _paged_case(0, b, 4, 2, 16, 16, bs, w)
+    # pos exercises: block-boundary, mid-block, first token, full window
+    pos = jnp.asarray([15, 12, 0, 23], jnp.int32)
+    y_ref = ops.ref.paged_attention_ref(
+        q, kp, vp, table, pos,
+        kind=kind, local_window=local_window, softcap=softcap,
+    )
+    y_k = paged_attention_pallas(
+        q, kp, vp, table, pos,
+        kind=kind, local_window=local_window, softcap=softcap,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_ref), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_paged_attention_ignores_blocks_beyond_pos():
+    """Pages past a slot's position must not leak into the output: poison
+    them with huge values and check against a short-table oracle."""
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    b, w, bs = 2, 4, 8
+    q, kp, vp, table = _paged_case(1, b, 4, 4, 16, 12, bs, w)
+    pos = jnp.asarray([7, 3], jnp.int32)  # only block 0 is valid
+    poison = np.asarray(table[:, 1:]).ravel()
+    kp = kp.at[poison].set(1e9)
+    vp = vp.at[poison].set(1e9)
+    y_short = ops.ref.paged_attention_ref(
+        q, kp, vp, table[:, :1], pos, kind="global"
+    )
+    y_k = paged_attention_pallas(
+        q, kp, vp, table, pos, kind="global", interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_short), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_paged_attention_op_dispatches_off_tpu():
+    """ops.paged_attention falls back to the oracle off-TPU (the serving
+    hot loop must not run interpret-mode emulation)."""
+    q, kp, vp, table = _paged_case(2, 2, 4, 2, 16, 8, 8, 2)
+    pos = jnp.asarray([9, 4], jnp.int32)
+    y = ops.paged_attention(q, kp, vp, table, pos)
+    y_ref = ops.ref.paged_attention_ref(q, kp, vp, table, pos)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
 # portable PRNG quality
 # ---------------------------------------------------------------------------
 

@@ -1,8 +1,11 @@
-"""Continuous-batching serving engine: scheduler lifecycle, engine
-equivalence with the static reference, and the WTA vote-concentration
-property (paper Fig. 6) at the serving layer."""
+"""Continuous-batching serving engine: scheduler lifecycle, block
+allocator + paged-cache behavior (back-pressure, reclamation, dense-vs-
+paged byte identity, recompile guards), engine equivalence with the static
+reference, and the WTA vote-concentration property (paper Fig. 6) at the
+serving layer."""
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +16,7 @@ from repro.configs import get_smoke_config
 from repro.launch import specs as SP
 from repro.models import get_model_fns
 from repro.serving import (
+    BlockAllocator,
     RequestState,
     Scheduler,
     ServeConfig,
@@ -96,6 +100,81 @@ def test_scheduler_views():
     s.record_token(r, 1, eos_token=-1)
     assert not s.has_work()
     assert s.all_requests() == [r]
+
+
+# ---------------------------------------------------------------------------
+# Block allocator (pure host logic, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_roundtrip():
+    a = BlockAllocator(8, n_reserved=1)
+    assert a.capacity == 7 and a.available == 7
+    p1 = a.alloc(0, 3)
+    p2 = a.alloc(1, 2)
+    assert len(p1) == 3 and len(p2) == 2
+    assert 0 not in p1 + p2  # page 0 is the reserved trash page
+    assert len(set(p1) & set(p2)) == 0
+    assert a.available == 2
+    assert a.free(0) == 3
+    assert a.available == 5
+    # freed pages are re-allocatable
+    p3 = a.alloc(2, 5)
+    assert set(p1) <= set(p3)
+
+
+def test_allocator_exhaustion_and_misuse():
+    a = BlockAllocator(4, n_reserved=1)
+    a.alloc(0, 2)
+    assert not a.can_alloc(2)
+    with pytest.raises(ValueError, match="exhausted"):
+        a.alloc(1, 2)
+    with pytest.raises(ValueError, match="already holds"):
+        a.alloc(0, 1)
+    with pytest.raises(KeyError):
+        a.free(99)
+    with pytest.raises(ValueError):
+        BlockAllocator(1, n_reserved=1)  # nothing allocatable
+
+
+def test_scheduler_admission_gate_preserves_fifo():
+    """A gated-out queue head blocks admission entirely — later requests
+    must not jump it (that would starve large requests)."""
+    s = Scheduler(n_slots=2)
+    big = s.submit([1] * 8, 4)
+    small = s.submit([2], 4)
+    assert s.admit(gate=lambda r: len(r.prompt) < 4) == []
+    assert big.state is RequestState.QUEUED
+    assert small.state is RequestState.QUEUED
+    assert [r.rid for r in s.admit()] == [big.rid, small.rid]
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_buckets_all_above_max_len_is_loud():
+    """Regression: buckets entirely above max_len used to silently filter
+    to () and fail obscurely at bucket selection time."""
+    cfg = ServeConfig(max_len=32, prefill_buckets=(64, 128))
+    with pytest.raises(ValueError, match="max_len"):
+        cfg.buckets()
+
+
+def test_buckets_dedupe_and_partial_filter():
+    cfg = ServeConfig(max_len=32, prefill_buckets=(16, 8, 16, 64, 8))
+    assert cfg.buckets() == (8, 16)
+    with pytest.raises(ValueError):
+        ServeConfig(max_len=32, prefill_buckets=(0, 8)).buckets()
+
+
+def test_engine_validates_buckets_eagerly(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="max_len"):
+        ServingEngine(
+            params, cfg, ServeConfig(max_len=16, prefill_buckets=(32,))
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +280,152 @@ def test_per_request_sampling_invariant_to_batch_composition(smoke):
     crowd.submit([9])
     out_crowd = crowd.run()[rid]
     assert out_solo == out_crowd
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block pool + block table)
+# ---------------------------------------------------------------------------
+
+MIXED_PROMPTS = [
+    [5, 6, 7, 1, 2, 3, 4, 9],
+    [1, 2, 3],
+    [9, 8, 7, 6, 5, 4, 3, 2],
+    [4] * 20,
+    [11, 12],
+    [7] * 13,
+]
+MIXED_BUDGETS = [6, 9, 3, 12, 5, 7]
+
+
+def _run_layout(params, cfg, layout, serve_kw=None):
+    sc = ServeConfig(
+        max_batch=3, max_new_tokens=8, max_len=64, kv_block_size=8,
+        kv_layout=layout, **(serve_kw or {}),
+    )
+    eng = ServingEngine(params, cfg, sc)
+    for p, b in zip(MIXED_PROMPTS, MIXED_BUDGETS):
+        eng.submit(p, b)
+    return eng, eng.run()
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_dense_vs_paged_greedy_byte_identical(arch):
+    """The acceptance contract: greedy decode over a mixed-length trace
+    (with mid-flight slot refill) must be byte-identical between the dense
+    oracle layout and the paged engine — for pure-attention and hybrid
+    (attention + recurrent state) families."""
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    _, out_dense = _run_layout(params, cfg, "dense")
+    _, out_paged = _run_layout(params, cfg, "paged")
+    assert out_dense == out_paged
+
+
+def test_paged_identity_under_page_recycling(smoke):
+    """A pool barely larger than the working set forces freed pages to be
+    re-handed to later requests mid-flight; decode must stay byte-identical
+    to dense (stale page contents never leak into a live window)."""
+    cfg, params = smoke
+    _, out_dense = _run_layout(params, cfg, "dense")
+    # 3 slots x ceil((8+12)/8)=3 pages + trash, with zero slack for the
+    # widest co-resident mix -> constant recycling
+    _, out_paged = _run_layout(
+        params, cfg, "paged", {"num_kv_blocks": 12}
+    )
+    assert out_dense == out_paged
+
+
+def test_pool_exhaustion_backpressures_admission(smoke):
+    """With a pool that fits one request at a time, admission must hold
+    the second request QUEUED (no crash, no slot leak) until the first
+    evicts and frees its pages."""
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=2, max_new_tokens=8, max_len=64, kv_block_size=8,
+        kv_layout="paged", num_kv_blocks=4,  # capacity 3 = one request
+    )
+    eng = ServingEngine(params, cfg, sc)
+    r1 = eng.submit([1, 2, 3], 8)   # bucket 8 + 8 -> 2 pages
+    r2 = eng.submit([4, 5, 6], 8)
+    eng.tick()
+    reqs = {r.rid: r for r in eng.sched.all_requests()}
+    assert reqs[r1].state is RequestState.DECODE
+    assert reqs[r2].state is RequestState.QUEUED  # gated, not crashed
+    assert not eng.blocks.can_alloc(2)
+    outs = eng.run()  # r1 finishes -> pages freed -> r2 admitted
+    assert sorted(outs) == [r1, r2]
+    assert len(outs[r1]) == len(outs[r2]) == 8
+    assert outs[r1] != [] and eng.blocks.available == eng.blocks.capacity
+
+
+def test_submit_rejects_request_larger_than_pool(smoke):
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=2, max_new_tokens=8, max_len=64, kv_block_size=8,
+        kv_layout="paged", num_kv_blocks=2,
+    )
+    eng = ServingEngine(params, cfg, sc)
+    with pytest.raises(ValueError, match="pool"):
+        eng.submit([1] * 8, 8)  # needs 2 pages, capacity is 1
+
+
+def test_eviction_reclaims_blocks(smoke):
+    """Every eviction path (EOS at the engine level is covered elsewhere;
+    here budget/length) returns pages: after a drained trace the free list
+    holds the full capacity and the table rows all point at trash."""
+    cfg, params = smoke
+    eng, outs = _run_layout(params, cfg, "paged")
+    assert len(outs) == len(MIXED_PROMPTS)
+    assert eng.blocks.available == eng.blocks.capacity
+    np.testing.assert_array_equal(eng._table, 0)
+
+
+def test_paged_engine_no_unused_donation_warnings(smoke):
+    """serve_step/insert donate the cache buffers so the per-tick update is
+    in-place; a layout regression that breaks aliasing shows up as jax's
+    'donated buffers were not usable' warning — fail on it."""
+    cfg, params = smoke
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "error", message=".*[Dd]onat.*", category=UserWarning
+        )
+        for layout in ("paged", "dense"):
+            _run_layout(params, cfg, layout)
+
+
+def test_paged_recompile_guard(smoke):
+    """Driving a full mixed-length trace costs one compile per prefill
+    bucket (prefill + insert) and one per decode window width
+    (serve_step) — and a SECOND identical trace through the same engine
+    costs zero new compiles.  No per-tick / per-slot / per-page-set
+    recompiles."""
+    cfg, params = smoke
+    eng, _ = _run_layout(params, cfg, "paged")
+    counts = eng.compile_counts()
+    buckets_used = {eng._bucket(len(p)) for p in MIXED_PROMPTS}
+    assert counts["prefill"] == len(buckets_used)
+    assert counts["insert"] == len(buckets_used)
+    # window widths are power-of-two bucketed: far fewer than decode steps
+    m = eng.metrics()
+    assert counts["serve_step"] <= 4
+    assert m.decode_steps > counts["serve_step"]
+    for p, b in zip(MIXED_PROMPTS, MIXED_BUDGETS):
+        eng.submit(p, b)
+    eng.run()
+    assert eng.compile_counts() == counts, "steady-state trace recompiled"
+
+
+def test_paged_rejects_int8_cache(smoke):
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        ServingEngine(params, icfg, ServeConfig(kv_layout="paged"))
+
+
+def test_bad_kv_layout_is_loud(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServingEngine(params, cfg, ServeConfig(kv_layout="flat"))
 
 
 # ---------------------------------------------------------------------------

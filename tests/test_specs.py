@@ -113,6 +113,106 @@ def test_cache_insert_slot_index_is_traced():
     assert ntraces == 1, f"cache insert recompiled {ntraces}x across slots"
 
 
+# ---------------------------------------------------------------------------
+# Paged (block-table) cache contracts
+# ---------------------------------------------------------------------------
+
+P, BS = 9, 8  # pool pages (page 0 = trash), tokens per block
+
+
+def test_paged_cache_layout():
+    """Attention K/V become shared (pool, block) leaves; pos and the
+    recurrent states keep the dense slot layout."""
+    cfg = get_smoke_config("stablelm-3b")
+    specs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    n_attn = sum(1 for k in cfg.layer_pattern if k in ("global", "local"))
+    want = (cfg.n_units, n_attn, P, BS, cfg.n_kv_heads, cfg.head_dim)
+    assert specs["k_pages"].shape == want
+    assert specs["v_pages"].shape == want
+    assert specs["pos"].shape == (B,)
+    assert "k" not in specs and "v" not in specs
+    live = SP.init_paged_decode_cache(cfg, B, P, BS)
+    assert _tree_specs(live) == _tree_specs(specs)
+
+
+def test_paged_cache_hybrid_keeps_dense_state_leaves():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    specs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    assert specs["rec_h"].shape[2] == B  # slot axis unchanged
+    assert specs["k_pages"].shape[2] == P  # pool axis, not slots
+
+
+def test_paged_insert_writes_only_the_tabled_pages():
+    """Prefill K/V land in exactly the pages named by the table row; pos
+    updates at the slot; untouched pages stay zero."""
+    cfg = get_smoke_config("stablelm-3b")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    lpad = 2 * BS  # a 2-block prefill window
+    one = jax.tree.map(
+        lambda l: jnp.full_like(l, 7), SP.init_decode_cache(cfg, 1, lpad)
+    )
+    row = np.zeros((4,), np.int32)
+    row[:2] = [3, 5]
+    insert = jax.jit(SP.make_paged_cache_insert(cfg))
+    out = insert(cache, one, 2, jnp.asarray(row))
+    kp = np.asarray(out["k_pages"], np.float32)
+    np.testing.assert_array_equal(kp[:, :, [3, 5]], 7)
+    untouched = [p for p in range(P) if p not in (3, 5)]
+    np.testing.assert_array_equal(kp[:, :, untouched], 0)
+    pos = np.asarray(out["pos"])
+    assert pos[2] == 7 and (pos[[0, 1, 3]] == 0).all()
+
+
+def test_paged_insert_slot_and_pages_are_traced():
+    """One compile serves every (slot, page set) — refills must not
+    specialize on which pages the allocator handed out."""
+    cfg = get_smoke_config("stablelm-3b")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    one = SP.init_decode_cache(cfg, 1, BS)
+    insert = jax.jit(SP.make_paged_cache_insert(cfg))
+    for slot in range(B):
+        row = np.full((4,), 0, np.int32)
+        row[0] = slot + 1
+        insert(cache, one, slot, jnp.asarray(row))
+    ntraces = insert._cache_size()
+    assert ntraces == 1, f"paged insert recompiled {ntraces}x"
+
+
+@pytest.mark.parametrize("wta", [False, True])
+def test_paged_serve_step_shape_contract(wta):
+    """(params, cache, table(B,W), token(B,)) -> (cache, token): output
+    cache specs must equal the input's (donation + no recompile)."""
+    cfg = dataclasses.replace(get_smoke_config("stablelm-3b"), wta_head=wta)
+    ps = SP.params_specs(cfg)
+    cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tbl = jax.ShapeDtypeStruct((B, 2), jnp.int32)
+    args = [ps, cs, tbl, tok]
+    if wta:
+        args += [
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ]
+    out_cache, out_tok = jax.eval_shape(SP.make_paged_serve_step(cfg), *args)
+    assert _tree_specs(out_cache) == _tree_specs(cs)
+    assert out_tok.shape == (B,)
+    assert out_tok.dtype == jnp.int32
+
+
+def test_paged_serve_step_rejects_encdec():
+    cfg = get_smoke_config("whisper-small")
+    with pytest.raises(ValueError, match="token-LM"):
+        SP.make_paged_serve_step(cfg)
+
+
+def test_paged_cache_int8_unsupported_is_loud():
+    cfg = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
+    )
+    with pytest.raises(NotImplementedError, match="int8"):
+        SP.init_paged_decode_cache(cfg, B, P, BS)
+
+
 def test_sample_tokens_greedy_and_legacy_key():
     cfg = get_smoke_config("stablelm-3b")
     logits = jax.random.normal(jax.random.PRNGKey(0), (B, cfg.vocab))
