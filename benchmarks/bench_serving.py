@@ -17,7 +17,12 @@ and mean slot occupancy.  The headline system-level claims:
   populates every jit bucket; the reported numbers are second-pass deltas,
   so compiles are excluded), with the paged pool sized to the trace's
   working set — pooling capacity instead of reserving batch·max_len per
-  slot is exactly the point of the layout.
+  slot is exactly the point of the layout;
+* the int8 paged pool (stochastic-rounded codes + scale planes, dequant
+  fused into the attention math) is compared against the bf16 pool on the
+  same trace (decode-step latency + tokens/s), and an equal-memory
+  capacity sweep counts requests ADMITTED at a fixed num_kv_blocks budget
+  — int8 pages cost half the K/V bytes, so the same budget admits ~2x.
 
 Results (tokens/s, TTFT, decode-step ms, occupancy for every engine) are
 also written to a JSON file for CI artifact tracking.
@@ -38,7 +43,55 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import get_model_fns
-from repro.serving import ServeConfig, ServingEngine, StaticServingEngine
+from repro.serving import (
+    RequestState,
+    ServeConfig,
+    ServingEngine,
+    StaticServingEngine,
+)
+
+# Keys every report must carry — bench_paged_int8/bench_capacity entries are
+# validated per-row below.  validate_report() is run on the freshly written
+# JSON by main() AND by CI on the uploaded artifact, so a schema drift fails
+# the build loudly instead of silently breaking the perf-trajectory tooling.
+REPORT_SCHEMA = {
+    "engines": dict,
+    "paged_vs_dense": list,
+    "paged_int8_vs_bf16": list,
+    "int8_capacity_sweep": dict,
+    "dry_run": bool,
+}
+_INT8_ROW_KEYS = {
+    "max_len", "block_size", "bf16", "int8", "decode_speedup",
+    "tokens_per_s_ratio",
+}
+_CAPACITY_KEYS = {
+    "num_kv_blocks", "blocks_per_request", "admitted_bf16", "admitted_int8",
+    "capacity_ratio",
+}
+
+
+def validate_report(report: dict) -> None:
+    """Raise ValueError unless ``report`` matches the published schema."""
+    for key, typ in REPORT_SCHEMA.items():
+        if key not in report:
+            raise ValueError(f"BENCH_serving.json missing key {key!r}")
+        if not isinstance(report[key], typ):
+            raise ValueError(
+                f"BENCH_serving.json key {key!r} should be {typ.__name__}, "
+                f"got {type(report[key]).__name__}"
+            )
+    for row in report["paged_int8_vs_bf16"]:
+        missing = _INT8_ROW_KEYS - set(row)
+        if missing:
+            raise ValueError(
+                f"paged_int8_vs_bf16 row missing keys {sorted(missing)}"
+            )
+    missing = _CAPACITY_KEYS - set(report["int8_capacity_sweep"])
+    if missing:
+        raise ValueError(
+            f"int8_capacity_sweep missing keys {sorted(missing)}"
+        )
 
 
 def make_trace(
@@ -197,6 +250,79 @@ def bench_paged_vs_dense(
     return out
 
 
+def bench_paged_int8(
+    cfg, params, max_len: int, n_req: int, block_size: int = 16
+) -> dict:
+    """bf16 vs int8 paged decode at one max_len point.
+
+    Same trace, same scheduler, dense-parity pools for both (the latency
+    comparison isolates the per-token decode cost: int8 halves the K/V
+    bytes a decode step streams and fuses the dequant into the attention
+    math).  Steady-state methodology matches bench_paged_vs_dense."""
+    max_plen, max_budget = 10, 16
+    serve = dict(
+        max_batch=4, max_new_tokens=max_budget, max_len=max_len,
+        kv_layout="paged", kv_block_size=block_size,
+    )
+    trace = make_trace(
+        seed=2, n_req=n_req, mean_gap_ticks=1.0,
+        prompt_len_range=(2, max_plen),
+        new_tokens_range=(6, max_budget), vocab=cfg.vocab,
+    )
+    out = {"max_len": max_len, "block_size": block_size}
+    for label, dt in (("bf16", "same"), ("int8", "int8")):
+        mcfg = dataclasses.replace(cfg, kv_cache_dtype=dt)
+        eng = ServingEngine(params, mcfg, ServeConfig(**serve))
+        drive_continuous(eng, trace)  # warm-up: compiles every bucket
+        m0 = eng.metrics()
+        drive_continuous(eng, trace)  # measured steady-state pass
+        out[label] = _steady_delta(m0, eng.metrics())
+    out["decode_speedup"] = round(
+        out["bf16"]["decode_step_ms"]
+        / max(out["int8"]["decode_step_ms"], 1e-9),
+        2,
+    )
+    out["tokens_per_s_ratio"] = round(
+        out["int8"]["tokens_per_s"]
+        / max(out["bf16"]["tokens_per_s"], 1e-9),
+        2,
+    )
+    return out
+
+
+def bench_int8_capacity(cfg, params, num_kv_blocks: int = 9) -> dict:
+    """Equal-memory admission sweep: requests admitted on the first tick at
+    a fixed ``num_kv_blocks`` budget.  int8 pages cost half the K/V bytes,
+    so the same budget holds ~2x the pages and the BlockAllocator admits
+    ~2x the requests — quantization's capacity win, measured end to end
+    through the admission gate."""
+    block_size, budget = 8, 8
+    prompt = [1, 2, 3]  # bucket 8 + budget 8 -> 2 blocks per request
+    out = {
+        "num_kv_blocks": num_kv_blocks,
+        "blocks_per_request": 2,
+    }
+    for label, dt in (("bf16", "same"), ("int8", "int8")):
+        mcfg = dataclasses.replace(cfg, kv_cache_dtype=dt)
+        sc = ServeConfig(
+            max_batch=32, max_new_tokens=budget, max_len=64,
+            kv_layout="paged", kv_block_size=block_size,
+            num_kv_blocks=num_kv_blocks,
+        )
+        eng = ServingEngine(params, mcfg, sc)
+        for _ in range(32):
+            eng.submit(prompt, budget)
+        eng.tick()
+        out[f"admitted_{label}"] = sum(
+            1 for r in eng.sched.all_requests()
+            if r.state is not RequestState.QUEUED
+        )
+    out["capacity_ratio"] = round(
+        out["admitted_int8"] / max(out["admitted_bf16"], 1), 2
+    )
+    return out
+
+
 def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     base = get_smoke_config("stablelm-3b")
     if dry_run:
@@ -281,6 +407,36 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
                 f"occ_paged={res['paged']['occupancy']:.2f}",
             )
         )
+    # int8 vs bf16 paged pool: decode latency + throughput at the same
+    # max_len points, and the equal-memory admission capacity sweep
+    report["paged_int8_vs_bf16"] = []
+    for ml in (128, 512):
+        res = bench_paged_int8(
+            pvd_cfg, pvd_params, max_len=ml, n_req=6 if dry_run else 16
+        )
+        report["paged_int8_vs_bf16"].append(res)
+        rows.append(
+            (
+                f"serve_paged_int8_L{ml}",
+                res["int8"]["decode_step_ms"] * 1e3,
+                f"bf16_ms={res['bf16']['decode_step_ms']:.2f} "
+                f"int8_ms={res['int8']['decode_step_ms']:.2f} "
+                f"speedup={res['decode_speedup']:.2f}x "
+                f"tok_s_ratio={res['tokens_per_s_ratio']:.2f}x",
+            )
+        )
+    cap = bench_int8_capacity(pvd_cfg, pvd_params)
+    report["int8_capacity_sweep"] = cap
+    rows.append(
+        (
+            "serve_int8_capacity",
+            0.0,
+            f"blocks={cap['num_kv_blocks']} "
+            f"admitted_bf16={cap['admitted_bf16']} "
+            f"admitted_int8={cap['admitted_int8']} "
+            f"ratio={cap['capacity_ratio']:.2f}x",
+        )
+    )
     return rows, report
 
 
@@ -301,7 +457,12 @@ def main() -> None:
     report["dry_run"] = args.dry_run
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"wrote {args.out}")
+    # round-trip the written artifact through the schema check: if the
+    # report can no longer parse as its own published schema, fail the run
+    # (and therefore CI) loudly instead of shipping a broken artifact
+    with open(args.out) as f:
+        validate_report(json.load(f))
+    print(f"wrote {args.out} (schema OK)")
 
 
 if __name__ == "__main__":

@@ -6,9 +6,14 @@ Four requests with different prompt lengths and token budgets share three
 decode slots: the scheduler prefills each arrival into a free slot of the
 live batch and refills slots as short requests finish.
 
-    PYTHONPATH=src python examples/serve_stochastic.py
+``--kv-dtype int8`` switches the paged KV pool to stochastically rounded
+int8 codes + scale planes — half the decode HBM bytes per token, with
+dequantization fused into the attention math.
+
+    PYTHONPATH=src python examples/serve_stochastic.py [--kv-dtype int8]
 """
 
+import argparse
 import dataclasses
 
 import jax
@@ -19,10 +24,17 @@ from repro.serving import ServeConfig, ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--kv-dtype", choices=("same", "int8"), default="same",
+        help="KV cache dtype; 'int8' = stochastic-rounded quantized pool",
+    )
+    args = ap.parse_args()
+
     base = get_smoke_config("stablelm-3b")
     cfg = dataclasses.replace(base, n_layers=4, d_model=128, d_ff=256,
                               n_heads=4, n_kv_heads=4, d_head=32,
-                              max_seq=256)
+                              max_seq=256, kv_cache_dtype=args.kv_dtype)
     fns = get_model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
 
@@ -43,7 +55,7 @@ def main():
         rids = [eng.submit(p, n) for p, n in requests]
         outs = eng.run()
         m = eng.metrics()
-        print(f"--- {mode} ---")
+        print(f"--- {mode} (kv_cache_dtype={args.kv_dtype}) ---")
         for rid, (p, _) in zip(rids, requests):
             print(f"  prompt={p} -> {outs[rid]}")
         print(

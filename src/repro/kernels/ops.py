@@ -295,7 +295,7 @@ def wta_counts_reference(
 
 def paged_attention(
     q: jax.Array,        # (B, H, Dh)
-    k_pages: jax.Array,  # (P, bs, Hkv, Dh)
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
     v_pages: jax.Array,
     table: jax.Array,    # (B, W) int32
     pos: jax.Array,      # (B,) int32
@@ -303,9 +303,16 @@ def paged_attention(
     kind: str = "global",
     local_window: int = 0,
     softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Block-table decode attention: compiled Pallas kernel on TPU, the
     pure-jnp oracle elsewhere.
+
+    With int8 ``k_pages``/``v_pages`` the per-(page, slot-in-page, head)
+    ``k_scale``/``v_scale`` planes ride along and dequantization is fused
+    into the score/value math — int8 blocks are what crosses HBM; no
+    dequantized cache is ever materialized.
 
     Unlike the crossbar kernels, the off-TPU fallback is the oracle rather
     than interpret-mode emulation: this sits in the serving engine's
@@ -318,10 +325,12 @@ def paged_attention(
         return ref.paged_attention_ref(
             q, k_pages, v_pages, table, pos,
             kind=kind, local_window=local_window, softcap=softcap,
+            k_scale=k_scale, v_scale=v_scale,
         )
     return _pa.paged_attention_pallas(
         q, k_pages, v_pages, table, pos,
         kind=kind, local_window=local_window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=False,
     )
 
@@ -372,3 +381,67 @@ def stoch_round_reference(
         xp, prng.key_to_seed(key), step=step, lo=lo, hi=hi
     )
     return out[: x2d.shape[0], : x2d.shape[1]].reshape(shape)
+
+
+def stoch_round_serving(
+    x: jax.Array, seed: jax.Array, *, step: float, lo: float, hi: float
+) -> jax.Array:
+    """Stochastic rounding for the serving hot path, seeded by a raw
+    uint32 counter-PRNG seed (traced scalar) instead of a jax PRNG key.
+
+    Backend dispatch mirrors :func:`paged_attention`: the compiled Pallas
+    kernel on TPU, the pure-jnp oracle elsewhere — interpret-mode emulation
+    would bury the per-token decode latency this feeds.  Kernel and oracle
+    share the counter PRNG, so the rounding decisions are bit-identical
+    across backends for a given (seed, element) pair."""
+    shape = x.shape
+    x2d = x.reshape((-1, shape[-1])).astype(jnp.float32)
+    xp = _pad_to(_pad_to(x2d, _sr.DEF_BM, 0), _sr.DEF_BN, 1)
+    seed_u = jnp.asarray(seed).astype(jnp.uint32)
+    if jax.default_backend() != "tpu":
+        out = ref.stoch_round_ref(xp, seed_u, step=step, lo=lo, hi=hi)
+    else:
+        seed_arr = jax.lax.bitcast_convert_type(seed_u, jnp.int32).reshape(1)
+        out = _sr.stoch_round_pallas(
+            xp, seed_arr, step=step, lo=lo, hi=hi, interpret=False
+        )
+    return out[: x2d.shape[0], : x2d.shape[1]].reshape(shape)
+
+
+def quantize_kv_int8(
+    x: jax.Array, seed: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization with unbiased stochastic rounding.
+
+    ``x`` is (..., Dh); returns (codes int8 (..., Dh), scale f32 (...,)).
+    The scale is the row's max |value| so codes span the full [-127, 127]
+    grid, and each element is stochastically rounded to an adjacent integer
+    level (``E[codes] = x / scale * 127``) — the paper's conductance-
+    programming primitive (§II-B, kernels/stoch_round) applied to the KV
+    cache, so quantized cache writes stay unbiased exactly like programming
+    weights onto discrete device levels.  Dequantization is never
+    materialized: attention multiplies *scores* by ``scale / 127`` (see
+    paged_attention / models.attention.attend_one_token)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-6)
+    t = xf / scale[..., None] * 127.0
+    q = stoch_round_serving(t, seed, step=1.0, lo=-127.0, hi=127.0)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_kv_pair_int8(
+    k: jax.Array, v: jax.Array, seed: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Quantize a K/V pair from ONE seed with decorrelated rounding streams.
+
+    The v stream is offset by the golden-ratio constant so k and v never
+    share per-element rounding draws (identical draws would correlate
+    their quantization errors and bias attention readouts).  Both int8
+    cache-write paths (prefill insert in launch/specs.py, decode write in
+    models/attention.py) go through here so the offset cannot drift.
+
+    Returns (k_codes, k_scale, v_codes, v_scale)."""
+    seed_u = jnp.asarray(seed).astype(jnp.uint32)
+    k8, ks = quantize_kv_int8(k, seed_u)
+    v8, vs = quantize_kv_int8(v, seed_u + jnp.uint32(0x9E3779B9))
+    return k8, ks, v8, vs

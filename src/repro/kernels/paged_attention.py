@@ -12,6 +12,13 @@ kernel attends over exactly the blocks a request has filled:
     lives in VMEM scratch across the sequential block axis;
   * blocks entirely beyond the request's position are skipped via pl.when.
 
+int8 pools halve that HBM traffic again: K/V pages hold int8 codes plus a
+per-(page, slot-in-page, head) f32 scale plane, and dequantization is fused
+into the kernel — the DMA moves int8 bytes, scores are multiplied by
+``k_scale/127`` and softmax weights by ``v_scale/127`` inside VMEM (the
+same scores-not-cache trick as the dense int8 path in models/attention.py),
+so a dequantized page never exists anywhere.
+
 Grid: (B, W) with W = table width (blocks per slot), W innermost and
 sequential — the accumulator carries across a slot's blocks.
 
@@ -38,20 +45,21 @@ def _kernel(
     tbl_ref,   # (B, W) int32 SMEM (scalar prefetch): block table
     pos_ref,   # (B,) int32 SMEM (scalar prefetch): last valid position
     q_ref,     # (1, H, Dh) f32
-    k_ref,     # (1, bs, Hkv, Dh) f32 — page tbl[b, w]
-    v_ref,     # (1, bs, Hkv, Dh) f32
-    o_ref,     # (1, H, Dh) f32
-    m_ref,     # (Hkv, G) f32 VMEM scratch: running max
-    l_ref,     # (Hkv, G) f32 VMEM scratch: running denominator
-    acc_ref,   # (Hkv, G, Dh) f32 VMEM scratch: weighted-value accumulator
-    *,
+    k_ref,     # (1, bs, Hkv, Dh) f32 (or int8 codes) — page tbl[b, w]
+    v_ref,     # (1, bs, Hkv, Dh) f32 (or int8 codes)
+    *rest,     # int8: ks_ref, vs_ref (1, bs, Hkv) f32, then o/m/l/acc refs
     nw: int,
     bs: int,
     hkv: int,
     kind: str,
     local_window: int,
     softcap: float,
+    int8: bool,
 ):
+    if int8:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     w = pl.program_id(1)
 
@@ -78,6 +86,11 @@ def _kernel(
         sc = jnp.einsum(
             "kgd,tkd->kgt", qg, k, preferred_element_type=jnp.float32
         )
+        if int8:
+            # fused dequant: int8 codes crossed HBM; the scale multiplies
+            # the SCORES in VMEM (factors out of the Dh contraction)
+            ks = ks_ref[0].astype(jnp.float32) * jnp.float32(1.0 / 127.0)
+            sc = sc * ks.transpose(1, 0)[:, None, :]   # (Hkv, 1, bs)
         if softcap > 0.0:
             sc = jnp.tanh(sc / jnp.float32(softcap)) * jnp.float32(softcap)
         kpos = (
@@ -93,8 +106,16 @@ def _kernel(
         alpha = jnp.exp(m_prev - m_new)
         pexp = jnp.exp(sc - m_new[..., None])
         l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1)
+        if int8:
+            # v-side dequant folds into the softmax numerator weights; the
+            # denominator keeps the raw pexp sums, exactly like the dense
+            # int8 path (scaled numerator / unscaled denominator)
+            vs = vs_ref[0].astype(jnp.float32) * jnp.float32(1.0 / 127.0)
+            pv = pexp * vs.transpose(1, 0)[:, None, :]
+        else:
+            pv = pexp
         acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
-            "kgt,tkd->kgd", pexp, v, preferred_element_type=jnp.float32
+            "kgt,tkd->kgd", pv, v, preferred_element_type=jnp.float32
         )
         m_ref[...] = m_new
 
@@ -107,7 +128,7 @@ def _kernel(
 
 def paged_attention_pallas(
     q: jax.Array,        # (B, H, Dh) f32 — one query token per slot
-    k_pages: jax.Array,  # (P, bs, Hkv, Dh) f32 block pool
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) f32 (or int8 codes) block pool
     v_pages: jax.Array,
     table: jax.Array,    # (B, W) int32 page ids; <0 treated as page 0
     pos: jax.Array,      # (B,) int32 last valid key position per slot
@@ -115,12 +136,22 @@ def paged_attention_pallas(
     kind: str = "global",
     local_window: int = 0,
     softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
     interpret: bool | object = False,
 ) -> jax.Array:
-    """Returns the (B, H, Dh) attention readout over each slot's blocks."""
+    """Returns the (B, H, Dh) attention readout over each slot's blocks.
+
+    Pass int8 ``k_pages``/``v_pages`` together with ``k_scale``/``v_scale``
+    planes to run the fused-dequant path (int8 page DMA, scaling in VMEM).
+    """
     b, h, dh = q.shape
     n_pages, bs, hkv, dh2 = k_pages.shape
     assert dh == dh2 and h % hkv == 0, (q.shape, k_pages.shape)
+    int8 = k_scale is not None
+    if int8:
+        assert v_scale is not None
+        assert k_scale.shape == (n_pages, bs, hkv), k_scale.shape
     nw = table.shape[1]
     kern = functools.partial(
         _kernel,
@@ -130,25 +161,37 @@ def paged_attention_pallas(
         kind=kind,
         local_window=local_window,
         softcap=softcap,
+        int8=int8,
     )
+    page_map = lambda bi, wi, tbl, ps: (jnp.maximum(tbl[bi, wi], 0), 0, 0, 0)
+    scale_map = lambda bi, wi, tbl, ps: (jnp.maximum(tbl[bi, wi], 0), 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, h, dh), lambda bi, wi, tbl, ps: (bi, 0, 0)),
+        pl.BlockSpec((1, bs, hkv, dh), page_map),
+        pl.BlockSpec((1, bs, hkv, dh), page_map),
+    ]
+    # keep int8 codes int8 on the wire — halving the page DMA bytes is the
+    # point; everything else is normalized to f32 before the call
+    operands = [
+        table.astype(jnp.int32),
+        pos.astype(jnp.int32),
+        q.astype(jnp.float32),
+        k_pages if int8 else k_pages.astype(jnp.float32),
+        v_pages if int8 else v_pages.astype(jnp.float32),
+    ]
+    if int8:
+        in_specs += [
+            pl.BlockSpec((1, bs, hkv), scale_map),
+            pl.BlockSpec((1, bs, hkv), scale_map),
+        ]
+        operands += [
+            k_scale.astype(jnp.float32),
+            v_scale.astype(jnp.float32),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nw),
-        in_specs=[
-            pl.BlockSpec((1, h, dh), lambda bi, wi, tbl, ps: (bi, 0, 0)),
-            pl.BlockSpec(
-                (1, bs, hkv, dh),
-                lambda bi, wi, tbl, ps: (
-                    jnp.maximum(tbl[bi, wi], 0), 0, 0, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, bs, hkv, dh),
-                lambda bi, wi, tbl, ps: (
-                    jnp.maximum(tbl[bi, wi], 0), 0, 0, 0
-                ),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, h, dh), lambda bi, wi, tbl, ps: (bi, 0, 0)
         ),
@@ -168,10 +211,4 @@ def paged_attention_pallas(
             # a slot's blocks); B revisits scratch only after a full W sweep.
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
-    )(
-        table.astype(jnp.int32),
-        pos.astype(jnp.int32),
-        q.astype(jnp.float32),
-        k_pages.astype(jnp.float32),
-        v_pages.astype(jnp.float32),
-    )
+    )(*operands)

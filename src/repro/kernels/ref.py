@@ -100,7 +100,7 @@ def wta_counts_ref(
 
 def paged_attention_ref(
     q: jax.Array,        # (B, H, Dh)
-    k_pages: jax.Array,  # (P, bs, Hkv, Dh)
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
     v_pages: jax.Array,
     table: jax.Array,    # (B, W) int32 page ids; <0 treated as page 0
     pos: jax.Array,      # (B,) int32 last valid key position
@@ -108,18 +108,27 @@ def paged_attention_ref(
     kind: str = "global",
     local_window: int = 0,
     softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Oracle for paged_attention_pallas: gather the table's blocks into a
     contiguous (W·bs) window, then masked full-softmax attention.  Block i
     holds logical positions [i·bs, (i+1)·bs); positions beyond ``pos`` (and
     outside the local window) get NEG_INF scores — exactly zero probability
-    in f32."""
+    in f32.
+
+    With int8 pools the per-(page, slot-in-page, head) scale planes are
+    gathered through the same table and folded into scores / softmax
+    weights (never into the cache): scores pick up ``k_scale/127`` and the
+    value reduction weights pick up ``v_scale/127`` — the same ordering as
+    the dense int8 trick in models.attention.attend_one_token."""
     neg_inf = jnp.float32(-2.0e38)
     b, h, dh = q.shape
     _, bs, hkv, _ = k_pages.shape
     g = h // hkv
-    kb = k_pages[jnp.maximum(table, 0)].reshape(b, -1, hkv, dh)
-    vb = v_pages[jnp.maximum(table, 0)].reshape(b, -1, hkv, dh)
+    pages = jnp.maximum(table, 0)
+    kb = k_pages[pages].reshape(b, -1, hkv, dh)
+    vb = v_pages[pages].reshape(b, -1, hkv, dh)
     t = kb.shape[1]
     qg = q.reshape(b, hkv, g, dh).astype(jnp.float32) * jnp.float32(
         dh**-0.5
@@ -128,6 +137,9 @@ def paged_attention_ref(
         "bkgd,btkd->bkgt", qg, kb.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
+    if k_scale is not None:
+        ks = k_scale[pages].reshape(b, t, hkv)
+        sc = sc * (ks.transpose(0, 2, 1) / 127.0)[:, :, None, :]
     if softcap > 0.0:
         sc = jnp.tanh(sc / jnp.float32(softcap)) * jnp.float32(softcap)
     kpos = jnp.arange(t)[None]
@@ -136,6 +148,9 @@ def paged_attention_ref(
         ok &= kpos > (pos[:, None] - local_window)
     sc = sc + jnp.where(ok, 0.0, neg_inf)[:, None, None, :]
     w = jax.nn.softmax(sc, axis=-1)
+    if v_scale is not None:
+        vs = v_scale[pages].reshape(b, t, hkv)
+        w = w * (vs.transpose(0, 2, 1) / 127.0)[:, :, None, :]
     out = jnp.einsum(
         "bkgt,btkd->bkgd", w, vb.astype(jnp.float32),
         preferred_element_type=jnp.float32,

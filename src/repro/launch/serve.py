@@ -41,11 +41,17 @@ def main() -> None:
                     help="tokens per KV block (paged layout)")
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="pool size in blocks; 0 = dense-parity capacity")
+    ap.add_argument("--kv-dtype", choices=("same", "int8"), default="same",
+                    help="KV cache dtype: 'int8' stores stochastically "
+                         "rounded int8 codes + scale planes (half the "
+                         "decode HBM bytes; doubled paged-pool capacity)")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = dataclasses.replace(cfg, wta_head=args.wta)
+    cfg = dataclasses.replace(
+        cfg, wta_head=args.wta, kv_cache_dtype=args.kv_dtype
+    )
     fns = get_model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
     if args.ckpt_dir:

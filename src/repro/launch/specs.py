@@ -124,20 +124,38 @@ def make_cache_insert(cfg: ModelConfig):
 def make_paged_cache_insert(cfg: ModelConfig):
     """Insert one request's prefill cache into the paged batch cache.
 
-    (paged_cache, one_cache(B=1, len=L·), slot int32, table_row int32) →
-    paged_cache.  The one-request cache comes out of the ordinary dense
-    prefill, built at a window already padded to a block multiple; its
-    K/V are reshaped into blocks and scattered to the pages named by the
-    first ``L/block_size`` entries of ``table_row``.  Dense per-slot leaves
-    (pos, recurrent/SSM states) use the slot-addressable update.  Slot and
-    page ids are traced, so one compile per prefill bucket serves every
-    (slot, page set) of a live batch.
+    (paged_cache, one_cache(B=1, len=L·), slot int32, table_row int32
+    [, quant_key]) → paged_cache.  The one-request cache comes out of the
+    ordinary dense prefill, built at a window already padded to a block
+    multiple; its K/V are reshaped into blocks and scattered to the pages
+    named by the first ``L/block_size`` entries of ``table_row``.  Dense
+    per-slot leaves (pos, recurrent/SSM states) use the slot-addressable
+    update.  Slot and page ids are traced, so one compile per prefill
+    bucket serves every (slot, page set) of a live batch.
+
+    Int8 pools (``k_scale_pages`` present): the dense prefill K/V stay full
+    precision and are quantized HERE — per-(position, head) scale, codes
+    stochastically rounded (kernels.ops.quantize_kv_int8, seeded from
+    ``quant_key`` so each request's cache programming is an independent
+    unbiased draw), scales scattered to the matching scale-plane pages.
+    The key is traced: one compile per prefill bucket, same as the rest.
     """
+    from repro.kernels import ops as KOPS
+    from repro.kernels import prng as KPRNG
 
     def insert(
-        batch_cache: dict, one_cache: dict, slot, table_row
+        batch_cache: dict, one_cache: dict, slot, table_row, quant_key=None
     ) -> dict:
         out = {}
+        int8_pool = "k_scale_pages" in batch_cache
+        if int8_pool:
+            quant = KOPS.quantize_kv_pair_int8(
+                one_cache["k"], one_cache["v"], KPRNG.key_to_seed(quant_key)
+            )
+            quantized = {
+                "k_pages": quant[0:2],   # (codes, scale)
+                "v_pages": quant[2:4],
+            }
         for name, leaf in batch_cache.items():
             if name in ("k_pages", "v_pages"):
                 src = one_cache[name[0]]  # dense "k"/"v": (nu,na,1,L,Hkv,Dh)
@@ -148,10 +166,24 @@ def make_paged_cache_insert(cfg: ModelConfig):
                     f"size {bs}"
                 )
                 nb = lpad // bs
-                blocks = src[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
-                out[name] = leaf.at[:, :, table_row[:nb]].set(
-                    blocks.astype(leaf.dtype)
-                )
+                if int8_pool:
+                    codes, scale = quantized[name]
+                    blocks = codes[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
+                    sblocks = scale[:, :, 0].reshape(nu, na, nb, bs, hkv)
+                    out[name] = leaf.at[:, :, table_row[:nb]].set(blocks)
+                    sleaf = batch_cache[f"{name[0]}_scale_pages"]
+                    out[f"{name[0]}_scale_pages"] = sleaf.at[
+                        :, :, table_row[:nb]
+                    ].set(sblocks)
+                else:
+                    blocks = src[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
+                    out[name] = leaf.at[:, :, table_row[:nb]].set(
+                        blocks.astype(leaf.dtype)
+                    )
+            elif name in ("k_scale_pages", "v_scale_pages"):
+                continue  # written alongside k_pages/v_pages above
+            elif name == "quant_step":
+                out[name] = leaf  # decode-step counter: inserts don't tick it
             else:
                 upd = one_cache[name].astype(leaf.dtype)
                 out[name] = jax.lax.dynamic_update_slice_in_dim(

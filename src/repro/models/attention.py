@@ -391,12 +391,13 @@ def decode_self_attention(
 
 
 def paged_write(
-    pages: jax.Array,   # (P, bs, Hkv, Dh) block pool
-    new: jax.Array,     # (B, 1, Hkv, Dh) this step's K or V rows
+    pages: jax.Array,   # (P, bs, ...) block pool (K/V or scale planes)
+    new: jax.Array,     # (B, 1, ...) this step's K/V rows or scales
     table: jax.Array,   # (B, W) int32 block table (page ids)
     pos: jax.Array,     # (B,) int32 logical write position per slot
 ) -> jax.Array:
-    """Scatter one token's K/V rows into each slot's current block.
+    """Scatter one token's K/V rows (or their scales) into each slot's
+    current block.
 
     The target page is ``table[b, pos[b] // bs]``; active slots own disjoint
     pages so the scatter never collides.  Slots whose table row is all-trash
@@ -412,15 +413,18 @@ def paged_write(
 
 
 def paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
-    """(P, bs, Hkv, Dh), (B, W) → (B, W·bs, Hkv, Dh) contiguous window.
+    """(P, bs, ...), (B, W) → (B, W·bs, ...) contiguous window.
 
     Block i of a slot's table holds logical positions [i·bs, (i+1)·bs), so
     the gathered window is exactly the prefix of the dense per-slot cache —
-    the invariant the dense-vs-paged equivalence tests pin down.
+    the invariant the dense-vs-paged equivalence tests pin down.  Works for
+    K/V pools (trailing (Hkv, Dh)) and their scale planes (trailing (Hkv,)).
     """
     b, w = table.shape
-    _, bs, hkv, dh = pages.shape
-    return pages[jnp.maximum(table, 0)].reshape(b, w * bs, hkv, dh)
+    bs = pages.shape[1]
+    return pages[jnp.maximum(table, 0)].reshape(
+        (b, w * bs) + pages.shape[2:]
+    )
 
 
 def paged_decode_self_attention(
@@ -433,6 +437,9 @@ def paged_decode_self_attention(
     cfg: ModelConfig,
     kind: str = "global",
     use_rope: bool = True,
+    k_scale_pages: Optional[jax.Array] = None,  # (P, bs, Hkv) int8 pools
+    v_scale_pages: Optional[jax.Array] = None,
+    quant_seed: Optional[jax.Array] = None,     # uint32 scalar, int8 pools
 ):
     """One-token attention against a paged (block-table) KV cache.
 
@@ -443,14 +450,34 @@ def paged_decode_self_attention(
     pure-jnp gather + the shared :func:`attend_one_token` (bit-identical to
     the dense path over the valid prefix).
 
-    Returns (out, k_pages, v_pages).
+    With an int8 pool (``k_pages.dtype == int8``; scale planes + a
+    ``quant_seed`` provided) the new K/V row is quantized with unbiased
+    stochastic rounding (kernels.ops.quantize_kv_int8 — the paper's
+    conductance-programming primitive applied to cache writes) and the
+    per-(page, slot-in-page, head) scales ride through the same block
+    table; dequantization is fused into the attention math on both
+    backends (scores × k_scale/127, weights × v_scale/127 — the cache is
+    never dequantized in memory).
+
+    Returns (out, k_pages, v_pages) — plus (k_scale_pages, v_scale_pages)
+    for int8 pools.
     """
+    int8_pool = k_pages.dtype == jnp.int8
     q, k, v = qkv(p, x, cfg, None)
     if use_rope:
         q = apply_rope(q, pos[:, None], cfg.rope_theta)
         k = apply_rope(k, pos[:, None], cfg.rope_theta)
-    k_pages = paged_write(k_pages, k, table, pos)
-    v_pages = paged_write(v_pages, v, table, pos)
+    if int8_pool:
+        from repro.kernels import ops as KOPS
+
+        k8, ks, v8, vs = KOPS.quantize_kv_pair_int8(k, v, quant_seed)
+        k_pages = paged_write(k_pages, k8, table, pos)
+        v_pages = paged_write(v_pages, v8, table, pos)
+        k_scale_pages = paged_write(k_scale_pages, ks, table, pos)
+        v_scale_pages = paged_write(v_scale_pages, vs, table, pos)
+    else:
+        k_pages = paged_write(k_pages, k, table, pos)
+        v_pages = paged_write(v_pages, v, table, pos)
     if jax.default_backend() == "tpu":
         from repro.kernels import ops as KOPS
 
@@ -459,11 +486,21 @@ def paged_decode_self_attention(
             kind=kind,
             local_window=cfg.local_window,
             softcap=cfg.attn_softcap,
+            k_scale=k_scale_pages if int8_pool else None,
+            v_scale=v_scale_pages if int8_pool else None,
         )[:, None].reshape(x.shape[0], 1, -1)
     else:
         k_buf = paged_gather(k_pages, table)
         v_buf = paged_gather(v_pages, table)
-        out = attend_one_token(q, k_buf, v_buf, pos, cfg, kind)
+        out = attend_one_token(
+            q, k_buf, v_buf, pos, cfg, kind,
+            k_scale=paged_gather(k_scale_pages, table)
+            if int8_pool else None,
+            v_scale=paged_gather(v_scale_pages, table)
+            if int8_pool else None,
+        )
     out = out.astype(x.dtype)
     o = A.analog_matmul(_proj_cfg(cfg), None, out, p["wo"])
+    if int8_pool:
+        return o, k_pages, v_pages, k_scale_pages, v_scale_pages
     return o, k_pages, v_pages

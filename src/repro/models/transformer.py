@@ -322,12 +322,13 @@ def init_paged_decode_cache(
     pooled: n_pages · block_size tokens total, instead of the dense
     batch · max_len per-slot reservation.  Recurrent/SSM states keep the
     dense slot layout (they are O(1) per slot).
+
+    With ``cfg.kv_cache_dtype == "int8"`` the K/V pools hold int8 codes
+    (half the HBM bytes per page) plus per-(page, slot-in-page, head) f32
+    scale planes; writes quantize with unbiased stochastic rounding and
+    reads fold the scales into the attention math (see
+    attention.paged_decode_self_attention).
     """
-    if cfg.kv_cache_dtype == "int8":
-        raise NotImplementedError(
-            "paged KV cache does not support kv_cache_dtype='int8' yet; "
-            "use the dense layout (ServeConfig.kv_layout='dense')"
-        )
     dt = dtype_of(cfg)
     nu = cfg.n_units
     cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
@@ -337,8 +338,20 @@ def init_paged_decode_cache(
         shape = (
             nu, n_attn, n_pages, block_size, cfg.n_kv_heads, cfg.head_dim
         )
-        cache["k_pages"] = jnp.zeros(shape, dt)
-        cache["v_pages"] = jnp.zeros(shape, dt)
+        if cfg.kv_cache_dtype == "int8":
+            cache["k_pages"] = jnp.zeros(shape, jnp.int8)
+            cache["v_pages"] = jnp.zeros(shape, jnp.int8)
+            cache["k_scale_pages"] = jnp.ones(shape[:-1], jnp.float32)
+            cache["v_scale_pages"] = jnp.ones(shape[:-1], jnp.float32)
+            # monotonic decode-step counter seeding the stochastic rounding:
+            # +1 per lm_decode_step, never reset by inserts/eviction, so a
+            # cache write's rounding draw is never replayed over the
+            # engine's lifetime (a pos-derived seed would repeat after slot
+            # turnover)
+            cache["quant_step"] = jnp.zeros((), jnp.int32)
+        else:
+            cache["k_pages"] = jnp.zeros(shape, dt)
+            cache["v_pages"] = jnp.zeros(shape, dt)
     cache.update(_state_cache_leaves(cfg, batch))
     return cache
 
@@ -350,9 +363,12 @@ def _unit_decode(
     pos: jax.Array,       # (B,)
     cfg: ModelConfig,
     table: Optional[jax.Array] = None,  # (B, W) block table (paged cache)
+    uidx: jax.Array | int = 0,          # unit index (seeds int8 rounding)
+    quant_base: Optional[jax.Array] = None,  # engine-wide decode counter
 ) -> tuple[jax.Array, dict]:
     new_cache = dict(ucache)
     paged = "k_pages" in ucache
+    int8_pool = "k_scale_pages" in ucache
     i_attn = i_rec = i_ssm = 0
     for i, kind in enumerate(cfg.layer_pattern):
         sub = up[f"l{i}"]
@@ -360,7 +376,27 @@ def _unit_decode(
             # attention + cache write is the only paged/dense divergence;
             # the norm/FFN tail below is shared so the layouts cannot drift
             if paged:
-                a, kp, vp = ATT.paged_decode_self_attention(
+                scale_kw = {}
+                if int8_pool:
+                    # per-(decode step, unit, sublayer) counter-PRNG seed:
+                    # quant_base ticks monotonically per lm_decode_step, so
+                    # every cache write draws fresh unbiased rounding noise
+                    # over the engine's lifetime; the per-element counter
+                    # inside stoch_round decorrelates slots/heads within
+                    # one write
+                    seed = (
+                        quant_base.astype(jnp.uint32)
+                        * jnp.uint32(2654435761)
+                        + jnp.asarray(uidx).astype(jnp.uint32)
+                        * jnp.uint32(40503)
+                        + jnp.uint32(i * 1299721)
+                    )
+                    scale_kw = dict(
+                        k_scale_pages=ucache["k_scale_pages"][i_attn],
+                        v_scale_pages=ucache["v_scale_pages"][i_attn],
+                        quant_seed=seed,
+                    )
+                res = ATT.paged_decode_self_attention(
                     sub["attn"],
                     rmsnorm(sub["ln1"], x, cfg.norm_eps),
                     ucache["k_pages"][i_attn],
@@ -369,13 +405,22 @@ def _unit_decode(
                     pos,
                     cfg,
                     kind=kind,
+                    **scale_kw,
                 )
+                a, kp, vp = res[:3]
                 new_cache["k_pages"] = (
                     new_cache["k_pages"].at[i_attn].set(kp)
                 )
                 new_cache["v_pages"] = (
                     new_cache["v_pages"].at[i_attn].set(vp)
                 )
+                if int8_pool:
+                    new_cache["k_scale_pages"] = (
+                        new_cache["k_scale_pages"].at[i_attn].set(res[3])
+                    )
+                    new_cache["v_scale_pages"] = (
+                        new_cache["v_scale_pages"].at[i_attn].set(res[4])
+                    )
             else:
                 int8 = cfg.kv_cache_dtype == "int8"
                 res = ATT.decode_self_attention(
@@ -454,18 +499,21 @@ def lm_decode_step(
     reads/writes go through the block pool; the recurrence is otherwise
     identical to the dense path."""
     pos = cache["pos"]
+    qstep = cache.get("quant_step")  # int8 paged pools only
     x = embed(params["embed"], token[:, None], cfg)
 
     def body(carry, xs):
         h = carry
-        up, uc = xs
-        h, uc_new = _unit_decode(h, up, uc, pos, cfg, table)
+        up, uc, uidx = xs
+        h, uc_new = _unit_decode(h, up, uc, pos, cfg, table, uidx, qstep)
         return h, uc_new
 
-    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+    layer_cache = {
+        k: v for k, v in cache.items() if k not in ("pos", "quant_step")
+    }
     if cfg.scan_layers:
         x, new_layer_cache = jax.lax.scan(
-            body, x, (params["units"], layer_cache),
+            body, x, (params["units"], layer_cache, jnp.arange(cfg.n_units)),
             unroll=True if cfg.cost_exact else 1,
         )
     else:
@@ -473,13 +521,15 @@ def lm_decode_step(
         for u in range(cfg.n_units):
             up = jax.tree.map(lambda a: a[u], params["units"])
             uc = jax.tree.map(lambda a: a[u], layer_cache)
-            x, uc_new = body(x, (up, uc))
+            x, uc_new = body(x, (up, uc, u))
             ys.append(uc_new)
         new_layer_cache = jax.tree.map(lambda *a: jnp.stack(a), *ys)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_out(params["embed"], params.get("head"), x, cfg)
     new_cache = dict(new_layer_cache)
     new_cache["pos"] = pos + 1
+    if qstep is not None:
+        new_cache["quant_step"] = qstep + 1
     return new_cache, logits[:, 0, :]
 
 

@@ -27,6 +27,13 @@ keeps the PR-1 per-slot ``max_len`` window as the equivalence oracle:
 greedy decode is byte-identical between the two layouts
 (tests/test_serving.py).
 
+With ``ModelConfig.kv_cache_dtype="int8"`` the paged pool holds
+stochastically rounded int8 codes + per-(page, slot-in-page, head) scale
+planes — half the decode HBM bytes per token, dequant fused into the
+paged-attention math, and ``num_kv_blocks`` (a native-dtype memory budget)
+buys twice the pages, so admission takes ~2x the requests at equal budget
+(docs/serving.md §"Quantized KV pool").
+
 WTA sampling stays independent per request: every slot carries the key
 ``fold_in(base_key, rid)`` and a step counter, so a request's vote noise is
 a function of (its rid, its token index) only — invariant to batch
@@ -102,11 +109,59 @@ class ServeConfig:
         """Block-table width: blocks covering one request's max_len."""
         return -(-self.max_len // self.kv_block_size)
 
-    def pool_blocks(self) -> int:
-        """Total pool pages (incl. the reserved trash page 0)."""
+    def pool_blocks(self, kv_cache_dtype: str = "same") -> int:
+        """Total pool pages (incl. the reserved trash page 0).
+
+        ``num_kv_blocks`` is a *memory budget* expressed in native-dtype
+        blocks: an int8 pool's pages cost half the K/V bytes, so the same
+        budget holds twice the pages (the trash page is counted once) —
+        this is how quantization's capacity win reaches ``BlockAllocator``
+        admission.  The default (0) is dense-parity capacity, already
+        enough for every slot at full ``max_len``, so it is not doubled.
+        """
         if self.num_kv_blocks:
+            if kv_cache_dtype == "int8":
+                return 2 * self.num_kv_blocks - 1
             return self.num_kv_blocks
         return self.max_batch * self.max_kv_blocks() + 1
+
+    def validate(self, kv_cache_dtype: str = "same") -> None:
+        """Loud, eager config validation (same spirit as :meth:`buckets`).
+
+        Raises ValueError on an unknown ``kv_cache_dtype`` / ``kv_layout``,
+        a non-positive ``kv_block_size``, or a ``num_kv_blocks`` too small
+        to ever admit a single request — each of which would otherwise
+        surface as an obscure failure deep inside admission or decode.
+        """
+        if kv_cache_dtype not in ("same", "int8"):
+            raise ValueError(
+                f"kv_cache_dtype must be 'same' or 'int8', got "
+                f"{kv_cache_dtype!r}"
+            )
+        if self.kv_layout not in ("paged", "dense"):
+            raise ValueError(
+                f"kv_layout must be 'paged' or 'dense', got "
+                f"{self.kv_layout!r}"
+            )
+        self.buckets()
+        if self.kv_layout == "paged":
+            if self.kv_block_size < 1:
+                raise ValueError(
+                    f"kv_block_size must be >= 1, got {self.kv_block_size}"
+                )
+            # the smallest admissible request: shortest prefill bucket + one
+            # generated token, whole lifetime reserved at admission
+            need = -(
+                -(min(self.buckets()) + 1) // self.kv_block_size
+            )
+            cap = self.pool_blocks(kv_cache_dtype) - 1  # minus trash page
+            if cap < need:
+                raise ValueError(
+                    f"num_kv_blocks={self.num_kv_blocks} leaves a pool of "
+                    f"{cap} allocatable blocks, but even the smallest "
+                    f"request (bucket {min(self.buckets())} + 1 token) "
+                    f"needs {need}; no request could ever be admitted"
+                )
 
 
 @dataclasses.dataclass
@@ -145,27 +200,20 @@ class ServingEngine:
             raise ValueError(f"family {model_cfg.family!r} cannot decode")
         if model_cfg.family == "encdec":
             raise ValueError("encdec serving needs frames; token-LM only")
-        if cfg.kv_layout not in ("paged", "dense"):
-            raise ValueError(
-                f"kv_layout must be 'paged' or 'dense', got {cfg.kv_layout!r}"
-            )
-        cfg.buckets()  # validate prefill_buckets eagerly, not at admission
+        # validate the whole serving config eagerly, not at admission
+        cfg.validate(model_cfg.kv_cache_dtype)
         self.paged = cfg.kv_layout == "paged"
-        if self.paged and model_cfg.kv_cache_dtype == "int8":
-            raise ValueError(
-                "paged KV cache does not support kv_cache_dtype='int8' yet; "
-                "use ServeConfig(kv_layout='dense')"
-            )
+        self.int8 = self.paged and model_cfg.kv_cache_dtype == "int8"
         self.params = params
         self.mcfg = model_cfg
         self.cfg = cfg
         self.sched = Scheduler(cfg.max_batch)
         b = cfg.max_batch
         if self.paged:
-            if cfg.kv_block_size < 1:
-                raise ValueError(f"kv_block_size must be >= 1: {cfg}")
             self._max_blocks = cfg.max_kv_blocks()
-            self.blocks = BlockAllocator(cfg.pool_blocks(), n_reserved=1)
+            self.blocks = BlockAllocator(
+                cfg.pool_blocks(model_cfg.kv_cache_dtype), n_reserved=1
+            )
             # host-authoritative block table; row = trash page 0 when free
             self._table = np.zeros((b, self._max_blocks), np.int32)
             # host mirror of cache["pos"] (drives the decode window width)
@@ -200,6 +248,11 @@ class ServingEngine:
     def _make_prefill(self):
         cfg, max_len = self.mcfg, self.cfg.max_len
         paged, bs = self.paged, self.cfg.kv_block_size
+        if self.int8:
+            # the POOL is int8; the one-request prefill cache stays full
+            # precision and is quantized (stochastic rounding) by the paged
+            # insert as it scatters blocks into pages
+            cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
 
         def prefill(params, tokens, key):  # tokens (1, L), key (2,) uint32
             fns = get_model_fns(cfg)
@@ -272,7 +325,8 @@ class ServingEngine:
     def _init_cache(self):
         if self.paged:
             return SP.init_paged_decode_cache(
-                self.mcfg, self.cfg.max_batch, self.cfg.pool_blocks(),
+                self.mcfg, self.cfg.max_batch,
+                self.cfg.pool_blocks(self.mcfg.kv_cache_dtype),
                 self.cfg.kv_block_size,
             )
         return SP.init_decode_cache(
@@ -325,9 +379,19 @@ class ServingEngine:
         if self._cache is None:
             self._cache = self._init_cache()
         if self.paged:
-            self._cache = self._insert(
-                self._cache, one_cache, slot, jnp.asarray(self._table[slot])
-            )
+            if self.int8:
+                # fresh fold of the request key → independent unbiased
+                # rounding draws per request's cache programming
+                self._cache = self._insert(
+                    self._cache, one_cache, slot,
+                    jnp.asarray(self._table[slot]),
+                    jax.random.fold_in(rkey, 0x5eed),
+                )
+            else:
+                self._cache = self._insert(
+                    self._cache, one_cache, slot,
+                    jnp.asarray(self._table[slot]),
+                )
         else:
             self._cache = self._insert(self._cache, one_cache, slot)
         self._req_keys[slot] = np.asarray(rkey)

@@ -295,3 +295,116 @@ def test_prng_streams_decorrelated():
     # sequential correlation within one stream
     corr2 = float(jnp.corrcoef(a[:-1], a[1:])[0, 1])
     assert abs(corr2) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# int8 paged attention (fused-dequant serving decode kernel)
+# ---------------------------------------------------------------------------
+
+
+def _int8_paged_case(seed, b, h, hkv, dh, n_pages, bs, w):
+    q, kp, vp, table = _paged_case(seed, b, h, hkv, dh, n_pages, bs, w)
+    k8, ks = ops.quantize_kv_int8(kp, jnp.uint32(seed))
+    v8, vs = ops.quantize_kv_int8(vp, jnp.uint32(seed + 77))
+    return q, kp, vp, k8, v8, ks, vs, table
+
+
+@pytest.mark.parametrize("kind,local_window", [("global", 0), ("local", 5)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_int8_paged_attention_kernel_matches_oracle(
+    kind, local_window, softcap
+):
+    """Interpret-mode fused-dequant kernel vs the int8 oracle: int8 codes +
+    scale planes in, scales applied to scores/weights in VMEM."""
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    b, w, bs = 4, 3, 8
+    q, _, _, k8, v8, ks, vs, table = _int8_paged_case(
+        3, b, 4, 2, 16, 16, bs, w
+    )
+    pos = jnp.asarray([15, 12, 0, 23], jnp.int32)
+    y_ref = ops.ref.paged_attention_ref(
+        q, k8, v8, table, pos,
+        kind=kind, local_window=local_window, softcap=softcap,
+        k_scale=ks, v_scale=vs,
+    )
+    y_k = paged_attention_pallas(
+        q, k8, v8, table, pos,
+        kind=kind, local_window=local_window, softcap=softcap,
+        k_scale=ks, v_scale=vs, interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_ref), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_int8_paged_attention_close_to_full_precision():
+    """The quantized path is an approximation of the f32 pool with bounded
+    error: per-row max-abs scales keep the relative readout error small."""
+    q, kp, vp, k8, v8, ks, vs, table = _int8_paged_case(
+        4, 2, 4, 2, 16, 8, 8, 2
+    )
+    pos = jnp.asarray([9, 4], jnp.int32)
+    y_fp = ops.ref.paged_attention_ref(q, kp, vp, table, pos)
+    y_i8 = ops.ref.paged_attention_ref(
+        q, k8, v8, table, pos, k_scale=ks, v_scale=vs
+    )
+    rel = float(
+        jnp.max(jnp.abs(y_i8 - y_fp)) / jnp.max(jnp.abs(y_fp))
+    )
+    assert rel < 0.05, rel
+
+
+def test_int8_paged_attention_op_dispatches_off_tpu():
+    q, _, _, k8, v8, ks, vs, table = _int8_paged_case(5, 2, 4, 2, 16, 8, 8, 2)
+    pos = jnp.asarray([9, 4], jnp.int32)
+    y = ops.paged_attention(q, k8, v8, table, pos, k_scale=ks, v_scale=vs)
+    y_ref = ops.ref.paged_attention_ref(
+        q, k8, v8, table, pos, k_scale=ks, v_scale=vs
+    )
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
+# quantize_kv_int8 (stochastic-rounded cache quantizer)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_kv_int8_error_bounded_by_scale_step():
+    """Stochastic rounding moves each element to an adjacent grid level:
+    |dequant - x| <= scale/127 elementwise, codes within [-127, 127]."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 3, 32), jnp.float32)
+    codes, scale = ops.quantize_kv_int8(x, jnp.uint32(11))
+    assert codes.dtype == jnp.int8
+    assert scale.shape == x.shape[:-1]
+    step = scale[..., None] / 127.0
+    deq = codes.astype(jnp.float32) * step
+    assert bool(jnp.all(jnp.abs(deq - x) <= step + 1e-6))
+    assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= 127
+
+
+def test_quantize_kv_int8_unbiased_over_seeds():
+    """E[dequant] ~= x over stochastic-rounding seeds — the paper's
+    unbiased conductance-programming property on the cache path.  With 256
+    seeds the worst-case element bias stays well inside the ~4-sigma band
+    of an unbiased rounder (sigma <= 0.5 step / sqrt(256))."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64), jnp.float32)
+    _, scale = ops.quantize_kv_int8(x, jnp.uint32(0))
+    step = scale[..., None] / 127.0
+    acc = jnp.zeros_like(x)
+    n = 256
+    for s in range(n):
+        codes, _ = ops.quantize_kv_int8(x, jnp.uint32(s))
+        acc = acc + codes.astype(jnp.float32) * step
+    bias_steps = jnp.max(jnp.abs(acc / n - x) / step)
+    assert float(bias_steps) < 0.2, float(bias_steps)
+
+
+def test_quantize_kv_int8_seed_varies_rounding():
+    """Different seeds must draw different rounding decisions (the decode
+    step feeds a fresh per-(step, layer) seed so cache noise never
+    repeats)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 32), jnp.float32)
+    c0, _ = ops.quantize_kv_int8(x, jnp.uint32(0))
+    c1, _ = ops.quantize_kv_int8(x, jnp.uint32(1))
+    assert bool(jnp.any(c0 != c1))

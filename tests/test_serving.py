@@ -362,11 +362,11 @@ def test_submit_rejects_request_larger_than_pool(smoke):
     cfg, params = smoke
     sc = ServeConfig(
         max_batch=2, max_new_tokens=8, max_len=64, kv_block_size=8,
-        kv_layout="paged", num_kv_blocks=2,
+        kv_layout="paged", num_kv_blocks=3,  # capacity 2: smallest req fits
     )
     eng = ServingEngine(params, cfg, sc)
     with pytest.raises(ValueError, match="pool"):
-        eng.submit([1] * 8, 8)  # needs 2 pages, capacity is 1
+        eng.submit([1] * 9, 8)  # bucket 16 + 8 -> 3 pages, capacity is 2
 
 
 def test_eviction_reclaims_blocks(smoke):
@@ -415,17 +415,159 @@ def test_paged_recompile_guard(smoke):
     assert eng.compile_counts() == counts, "steady-state trace recompiled"
 
 
-def test_paged_rejects_int8_cache(smoke):
-    cfg, params = smoke
-    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
-    with pytest.raises(ValueError, match="int8"):
-        ServingEngine(params, icfg, ServeConfig(kv_layout="paged"))
-
-
 def test_bad_kv_layout_is_loud(smoke):
     cfg, params = smoke
     with pytest.raises(ValueError, match="kv_layout"):
         ServingEngine(params, cfg, ServeConfig(kv_layout="flat"))
+
+
+def test_bad_kv_cache_dtype_is_loud(smoke):
+    cfg, params = smoke
+    bad = dataclasses.replace(cfg, kv_cache_dtype="fp4")
+    with pytest.raises(ValueError, match="kv_cache_dtype"):
+        ServingEngine(params, bad, ServeConfig())
+
+
+def test_bad_kv_block_size_is_loud(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="kv_block_size"):
+        ServingEngine(params, cfg, ServeConfig(kv_block_size=0))
+
+
+def test_pool_too_small_for_any_request_is_loud(smoke):
+    """A num_kv_blocks that could never admit even the smallest request
+    (shortest bucket + 1 token) must fail at engine construction, not hang
+    the admission gate forever."""
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_len=64, kv_block_size=8, num_kv_blocks=2,
+        prefill_buckets=(32,),  # min request needs ceil(33/8)=5 blocks
+    )
+    with pytest.raises(ValueError, match="admitted"):
+        ServingEngine(params, cfg, sc)
+    # same pool is fine once the buckets shrink the smallest request
+    ServingEngine(
+        params, cfg,
+        ServeConfig(max_len=64, kv_block_size=8, num_kv_blocks=2,
+                    prefill_buckets=(4, 32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 paged KV pool (stochastic-rounded quantized cache)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_int8_paged_matches_bf16_paged_greedy(arch):
+    """Acceptance contract: with kv_cache_dtype='int8' the paged engine's
+    greedy decode must agree with the bf16 paged path within tolerance —
+    on the smoke models the quantization error never flips an argmax, so
+    the token streams agree exactly (attention-only and hybrid families)."""
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    _, out_bf16 = _run_layout(params, cfg, "paged")
+    _, out_int8 = _run_layout(params, icfg, "paged")
+    assert sorted(out_bf16) == sorted(out_int8)
+    total = agree = 0
+    for rid in out_bf16:
+        assert len(out_bf16[rid]) == len(out_int8[rid])
+        total += len(out_bf16[rid])
+        agree += sum(a == b for a, b in zip(out_bf16[rid], out_int8[rid]))
+    assert agree / total >= 0.95, (agree, total)
+
+
+def test_int8_paged_matches_int8_dense(smoke):
+    """Dense-int8 (deterministic nearest rounding) and paged-int8
+    (stochastic rounding) are different quantizers of the same cache, so
+    token streams agree within tolerance, not byte-for-byte."""
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    _, out_dense = _run_layout(params, icfg, "dense")
+    _, out_paged = _run_layout(params, icfg, "paged")
+    total = agree = 0
+    for rid in out_dense:
+        total += len(out_dense[rid])
+        agree += sum(a == b for a, b in zip(out_dense[rid], out_paged[rid]))
+    assert agree / total >= 0.95, (agree, total)
+
+
+def test_int8_paged_identity_under_page_recycling(smoke):
+    """Forced page recycling (pool with zero slack) must not leak stale
+    codes or stale SCALES into a live window — agreement with the dense
+    int8 oracle holds while freed pages are re-handed mid-flight.
+    num_kv_blocks=7 is a bf16-block budget → 13 int8 pages, exactly the
+    widest co-resident working set of the mixed trace."""
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    _, out_dense = _run_layout(params, icfg, "dense")
+    eng, out_paged = _run_layout(
+        params, icfg, "paged", {"num_kv_blocks": 7}
+    )
+    assert eng.blocks.n_blocks == 13  # doubled budget, trash counted once
+    total = agree = 0
+    for rid in out_dense:
+        total += len(out_dense[rid])
+        agree += sum(a == b for a, b in zip(out_dense[rid], out_paged[rid]))
+    assert agree / total >= 0.95, (agree, total)
+    assert eng.blocks.available == eng.blocks.capacity
+
+
+def test_int8_pool_doubles_admission_capacity(smoke):
+    """At equal num_kv_blocks (a native-dtype memory budget) the int8 pool
+    holds twice the pages, so admission takes ~2x the requests — the
+    capacity half of the quantization win, visible to BlockAllocator."""
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+
+    def admitted(mcfg):
+        sc = ServeConfig(
+            max_batch=8, max_new_tokens=8, max_len=64, kv_block_size=8,
+            kv_layout="paged", num_kv_blocks=5,
+        )
+        eng = ServingEngine(params, mcfg, sc)
+        for _ in range(8):
+            eng.submit([1, 2, 3], 8)  # 2 blocks each
+        eng.tick()
+        return sum(
+            1 for r in eng.sched.all_requests()
+            if r.state is not RequestState.QUEUED
+        )
+
+    n16, n8 = admitted(cfg), admitted(icfg)
+    assert n16 == 2 and n8 == 4  # capacity 4 vs 9 blocks, 2 per request
+
+
+def test_int8_paged_recompile_guard(smoke):
+    """The int8 layout keeps the compile discipline: one compile per
+    prefill bucket (prefill + insert, quant key traced) and one per decode
+    window bucket, zero new compiles on a repeat trace."""
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    eng, _ = _run_layout(params, icfg, "paged")
+    counts = eng.compile_counts()
+    buckets_used = {eng._bucket(len(p)) for p in MIXED_PROMPTS}
+    assert counts["prefill"] == len(buckets_used)
+    assert counts["insert"] == len(buckets_used)
+    m = eng.metrics()
+    assert counts["serve_step"] <= 4
+    assert m.decode_steps > counts["serve_step"]
+    for p, b in zip(MIXED_PROMPTS, MIXED_BUDGETS):
+        eng.submit(p, b)
+    eng.run()
+    assert eng.compile_counts() == counts, "steady-state trace recompiled"
+
+
+def test_int8_paged_no_unused_donation_warnings(smoke):
+    """The scale planes must stay donation-aliasable like the code pools."""
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "error", message=".*[Dd]onat.*", category=UserWarning
+        )
+        _run_layout(params, icfg, "paged")
 
 
 # ---------------------------------------------------------------------------

@@ -205,12 +205,106 @@ def test_paged_serve_step_rejects_encdec():
         SP.make_paged_serve_step(cfg)
 
 
-def test_paged_cache_int8_unsupported_is_loud():
+def test_paged_cache_int8_layout():
+    """int8 pools: K/V pages hold int8 codes and grow per-(page,
+    slot-in-page, head) f32 scale planes; everything else keeps the bf16
+    pool's layout."""
     cfg = dataclasses.replace(
         get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
     )
-    with pytest.raises(NotImplementedError, match="int8"):
-        SP.init_paged_decode_cache(cfg, B, P, BS)
+    specs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    n_attn = sum(1 for k in cfg.layer_pattern if k in ("global", "local"))
+    want = (cfg.n_units, n_attn, P, BS, cfg.n_kv_heads, cfg.head_dim)
+    assert specs["k_pages"].shape == want
+    assert specs["k_pages"].dtype == jnp.int8
+    assert specs["v_pages"].dtype == jnp.int8
+    assert specs["k_scale_pages"].shape == want[:-1]
+    assert specs["k_scale_pages"].dtype == jnp.float32
+    assert specs["v_scale_pages"].shape == want[:-1]
+    live = SP.init_paged_decode_cache(cfg, B, P, BS)
+    assert _tree_specs(live) == _tree_specs(specs)
+
+
+@pytest.mark.parametrize("wta", [False, True])
+def test_int8_paged_serve_step_shape_contract(wta):
+    """The int8 pool keeps the (params, cache, table, token) -> (cache,
+    token) contract with output cache specs equal to the input's — codes
+    AND scale planes (donation + no recompile)."""
+    cfg = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), kv_cache_dtype="int8", wta_head=wta
+    )
+    ps = SP.params_specs(cfg)
+    cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tbl = jax.ShapeDtypeStruct((B, 2), jnp.int32)
+    args = [ps, cs, tbl, tok]
+    if wta:
+        args += [
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ]
+    out_cache, out_tok = jax.eval_shape(SP.make_paged_serve_step(cfg), *args)
+    assert _tree_specs(out_cache) == _tree_specs(cs)
+    assert out_tok.shape == (B,)
+
+
+def test_int8_paged_insert_quantizes_into_tabled_pages():
+    """A full-precision one-request prefill cache lands as int8 codes +
+    scales in exactly the tabled pages; untouched pages keep zero codes
+    and unit scales; the dequantized codes reconstruct the source within
+    one scale step (the stochastic-rounding error bound)."""
+    cfg = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
+    )
+    fp_cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    lpad = 2 * BS
+    one = SP.init_decode_cache(fp_cfg, 1, lpad)
+    one["k"] = jax.random.normal(
+        jax.random.PRNGKey(3), one["k"].shape, jnp.float32
+    )
+    one["v"] = jax.random.normal(
+        jax.random.PRNGKey(4), one["v"].shape, jnp.float32
+    )
+    one["pos"] = jnp.full((1,), lpad, jnp.int32)
+    row = np.zeros((4,), np.int32)
+    row[:2] = [3, 5]
+    insert = jax.jit(SP.make_paged_cache_insert(cfg))
+    out = insert(cache, one, 2, jnp.asarray(row), jax.random.PRNGKey(9))
+    kp = np.asarray(out["k_pages"], np.float32)
+    ks = np.asarray(out["k_scale_pages"], np.float32)
+    untouched = [p for p in range(P) if p not in (3, 5)]
+    np.testing.assert_array_equal(kp[:, :, untouched], 0)
+    np.testing.assert_array_equal(ks[:, :, untouched], 1.0)
+    nu, na, _, L, hkv, dh = one["k"].shape
+    src = np.asarray(one["k"], np.float32)[:, :, 0].reshape(
+        nu, na, 2, BS, hkv, dh
+    )
+    deq = kp[:, :, [3, 5]] * ks[:, :, [3, 5], ..., None] / 127.0
+    step = ks[:, :, [3, 5], ..., None] / 127.0
+    assert np.all(np.abs(deq - src) <= step + 1e-6)
+    assert np.asarray(out["pos"])[2] == lpad
+
+
+def test_int8_paged_insert_slot_pages_and_key_are_traced():
+    """One compile serves every (slot, page set, quantization key) — the
+    stochastic-rounding seed must not trigger per-request recompiles."""
+    cfg = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
+    )
+    fp_cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    one = SP.init_decode_cache(fp_cfg, 1, BS)
+    insert = jax.jit(SP.make_paged_cache_insert(cfg))
+    for slot in range(B):
+        row = np.full((4,), 0, np.int32)
+        row[0] = slot + 1
+        insert(
+            cache, one, slot, jnp.asarray(row),
+            jax.random.fold_in(jax.random.PRNGKey(0), slot),
+        )
+    ntraces = insert._cache_size()
+    assert ntraces == 1, f"int8 paged insert recompiled {ntraces}x"
 
 
 def test_sample_tokens_greedy_and_legacy_key():
