@@ -22,7 +22,12 @@ and mean slot occupancy.  The headline system-level claims:
   fused into the attention math) is compared against the bf16 pool on the
   same trace (decode-step latency + tokens/s), and an equal-memory
   capacity sweep counts requests ADMITTED at a fixed num_kv_blocks budget
-  — int8 pages cost half the K/V bytes, so the same budget admits ~2x.
+  — int8 pages cost half the K/V bytes, so the same budget admits ~2x;
+* prefix sharing on a repeated-prefix trace (the shared-system-prompt
+  workload): prefill computations saved via content-hash block reuse,
+  admission capacity at an equal num_kv_blocks budget, and a standing
+  byte-identity check between the sharing-on and sharing-off token
+  streams (validate_report fails the run on divergence).
 
 Results (tokens/s, TTFT, decode-step ms, occupancy for every engine) are
 also written to a JSON file for CI artifact tracking.
@@ -59,6 +64,7 @@ REPORT_SCHEMA = {
     "paged_vs_dense": list,
     "paged_int8_vs_bf16": list,
     "int8_capacity_sweep": dict,
+    "prefix_sharing": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -67,6 +73,11 @@ _INT8_ROW_KEYS = {
 }
 _CAPACITY_KEYS = {
     "num_kv_blocks", "blocks_per_request", "admitted_bf16", "admitted_int8",
+    "capacity_ratio",
+}
+_PREFIX_KEYS = {
+    "n_requests", "prompt_len", "off", "on", "prefill_savings",
+    "tokens_match", "num_kv_blocks", "admitted_off", "admitted_on",
     "capacity_ratio",
 }
 
@@ -91,6 +102,15 @@ def validate_report(report: dict) -> None:
     if missing:
         raise ValueError(
             f"int8_capacity_sweep missing keys {sorted(missing)}"
+        )
+    missing = _PREFIX_KEYS - set(report["prefix_sharing"])
+    if missing:
+        raise ValueError(
+            f"prefix_sharing missing keys {sorted(missing)}"
+        )
+    if report["prefix_sharing"]["tokens_match"] is not True:
+        raise ValueError(
+            "prefix_sharing: sharing-on vs sharing-off decode diverged"
         )
 
 
@@ -290,6 +310,75 @@ def bench_paged_int8(
     return out
 
 
+def bench_prefix_sharing(cfg, params, n_req: int = 12) -> dict:
+    """Repeated-prefix trace: the same prompt submitted ``n_req`` times.
+
+    The trace every prefix cache is built for (shared system prompt /
+    few-shot header).  Measured end to end through the engine:
+
+    * prefill work saved — with sharing on, every repeat that overlaps a
+      resident copy maps the prompt blocks and samples its first token
+      from the stored last-token logits instead of recomputing the bucket
+      prefill (``metrics.prefills`` vs ``prefix_hits``);
+    * admission capacity at equal ``num_kv_blocks`` — a tight pool admits
+      the original (full block budget) plus repeats at one decode-budget
+      allocation each, vs ``floor(capacity / full_budget)`` without
+      sharing;
+    * safety — the sharing-on and sharing-off token streams must be
+      IDENTICAL (``tokens_match``; validate_report fails the run on a
+      divergence, making CI a standing byte-identity check).
+    """
+    prompt = list(range(1, 17))  # bucket 16, block-aligned
+    budget = 8
+    serve = dict(
+        max_batch=4, max_new_tokens=budget, max_len=64,
+        kv_layout="paged", kv_block_size=8,
+    )
+    out: dict = {"n_requests": n_req, "prompt_len": len(prompt)}
+    streams = {}
+    for label, share in (("off", False), ("on", True)):
+        eng = ServingEngine(
+            params, cfg, ServeConfig(**serve, enable_prefix_sharing=share)
+        )
+        rids = [eng.submit(prompt, budget) for _ in range(n_req)]
+        outs = eng.run()
+        streams[label] = [outs[r] for r in rids]
+        m = eng.metrics()
+        out[label] = {
+            "prefills": m.prefills,
+            "prefix_hits": m.prefix_hits,
+            "cow_forks": m.cow_forks,
+            "tokens_per_s": round(m.tokens_per_s, 1),
+            "ttft_ms": round(m.ttft_mean * 1e3, 2),
+        }
+    out["prefill_savings"] = round(
+        1.0 - out["on"]["prefills"] / max(out["off"]["prefills"], 1), 2
+    )
+    out["tokens_match"] = streams["on"] == streams["off"]
+
+    # admission capacity at an equal, deliberately tight block budget
+    out["num_kv_blocks"] = 8
+    for label, share in (("off", False), ("on", True)):
+        eng = ServingEngine(
+            params, cfg,
+            ServeConfig(
+                **dict(serve, max_batch=8), num_kv_blocks=8,
+                enable_prefix_sharing=share,
+            ),
+        )
+        for _ in range(8):
+            eng.submit(prompt, budget)
+        eng.tick()
+        out[f"admitted_{label}"] = sum(
+            1 for r in eng.sched.all_requests()
+            if r.state is not RequestState.QUEUED
+        )
+    out["capacity_ratio"] = round(
+        out["admitted_on"] / max(out["admitted_off"], 1), 2
+    )
+    return out
+
+
 def bench_int8_capacity(cfg, params, num_kv_blocks: int = 9) -> dict:
     """Equal-memory admission sweep: requests admitted on the first tick at
     a fixed ``num_kv_blocks`` budget.  int8 pages cost half the K/V bytes,
@@ -308,6 +397,10 @@ def bench_int8_capacity(cfg, params, num_kv_blocks: int = 9) -> dict:
             max_batch=32, max_new_tokens=budget, max_len=64,
             kv_layout="paged", kv_block_size=block_size,
             num_kv_blocks=num_kv_blocks,
+            # identical prompts would ALSO share pages — sharing off to
+            # isolate the dtype-driven capacity factor (the sharing win is
+            # measured by bench_prefix_sharing)
+            enable_prefix_sharing=False,
         )
         eng = ServingEngine(params, mcfg, sc)
         for _ in range(32):
@@ -435,6 +528,23 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"admitted_bf16={cap['admitted_bf16']} "
             f"admitted_int8={cap['admitted_int8']} "
             f"ratio={cap['capacity_ratio']:.2f}x",
+        )
+    )
+    # prefix sharing on a repeated-prefix trace: prefill FLOPs saved +
+    # admission capacity at equal num_kv_blocks, with byte-identity checked
+    pfx = bench_prefix_sharing(
+        pvd_cfg, pvd_params, n_req=6 if dry_run else 12
+    )
+    report["prefix_sharing"] = pfx
+    rows.append(
+        (
+            "serve_prefix_sharing",
+            0.0,
+            f"prefills={pfx['off']['prefills']}->{pfx['on']['prefills']} "
+            f"savings={pfx['prefill_savings']:.2f} "
+            f"admitted={pfx['admitted_off']}->{pfx['admitted_on']} "
+            f"capacity={pfx['capacity_ratio']:.2f}x "
+            f"match={pfx['tokens_match']}",
         )
     )
     return rows, report

@@ -10,7 +10,13 @@ live batch and refills slots as short requests finish.
 int8 codes + scale planes — half the decode HBM bytes per token, with
 dequantization fused into the attention math.
 
+Two of the requests share an identical prompt: with prefix sharing (on by
+default) the repeat maps the resident prompt blocks through the
+content-hash index and skips its bucket prefill entirely — the summary
+line counts the hits.  ``--no-prefix-sharing`` turns the dedup off.
+
     PYTHONPATH=src python examples/serve_stochastic.py [--kv-dtype int8]
+        [--no-prefix-sharing]
 """
 
 import argparse
@@ -29,6 +35,10 @@ def main():
         "--kv-dtype", choices=("same", "int8"), default="same",
         help="KV cache dtype; 'int8' = stochastic-rounded quantized pool",
     )
+    ap.add_argument(
+        "--no-prefix-sharing", action="store_true",
+        help="disable content-hash prompt-block sharing (COW paged pool)",
+    )
     args = ap.parse_args()
 
     base = get_smoke_config("stablelm-3b")
@@ -38,11 +48,11 @@ def main():
     fns = get_model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
 
-    requests = [  # (prompt, max_new_tokens) — mixed lengths and budgets
-        ([11, 42, 7], 16),
-        ([3, 3, 3, 3], 6),
+    requests = [  # (prompt, max_new_tokens) — mixed lengths and budgets,
+        ([11, 42, 7], 16),      # with one repeated prompt so the prefix
+        ([3, 3, 3, 3], 6),      # index has something to dedup
         ([250, 1, 99, 5, 17], 12),
-        ([8], 8),
+        ([11, 42, 7], 8),
     ]
 
     for mode, wta in (("greedy (digital argmax)", False),
@@ -50,7 +60,14 @@ def main():
         mcfg = dataclasses.replace(cfg, wta_head=wta)
         eng = ServingEngine(
             params, mcfg,
-            ServeConfig(max_batch=3, max_new_tokens=16, max_len=128),
+            ServeConfig(
+                max_batch=3, max_new_tokens=16, max_len=128,
+                # block == smallest bucket: short prompts fill whole
+                # blocks, so the repeated prompt can share them while the
+                # original is still decoding
+                kv_block_size=8,
+                enable_prefix_sharing=not args.no_prefix_sharing,
+            ),
         )
         rids = [eng.submit(p, n) for p, n in requests]
         outs = eng.run()
@@ -62,7 +79,9 @@ def main():
             f"  {m.completed} requests, {m.total_tokens} tokens: "
             f"{m.tokens_per_s:.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms, "
             f"occupancy {m.occupancy_mean:.2f} "
-            f"over {m.decode_steps} decode steps"
+            f"over {m.decode_steps} decode steps; "
+            f"{m.prefills} prefills ({m.prefix_hits} prefix hits, "
+            f"{m.cow_forks} COW forks)"
         )
 
 

@@ -45,6 +45,9 @@ def main() -> None:
                     help="KV cache dtype: 'int8' stores stochastically "
                          "rounded int8 codes + scale planes (half the "
                          "decode HBM bytes; doubled paged-pool capacity)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable content-hash prompt-block sharing with "
+                         "copy-on-write in the paged pool")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -72,6 +75,7 @@ def main() -> None:
             kv_layout=args.kv_layout,
             kv_block_size=args.kv_block_size,
             num_kv_blocks=args.kv_blocks,
+            enable_prefix_sharing=not args.no_prefix_sharing,
         ),
     )
     rng = jax.random.PRNGKey(7)
@@ -90,8 +94,8 @@ def main() -> None:
     print(
         f"served {len(outs)} requests, {total} tokens in {dt:.2f}s "
         f"({total / max(dt, 1e-9):.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms,"
-        f" occupancy {m.occupancy_mean:.2f}, engine="
-        f"{'static' if args.static else 'continuous'}, sampler="
+        f" occupancy {m.occupancy_mean:.2f}, prefix hits {m.prefix_hits},"
+        f" engine={'static' if args.static else 'continuous'}, sampler="
         f"{'WTA votes' if args.wta else 'greedy'})"
     )
     for o in outs:

@@ -125,7 +125,7 @@ def make_paged_cache_insert(cfg: ModelConfig):
     """Insert one request's prefill cache into the paged batch cache.
 
     (paged_cache, one_cache(B=1, len=L·), slot int32, table_row int32
-    [, quant_key]) → paged_cache.  The one-request cache comes out of the
+    [, quant_seeds]) → paged_cache.  The one-request cache comes out of the
     ordinary dense prefill, built at a window already padded to a block
     multiple; its K/V are reshaped into blocks and scattered to the pages
     named by the first ``L/block_size`` entries of ``table_row``.  Dense
@@ -134,27 +134,51 @@ def make_paged_cache_insert(cfg: ModelConfig):
     bucket serves every (slot, page set) of a live batch.
 
     Int8 pools (``k_scale_pages`` present): the dense prefill K/V stay full
-    precision and are quantized HERE — per-(position, head) scale, codes
-    stochastically rounded (kernels.ops.quantize_kv_int8, seeded from
-    ``quant_key`` so each request's cache programming is an independent
-    unbiased draw), scales scattered to the matching scale-plane pages.
-    The key is traced: one compile per prefill bucket, same as the rest.
+    precision and are quantized HERE, one block at a time — per-(position,
+    head) scale, codes stochastically rounded
+    (kernels.ops.quantize_kv_pair_int8) under the per-block ``quant_seeds``
+    ((L/block_size,) uint32).  The engine derives each block's seed from
+    its *content chain hash* (scheduler.prefix_block_hashes), NOT from the
+    request id: any re-prefill of the same prompt prefix then produces
+    bit-identical codes, which is what lets prefix sharing map an int8
+    block into several requests' tables (a request-keyed seed would make
+    the "same" block byte-diverge per request).  The seed vector is
+    traced: one compile per prefill bucket, same as the rest.
     """
     from repro.kernels import ops as KOPS
-    from repro.kernels import prng as KPRNG
 
     def insert(
-        batch_cache: dict, one_cache: dict, slot, table_row, quant_key=None
+        batch_cache: dict, one_cache: dict, slot, table_row, quant_seeds=None
     ) -> dict:
         out = {}
         int8_pool = "k_scale_pages" in batch_cache
         if int8_pool:
-            quant = KOPS.quantize_kv_pair_int8(
-                one_cache["k"], one_cache["v"], KPRNG.key_to_seed(quant_key)
+            # blockwise quantization under content-derived per-block seeds;
+            # element counters restart per block, so (block content, seed)
+            # fully determines the codes regardless of block position in
+            # the prefill window
+            src_k, src_v = one_cache["k"], one_cache["v"]
+            nu, na, _, lpad, hkv, dh = src_k.shape
+            bs = batch_cache["k_pages"].shape[3]
+            assert lpad % bs == 0, (
+                f"prefill window {lpad} not a multiple of the KV block "
+                f"size {bs}"
             )
+            nb = lpad // bs
+            kb = src_k[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
+            vb = src_v[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
+            kc, ks, vc, vs = [], [], [], []
+            for b in range(nb):
+                k8, ksc, v8, vsc = KOPS.quantize_kv_pair_int8(
+                    kb[:, :, b], vb[:, :, b], quant_seeds[b]
+                )
+                kc.append(k8)
+                ks.append(ksc)
+                vc.append(v8)
+                vs.append(vsc)
             quantized = {
-                "k_pages": quant[0:2],   # (codes, scale)
-                "v_pages": quant[2:4],
+                "k_pages": (jnp.stack(kc, axis=2), jnp.stack(ks, axis=2)),
+                "v_pages": (jnp.stack(vc, axis=2), jnp.stack(vs, axis=2)),
             }
         for name, leaf in batch_cache.items():
             if name in ("k_pages", "v_pages"):
@@ -167,9 +191,7 @@ def make_paged_cache_insert(cfg: ModelConfig):
                 )
                 nb = lpad // bs
                 if int8_pool:
-                    codes, scale = quantized[name]
-                    blocks = codes[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
-                    sblocks = scale[:, :, 0].reshape(nu, na, nb, bs, hkv)
+                    blocks, sblocks = quantized[name]
                     out[name] = leaf.at[:, :, table_row[:nb]].set(blocks)
                     sleaf = batch_cache[f"{name[0]}_scale_pages"]
                     out[f"{name[0]}_scale_pages"] = sleaf.at[
@@ -192,6 +214,63 @@ def make_paged_cache_insert(cfg: ModelConfig):
         return out
 
     return insert
+
+
+# page-pool cache leaves (vs the dense per-slot leaves) — the split that
+# prefix sharing relies on: pool leaves are mapped through block tables and
+# may be shared across slots, per-slot leaves are always private
+PAGE_POOL_LEAVES = (
+    "k_pages", "v_pages", "k_scale_pages", "v_scale_pages"
+)
+
+
+def make_paged_state_insert(cfg: ModelConfig):
+    """Insert only the dense per-slot leaves of a one-request cache.
+
+    (paged_cache, state_leaves{B=1}, slot int32) → paged_cache.  The
+    prefix-sharing full-hit admission path: when every block covering a
+    request's padded prompt is already resident (matched through the
+    allocator's content-hash index), the engine maps the shared pages into
+    the slot's table row and skips the prefill — but the per-slot leaves
+    (``pos``, recurrent/SSM states) still need the stored values from the
+    original prefill.  ``state_leaves`` holds exactly those leaves (no
+    ``k``/``v``); their shapes are bucket-independent, so this compiles
+    ONCE for the engine's whole lifetime.
+    """
+
+    def insert(batch_cache: dict, state_leaves: dict, slot) -> dict:
+        out = dict(batch_cache)
+        for name, upd in state_leaves.items():
+            leaf = batch_cache[name]
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, upd.astype(leaf.dtype), slot,
+                axis=cache_batch_axis(cfg, name),
+            )
+        return out
+
+    return insert
+
+
+def make_page_copy(cfg: ModelConfig):
+    """Copy one pool page onto another across every page-pool leaf.
+
+    (paged_cache, src int32, dst int32) → paged_cache.  The device half of
+    a copy-on-write fork: the engine repoints the writer's table row at
+    ``dst`` and the batched decode step then writes there, while the other
+    owners keep reading the pristine ``src``.  int8 pools copy the scale
+    planes alongside the code pages.  Page ids are traced — one compile
+    serves every fork.
+    """
+
+    def copy(cache: dict, src, dst) -> dict:
+        out = dict(cache)
+        for name in PAGE_POOL_LEAVES:
+            if name in cache:
+                leaf = cache[name]  # (nu, n_attn, P, bs, ...)
+                out[name] = leaf.at[:, :, dst].set(leaf[:, :, src])
+        return out
+
+    return copy
 
 
 def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):

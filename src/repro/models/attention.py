@@ -399,10 +399,16 @@ def paged_write(
     """Scatter one token's K/V rows (or their scales) into each slot's
     current block.
 
-    The target page is ``table[b, pos[b] // bs]``; active slots own disjoint
-    pages so the scatter never collides.  Slots whose table row is all-trash
-    (page 0, the engine's reserved scratch block) write into page 0, which no
-    live request ever reads.  ``pos // bs`` is clamped into the table width
+    The target page is ``table[b, pos[b] // bs]``; the engine guarantees
+    every slot's *current* page is exclusively owned, so the scatter never
+    collides.  With prefix sharing, a page may appear in several slots'
+    tables (aliased READS are fine — the gather is pure), but a shared
+    page is never a write target: the engine's host-side copy-on-write
+    pass forks (or deregisters) any still-shared page at ``pos // bs``
+    before the decode step runs, which is what keeps this scatter
+    collision-free.  Slots whose table row is all-trash (page 0, the
+    engine's reserved scratch block) write into page 0, which no live
+    request ever reads.  ``pos // bs`` is clamped into the table width
     so evicted slots whose ``pos`` keeps advancing stay in bounds.
     """
     bs = pages.shape[1]
@@ -417,8 +423,11 @@ def paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
 
     Block i of a slot's table holds logical positions [i·bs, (i+1)·bs), so
     the gathered window is exactly the prefix of the dense per-slot cache —
-    the invariant the dense-vs-paged equivalence tests pin down.  Works for
-    K/V pools (trailing (Hkv, Dh)) and their scale planes (trailing (Hkv,)).
+    the invariant the dense-vs-paged equivalence tests pin down.  Several
+    table rows may name the same page (prefix sharing): the gather
+    replicates it per slot, so shared and private layouts read
+    identically.  Works for K/V pools (trailing (Hkv, Dh)) and their
+    scale planes (trailing (Hkv,)).
     """
     b, w = table.shape
     bs = pages.shape[1]

@@ -320,8 +320,14 @@ def init_paged_decode_cache(
     shared by ALL slots; which pages a slot owns is the engine's block
     table (host state, passed to the decode step each tick).  Capacity is
     pooled: n_pages · block_size tokens total, instead of the dense
-    batch · max_len per-slot reservation.  Recurrent/SSM states keep the
-    dense slot layout (they are O(1) per slot).
+    batch · max_len per-slot reservation.  A page may even back SEVERAL
+    slots' tables at once (prefix sharing): prompt blocks are read-only
+    for their whole shared lifetime, and the engine copy-on-write forks a
+    shared page before any slot writes into it, so nothing in this layout
+    (or the decode step) distinguishes shared from private pages.
+    Recurrent/SSM states keep the dense slot layout (they are O(1) per
+    slot and never shared — they are inserted per admission, from the
+    prefill or from the prefix index's stored payload).
 
     With ``cfg.kv_cache_dtype == "int8"`` the K/V pools hold int8 codes
     (half the HBM bytes per page) plus per-(page, slot-in-page, head) f32

@@ -34,6 +34,18 @@ paged-attention math, and ``num_kv_blocks`` (a native-dtype memory budget)
 buys twice the pages, so admission takes ~2x the requests at equal budget
 (docs/serving.md §"Quantized KV pool").
 
+Prefix sharing (``ServeConfig.enable_prefix_sharing``, paged only): each
+admission chains content hashes over its padded prompt's blocks and maps
+any resident match into its block table (refcount bump in the allocator's
+prefix index) instead of re-prefilling it — a *full* match skips the
+bucket prefill entirely, sampling its first token from the original
+prefill's stored last-token logits and inserting the stored O(1) per-slot
+state leaves.  The first write into a still-shared block copy-on-write
+forks it onto a spare page reserved at admission; pages return to the free
+list only at refcount zero.  int8 pools stay shareable because block
+quantization seeds derive from block CONTENT (chain hash), not the request
+id (docs/serving.md §"Prefix sharing & copy-on-write").
+
 WTA sampling stays independent per request: every slot carries the key
 ``fold_in(base_key, rid)`` and a step counter, so a request's vote noise is
 a function of (its rid, its token index) only — invariant to batch
@@ -60,6 +72,7 @@ from repro.serving.scheduler import (
     RequestState,
     Scheduler,
     left_pad,
+    prefix_block_hashes,
 )
 
 
@@ -90,6 +103,13 @@ class ServeConfig:
     # (max_batch · ceil(max_len / block) + 1 trash block).  Set it lower to
     # shrink cache memory — admission back-pressures when the pool runs dry.
     num_kv_blocks: int = 0
+    # paged layout only: admissions match their padded prompt's blocks
+    # against resident blocks (content-hash prefix index) and map the hits
+    # into their block table instead of re-prefilling; the first write into
+    # a still-shared block copy-on-write forks it.  Greedy decode is
+    # byte-identical with sharing on vs off (tests/test_serving.py); turn
+    # it off to isolate raw pool behavior (capacity benchmarks).
+    enable_prefix_sharing: bool = True
 
     def buckets(self) -> tuple[int, ...]:
         if not self.prefill_buckets:
@@ -149,6 +169,12 @@ class ServeConfig:
                 raise ValueError(
                     f"kv_block_size must be >= 1, got {self.kv_block_size}"
                 )
+            if not isinstance(self.enable_prefix_sharing, bool):
+                # a truthy string like "off" would silently ENABLE sharing
+                raise ValueError(
+                    f"enable_prefix_sharing must be a bool, got "
+                    f"{self.enable_prefix_sharing!r}"
+                )
             # the smallest admissible request: shortest prefill bucket + one
             # generated token, whole lifetime reserved at admission
             need = -(
@@ -175,9 +201,11 @@ class ServingMetrics:
     ttft_mean: float = 0.0      # submit → first generated token, seconds
     ttft_max: float = 0.0
     decode_steps: int = 0
-    prefills: int = 0
+    prefills: int = 0            # bucket prefills actually COMPUTED
     occupancy_mean: float = 0.0  # mean busy-slot fraction per decode step
     decode_time: float = 0.0     # seconds inside batched decode steps only
+    prefix_hits: int = 0         # admissions that skipped prefill entirely
+    cow_forks: int = 0           # shared blocks forked on first write
 
     @property
     def decode_step_ms(self) -> float:
@@ -204,6 +232,7 @@ class ServingEngine:
         cfg.validate(model_cfg.kv_cache_dtype)
         self.paged = cfg.kv_layout == "paged"
         self.int8 = self.paged and model_cfg.kv_cache_dtype == "int8"
+        self.sharing = self.paged and cfg.enable_prefix_sharing
         self.params = params
         self.mcfg = model_cfg
         self.cfg = cfg
@@ -224,6 +253,33 @@ class ServingEngine:
             self._insert = jax.jit(
                 SP.make_paged_cache_insert(model_cfg), donate_argnums=(0,)
             )
+            # prefix-sharing entry points (each compiles at most once —
+            # state-leaf shapes are bucket-independent, page ids / logits
+            # shapes are fixed): the full-hit admission inserts stored
+            # per-slot states instead of prefilling, samples the first
+            # token from stored last-token logits, and COW forks copy one
+            # pool page onto another
+            self._state_insert = jax.jit(
+                SP.make_paged_state_insert(model_cfg), donate_argnums=(0,)
+            )
+            self._page_copy = jax.jit(
+                SP.make_page_copy(model_cfg), donate_argnums=(0,)
+            )
+            self._sample0 = jax.jit(
+                lambda logits, key: SP.sample_tokens(
+                    model_cfg, logits, key[None, :],
+                    jnp.zeros((1,), jnp.int32),
+                )
+            )
+            # rid -> admission plan built by the gate (block hashes,
+            # content-derived int8 quant seeds, full-hit flag); consumed by
+            # _admit_one.  A True gate always leads to admission, so plans
+            # cannot leak.
+            self._plans: dict[int, dict] = {}
+            # rid -> (hashes, seeds): pure function of the prompt, but a
+            # back-pressured queue head is re-gated every tick — memoize
+            # so only the index lookups rerun per attempt
+            self._hash_memo: dict[int, tuple] = {}
         else:
             self.blocks = None
             self._serve_step = jax.jit(
@@ -241,6 +297,8 @@ class ServingEngine:
         self._occ_sum = 0.0
         self._decode_steps = 0
         self._prefills = 0
+        self._prefix_hits = 0
+        self._cow_forks = 0
         self._total_tokens = 0
         self._busy_time = 0.0
         self._decode_time = 0.0
@@ -267,7 +325,10 @@ class ServingEngine:
             tok0 = SP.sample_tokens(
                 cfg, logits, key[None, :], jnp.zeros((1,), jnp.int32)
             )
-            return cache, tok0
+            # logits ride along so prefix sharing can stash them: a later
+            # identical prompt samples ITS tok0 from these exact bits
+            # (with its own per-request key) without recomputing prefill
+            return cache, tok0, logits
 
         return prefill
 
@@ -339,22 +400,75 @@ class ServingEngine:
         what makes multi-admission ticks safe: each True answer has already
         taken its pages, so the next queue head is gated against what is
         actually left.  A True from the gate always leads to admission, so
-        a reservation can never leak."""
-        nb = self._blocks_needed(
-            self._bucket(len(req.prompt)), req.max_new_tokens
-        )
-        if not self.blocks.can_alloc(nb):
+        a reservation can never leak.
+
+        With prefix sharing the gate first matches the padded prompt's
+        block chain hashes against the allocator's index: hits are mapped
+        (refcount bump) instead of allocated, a shared *partial* boundary
+        block additionally reserves one spare page as the guaranteed COW
+        fork target (the request WILL write into that block at its first
+        decode token), and the request's own fresh prompt blocks are
+        registered immediately — so identical prompts admitted in the same
+        tick already share.  Registration before the prefill write is safe:
+        shared pages are only ever read by the batched decode step, which
+        runs after every admission of the tick has inserted its content.
+        """
+        bucket = self._bucket(len(req.prompt))
+        nb_total = self._blocks_needed(bucket, req.max_new_tokens)
+        bs = self.cfg.kv_block_size
+        n_prompt = -(-bucket // bs)
+        plan: dict = {
+            "full_hit": False, "hashes": None, "seeds": None,
+            "n_prompt": n_prompt, "n_shared": 0,
+        }
+        if self.sharing or self.int8:
+            memo = self._hash_memo.get(req.rid)
+            if memo is None:
+                hashes = prefix_block_hashes(
+                    left_pad(req.prompt, bucket), bs
+                )
+                # canonical int8 rounding seeds: content-derived per
+                # block, so identical prefixes re-quantize to
+                # bit-identical codes
+                memo = (
+                    hashes,
+                    np.asarray([s for _, s in hashes], np.uint32),
+                )
+                self._hash_memo[req.rid] = memo
+            plan["hashes"], plan["seeds"] = memo
+        shared: list[int] = []
+        if self.sharing:
+            for h, _ in plan["hashes"]:
+                page = self.blocks.lookup(h)
+                if page is None:
+                    break
+                shared.append(page)
+        full = len(shared) == n_prompt
+        # a shared partial boundary block is written at the first decode
+        # token — reserve its fork page NOW so the COW can never starve
+        n_spare = 1 if (full and bucket % bs != 0) else 0
+        n_new = nb_total - len(shared)
+        if not self.blocks.can_alloc(n_new + n_spare):
             return False
-        self.blocks.alloc(req.rid, nb)
+        pages = self.blocks.reserve(req.rid, n_new, shared, n_spare)
+        if self.sharing:
+            for i in range(len(shared), n_prompt):
+                self.blocks.register(pages[i], plan["hashes"][i][0])
+            plan["full_hit"] = full
+            plan["n_shared"] = len(shared)
+        self._plans[req.rid] = plan
         return True
 
     def _release_if_done(self, req: Request) -> None:
         """Reclaim an evicted request's KV blocks and neutralize its slot.
 
-        The freed pages go back to the allocator (eligible for the next
-        admission), and the slot's table row is pointed at the trash page so
-        the still-running batched decode step writes nowhere a live request
-        reads — this is how a mid-flight refill recycles memory."""
+        The request's page references (mapped + any unspent COW spare) are
+        released; pages reach the free list only at refcount zero — a
+        prefix block still shared by another live request survives, and
+        its index entry with it.  The slot's table row is pointed at the
+        trash page so the still-running batched decode step writes nowhere
+        a live request reads — this is how a mid-flight refill recycles
+        memory."""
         if not (self.paged and req.state is RequestState.DONE):
             return
         self.blocks.free(req.rid)
@@ -363,39 +477,70 @@ class ServingEngine:
     def _admit_one(self, req: Request) -> None:
         slot = req.slot
         plen = self._bucket(len(req.prompt))
-        toks = np.asarray(
-            [left_pad(req.prompt, plen)], np.int32
-        )
         rkey = jax.random.fold_in(self._base_key, req.rid)
+        plan = self._plans.pop(req.rid, None) if self.paged else None
+        if self.paged:
+            self._hash_memo.pop(req.rid, None)
         if self.paged:
             pages = self.blocks.owned(req.rid)  # reserved by the gate
             row = np.zeros((self._max_blocks,), np.int32)
             row[: len(pages)] = pages
             self._table[slot] = row
             self._host_pos[slot] = plen
-        one_cache, tok0 = self._prefill(
-            self.params, jnp.asarray(toks), rkey
-        )
         if self._cache is None:
             self._cache = self._init_cache()
-        if self.paged:
-            if self.int8:
-                # fresh fold of the request key → independent unbiased
-                # rounding draws per request's cache programming
-                self._cache = self._insert(
-                    self._cache, one_cache, slot,
-                    jnp.asarray(self._table[slot]),
-                    jax.random.fold_in(rkey, 0x5eed),
-                )
-            else:
-                self._cache = self._insert(
-                    self._cache, one_cache, slot,
-                    jnp.asarray(self._table[slot]),
-                )
+        payload = None
+        if plan is not None and plan["full_hit"]:
+            # every block covering the padded prompt is resident; the last
+            # block's index entry carries the original prefill's last-token
+            # logits + per-slot state leaves (filled before this admission
+            # runs — FIFO order guarantees the registrant admitted first)
+            payload = self.blocks.payload(plan["hashes"][-1][0])
+        if payload is not None:
+            logits, state = payload
+            self._cache = self._state_insert(self._cache, state, slot)
+            tok0 = self._sample0(logits, rkey)
+            self._prefix_hits += 1
         else:
-            self._cache = self._insert(self._cache, one_cache, slot)
+            toks = np.asarray([left_pad(req.prompt, plen)], np.int32)
+            one_cache, tok0, logits = self._prefill(
+                self.params, jnp.asarray(toks), rkey
+            )
+            if self.paged:
+                if self.int8:
+                    # content-derived per-block rounding seeds (NOT the
+                    # request key): shared prefixes re-quantize to
+                    # bit-identical codes, which is what makes an int8
+                    # block shareable at all
+                    self._cache = self._insert(
+                        self._cache, one_cache, slot,
+                        jnp.asarray(self._table[slot]),
+                        jnp.asarray(plan["seeds"]),
+                    )
+                else:
+                    self._cache = self._insert(
+                        self._cache, one_cache, slot,
+                        jnp.asarray(self._table[slot]),
+                    )
+                if self.sharing:
+                    # publish this prompt's terminal entry so a later (or
+                    # same-tick) identical prompt can skip its prefill;
+                    # pool K/V live in the pages, so only the O(1)
+                    # per-slot leaves need stashing
+                    self.blocks.set_payload(
+                        plan["hashes"][-1][0],
+                        (
+                            logits,
+                            {
+                                n: v for n, v in one_cache.items()
+                                if n not in ("k", "v")
+                            },
+                        ),
+                    )
+            else:
+                self._cache = self._insert(self._cache, one_cache, slot)
+            self._prefills += 1
         self._req_keys[slot] = np.asarray(rkey)
-        self._prefills += 1
         self.sched.start_decode(req)
         t0 = int(tok0[0])  # blocks on the prefill — TTFT stamps after it
         self._tokens[slot] = t0
@@ -418,6 +563,8 @@ class ServingEngine:
             self._admit_one(req)
             emitted.append((req.rid, req.output[-1]))
         active = self.sched.active()
+        if active and self.sharing:
+            self._cow_pass(active)
         if active:
             t_dec = time.perf_counter()
             if self.paged:
@@ -455,6 +602,44 @@ class ServingEngine:
                 emitted.append((req.rid, t))
         self._busy_time += time.perf_counter() - t_start
         return emitted
+
+    def _cow_pass(self, active: list[Request]) -> None:
+        """Resolve copy-on-write state BEFORE the batched decode step.
+
+        Each active slot is about to write its K/V row into block
+        ``pos // block_size`` of its table.  If that page is still shared
+        (refcount > 1) the writer forks: its reserved spare page gets a
+        device-side copy of the pristine content and the table row is
+        repointed, so the write lands privately while the other owners
+        keep reading the original.  A *sole* owner writes in place, but
+        its page's index entry (if any) is dropped first — the content is
+        about to diverge from the registered hash, and a stale entry
+        would hand corrupted blocks to later admissions.
+
+        The one writer per shared page that holds no spare is its original
+        registrant (sharers always reserve a spare at the gate); every
+        co-writer of that page forks in this same pass — all copies read
+        the still-pristine page because the in-place write only happens
+        inside the decode step, after this pass completes.
+        """
+        bs = self.cfg.kv_block_size
+        for req in active:
+            wb = int(self._host_pos[req.slot]) // bs
+            if wb >= self._max_blocks:
+                continue
+            page = int(self._table[req.slot, wb])
+            if page < self.blocks.n_reserved:
+                continue  # trash row of an already-evicted slot
+            if (
+                self.blocks.refcount(page) > 1
+                and self.blocks.spare_count(req.rid) > 0
+            ):
+                _, new = self.blocks.cow_fork(req.rid, wb)
+                self._cache = self._page_copy(self._cache, page, new)
+                self._table[req.slot, wb] = new
+                self._cow_forks += 1
+            else:
+                self.blocks.deregister(page)  # no-op if never registered
 
     def _window_blocks(self, active: list[Request]) -> int:
         """Decode window width in blocks for this tick.
@@ -514,6 +699,8 @@ class ServingEngine:
             prefills=self._prefills,
             occupancy_mean=self._occ_sum / max(self._decode_steps, 1),
             decode_time=self._decode_time,
+            prefix_hits=self._prefix_hits,
+            cow_forks=self._cow_forks,
         )
 
     def compile_counts(self) -> dict[str, int]:
@@ -521,12 +708,21 @@ class ServingEngine:
 
         The recompile-guard tests pin these: a whole trace must cost one
         compile per prefill bucket (prefill + insert) and one per decode
-        window bucket (serve_step) — never one per tick or per slot."""
-        return {
+        window bucket (serve_step) — never one per tick or per slot.  The
+        prefix-sharing entry points (state_insert, page_copy, sample0)
+        compile at most ONCE each over the engine's lifetime: their
+        argument shapes are bucket-independent and page ids / slots /
+        seeds are all traced."""
+        counts = {
             "prefill": self._prefill._cache_size(),
             "insert": self._insert._cache_size(),
             "serve_step": self._serve_step._cache_size(),
         }
+        if self.paged:
+            counts["state_insert"] = self._state_insert._cache_size()
+            counts["page_copy"] = self._page_copy._cache_size()
+            counts["sample0"] = self._sample0._cache_size()
+        return counts
 
 
 class StaticServingEngine:

@@ -20,7 +20,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
-from typing import Callable, Optional, Sequence
+import hashlib
+from typing import Any, Callable, Optional, Sequence
 
 
 class RequestState(enum.Enum):
@@ -62,15 +63,70 @@ class Request:
         return self.first_token_time - self.submit_time
 
 
-class BlockAllocator:
-    """Free-list allocator over a fixed pool of KV-cache blocks.
+def prefix_block_hashes(
+    padded_prompt: Sequence[int], block_size: int
+) -> list[tuple[bytes, int]]:
+    """Chain hashes of a padded prompt's KV blocks.
 
-    Pure host bookkeeping for the paged cache: the engine asks for a
+    Block ``i`` of a paged cache holds logical positions
+    ``[i·block_size, (i+1)·block_size)``, so its K/V content is fully
+    determined by the padded prompt tokens up to and including that block
+    (positions are absolute — RoPE makes content position-dependent).  The
+    chain digest ``h_i = H(h_{i-1} || n_tokens || tokens_i)`` therefore
+    identifies *content at position*: two requests share block ``i`` iff
+    their padded prompts agree on every token before ``(i+1)·block_size``.
+    The trailing block of an unaligned prompt hashes only the tokens it
+    actually holds (``n_tokens`` disambiguates it from a full block).
+
+    Returns one ``(digest, seed)`` pair per block covering the padded
+    prompt; ``seed`` is a uint32 derived from the digest, used as the
+    canonical stochastic-rounding seed when the block is quantized to int8
+    (content-derived, NOT request-derived, so re-prefills of the same
+    prefix produce bit-identical codes and the blocks stay shareable).
+    """
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    out: list[tuple[bytes, int]] = []
+    h = b"raca-prefix-v1"
+    n = len(padded_prompt)
+    for start in range(0, n, block_size):
+        toks = padded_prompt[start : start + block_size]
+        m = hashlib.blake2b(digest_size=16)
+        m.update(h)
+        m.update(len(toks).to_bytes(4, "little"))
+        for t in toks:
+            m.update(int(t).to_bytes(8, "little", signed=True))
+        h = m.digest()
+        out.append((h, int.from_bytes(h[:4], "little")))
+    return out
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over a fixed pool of KV-cache blocks,
+    with a content-hash prefix index for block sharing.
+
+    Pure host bookkeeping for the paged cache: the engine reserves a
     request's whole block budget at admission (prefill blocks + decode
     budget blocks, so a decoding request can never run out mid-flight) and
-    returns them on eviction.  Block 0 is reserved as the *trash page*:
+    releases it on eviction.  Block 0 is reserved as the *trash page*:
     evicted slots' table rows point at it, so the decode step's writes from
     idle slots land somewhere no live request ever reads.
+
+    Prefix sharing: an allocated page may be *registered* under the chain
+    hash of the prompt block it holds (:func:`prefix_block_hashes`).  A
+    later admission whose prompt chain matches maps the resident page into
+    its own table (``reserve(shared=...)`` bumps the refcount) instead of
+    taking a fresh page.  Pages return to the free list only when their
+    refcount reaches zero, at which point their index entry (and any
+    payload attached to it) is dropped — the index can never hand out a
+    freed or recycled page.  A ``spare`` page can be reserved alongside as
+    the copy-on-write fork target for a shared block the request will
+    write into (:meth:`cow_fork`).
+
+    Index entries may carry an opaque ``payload`` (the engine stores the
+    original prefill's last-token logits + per-slot state leaves there, so
+    a full-prompt hit can skip its prefill entirely); the allocator never
+    inspects payloads, keeping this module host-only logic.
     """
 
     def __init__(self, n_blocks: int, n_reserved: int = 1):
@@ -83,7 +139,12 @@ class BlockAllocator:
         self.n_reserved = n_reserved
         # pop() from the tail → lowest-numbered pages are handed out first
         self._free = list(range(n_blocks - 1, n_reserved - 1, -1))
-        self._owned: dict[int, list[int]] = {}
+        self._refs: dict[int, int] = {}          # page -> refcount (>= 1)
+        self._owned: dict[int, list[int]] = {}   # owner -> mapped pages
+        self._spare: dict[int, list[int]] = {}   # owner -> COW fork targets
+        self._prefix: dict[bytes, int] = {}      # chain hash -> page
+        self._page_hash: dict[int, bytes] = {}   # page -> its chain hash
+        self._payload: dict[bytes, Any] = {}     # chain hash -> opaque data
 
     @property
     def capacity(self) -> int:
@@ -97,28 +158,149 @@ class BlockAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, owner: int, n: int) -> list[int]:
-        """Take ``n`` blocks for ``owner`` (a request id)."""
-        if n < 1:
-            raise ValueError(f"need at least one block, got {n}")
+    def refcount(self, page: int) -> int:
+        """How many owners reference ``page`` (0 = free/reserved)."""
+        return self._refs.get(page, 0)
+
+    def reserve(
+        self,
+        owner: int,
+        n_new: int,
+        shared: Sequence[int] = (),
+        n_spare: int = 0,
+    ) -> list[int]:
+        """Atomically take a request's whole block budget at admission.
+
+        ``shared`` pages (matched through the prefix index) get a refcount
+        bump and lead the owner's mapped list, in table order; ``n_new``
+        fresh pages follow; ``n_spare`` additional fresh pages are held
+        unmapped as guaranteed COW fork targets.  Either everything is
+        taken or nothing is (pool exhaustion raises before any state
+        changes), so an admission gate's True answer can never leak a
+        partial reservation.  Returns the mapped pages (shared + fresh).
+        """
+        if n_new < 0 or n_spare < 0:
+            raise ValueError(f"negative reservation ({n_new}, {n_spare})")
+        if not shared and n_new + n_spare < 1:
+            raise ValueError("empty reservation")
         if owner in self._owned:
             raise ValueError(f"owner {owner} already holds blocks")
-        if n > len(self._free):
+        if n_new + n_spare > len(self._free):
             raise ValueError(
-                f"pool exhausted: want {n}, have {len(self._free)}"
+                f"pool exhausted: want {n_new + n_spare}, "
+                f"have {len(self._free)}"
             )
-        blocks = [self._free.pop() for _ in range(n)]
-        self._owned[owner] = blocks
-        return list(blocks)
+        for p in shared:
+            if p not in self._refs:
+                raise ValueError(f"cannot share unallocated page {p}")
+        for p in shared:
+            self._refs[p] += 1
+        fresh = [self._free.pop() for _ in range(n_new)]
+        spare = [self._free.pop() for _ in range(n_spare)]
+        for p in fresh + spare:
+            self._refs[p] = 1
+        self._owned[owner] = list(shared) + fresh
+        self._spare[owner] = spare
+        return list(self._owned[owner])
+
+    def alloc(self, owner: int, n: int) -> list[int]:
+        """Take ``n`` fresh blocks for ``owner`` (the no-sharing path)."""
+        if n < 1:
+            raise ValueError(f"need at least one block, got {n}")
+        return self.reserve(owner, n)
+
+    def _decref(self, page: int) -> bool:
+        """Drop one reference; True if the page went back to the free list."""
+        self._refs[page] -= 1
+        if self._refs[page] > 0:
+            return False
+        del self._refs[page]
+        self.deregister(page)
+        self._free.append(page)
+        return True
 
     def free(self, owner: int) -> int:
-        """Return ``owner``'s blocks to the pool; returns how many."""
-        blocks = self._owned.pop(owner)
-        self._free.extend(reversed(blocks))
-        return len(blocks)
+        """Release ``owner``'s references (mapped + spare pages).
+
+        Returns how many pages actually went back to the pool — shared
+        pages survive until their LAST owner releases them (refcount
+        zero), which is the whole point of refcounting.
+        """
+        pages = self._owned.pop(owner)
+        pages = pages + self._spare.pop(owner, [])
+        return sum(self._decref(p) for p in reversed(pages))
 
     def owned(self, owner: int) -> list[int]:
         return list(self._owned.get(owner, []))
+
+    def spare_count(self, owner: int) -> int:
+        return len(self._spare.get(owner, []))
+
+    def cow_fork(self, owner: int, idx: int) -> tuple[int, int]:
+        """Repoint ``owner``'s mapped block ``idx`` at a reserved spare page.
+
+        The copy-on-write fork: called by the engine just before ``owner``
+        first writes into a block it shares.  The old page loses one
+        reference (it stays alive for — and registered to — its other
+        owners); the spare becomes the private replacement.  Returns
+        ``(old_page, new_page)`` so the engine can issue the device-side
+        page copy and repoint its table row.
+        """
+        old = self._owned[owner][idx]
+        if self._refs.get(old, 0) < 2:
+            raise ValueError(
+                f"COW fork of page {old} with refcount "
+                f"{self._refs.get(old, 0)} — nothing is shared"
+            )
+        if not self._spare.get(owner):
+            raise ValueError(f"owner {owner} reserved no spare fork page")
+        new = self._spare[owner].pop()
+        self._owned[owner][idx] = new
+        self._refs[old] -= 1
+        return old, new
+
+    # -- content-hash prefix index ------------------------------------------
+
+    def register(self, page: int, h: bytes, payload: Any = None) -> None:
+        """Publish ``page`` as holding the prompt block with chain hash
+        ``h``; later admissions matching ``h`` share it via ``reserve``."""
+        if page not in self._refs:
+            raise ValueError(f"cannot register unallocated page {page}")
+        if h in self._prefix:
+            raise ValueError(f"hash already registered to page {self._prefix[h]}")
+        if page in self._page_hash:
+            raise ValueError(f"page {page} already registered")
+        self._prefix[h] = page
+        self._page_hash[page] = h
+        if payload is not None:
+            self._payload[h] = payload
+
+    def lookup(self, h: bytes) -> Optional[int]:
+        """Resident page holding the block hashed ``h``, or None."""
+        return self._prefix.get(h)
+
+    def payload(self, h: bytes) -> Any:
+        return self._payload.get(h)
+
+    def set_payload(self, h: bytes, payload: Any) -> None:
+        if h not in self._prefix:
+            raise ValueError("cannot attach payload to unregistered hash")
+        self._payload[h] = payload
+
+    def deregister(self, page: int) -> None:
+        """Drop ``page``'s index entry (content diverged or page freed).
+
+        Idempotent: unregistered pages are a no-op, so the engine can call
+        it unconditionally before an in-place write.
+        """
+        h = self._page_hash.pop(page, None)
+        if h is not None:
+            self._prefix.pop(h, None)
+            self._payload.pop(h, None)
+
+    def registered_pages(self) -> dict[int, bytes]:
+        """page -> hash view of the prefix index (tests/debugging)."""
+        return dict(self._page_hash)
 
 
 class Scheduler:

@@ -1,0 +1,281 @@
+"""Property-based suite for the refcounted, prefix-indexed BlockAllocator.
+
+The allocator is pure host logic, so this file fuzzes it hard: random
+admission / COW-fork / eviction traces with invariants re-checked after
+EVERY operation.  Sharing multiplies aliasing hazards (refcounts, fork
+accounting, index staleness); the invariants below are the full safety
+contract the serving engine relies on:
+
+  * the free list and the allocated (refcount >= 1) pages partition the
+    non-reserved pool — no page is ever both, none is lost, and the pool
+    never exceeds its ``n_blocks`` budget;
+  * refcounts are conserved: a page's refcount equals the number of
+    (owner, mapped-or-spare) references that exist to it;
+  * no block is ever double-freed (the free list stays duplicate-free and
+    releasing an unknown owner raises);
+  * the prefix index only ever maps content hashes to LIVE pages, and a
+    page carries at most one hash.
+
+Randomness goes through tests/_hypothesis_compat (real hypothesis when
+installed, the deterministic fallback sampler otherwise), so the fuzz
+runs — and reproduces — on a bare container.
+"""
+
+import random
+
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.serving import BlockAllocator
+from repro.serving.scheduler import prefix_block_hashes
+
+given = hypothesis.given
+settings = hypothesis.settings
+
+
+# ---------------------------------------------------------------------------
+# Invariant checker (white-box: this suite owns the allocator's internals)
+# ---------------------------------------------------------------------------
+
+
+def check_invariants(a: BlockAllocator) -> None:
+    free = list(a._free)
+    allocated = set(a._refs)
+    pool = set(range(a.n_reserved, a.n_blocks))
+    # free-list ∪ in-use partitions the pool; nothing leaks, nothing is
+    # double-tracked, the pool never exceeds its block budget
+    assert len(free) == len(set(free)), "duplicate page on the free list"
+    assert not (set(free) & allocated), "page both free and allocated"
+    assert set(free) | allocated == pool, "pool partition broken"
+    assert len(free) + len(allocated) == a.capacity
+    # refcount conservation: every reference is an owner's mapped or spare
+    # entry, and every refcount is exactly the number of such references
+    counts: dict[int, int] = {}
+    for pages in a._owned.values():
+        for p in pages:
+            counts[p] = counts.get(p, 0) + 1
+    for pages in a._spare.values():
+        for p in pages:
+            counts[p] = counts.get(p, 0) + 1
+    assert counts == a._refs, "refcounts out of sync with ownership"
+    for p, r in a._refs.items():
+        assert r >= 1
+        assert p >= a.n_reserved, "reserved trash page was allocated"
+    # prefix index maps hashes to live pages only, one hash per page, and
+    # payloads only hang off registered hashes
+    assert len(a._prefix) == len(a._page_hash)
+    for h, p in a._prefix.items():
+        assert p in allocated, "index maps a freed page"
+        assert a._page_hash.get(p) == h
+    for h in a._payload:
+        assert h in a._prefix, "payload attached to a dropped entry"
+
+
+# ---------------------------------------------------------------------------
+# Directed unit tests: refcount lifecycle, sharing, COW, misuse
+# ---------------------------------------------------------------------------
+
+
+def test_share_keeps_page_alive_until_refcount_zero():
+    a = BlockAllocator(8)
+    (p,) = a.alloc(0, 1)
+    a.register(p, b"h0")
+    a.reserve(1, n_new=1, shared=[p])
+    assert a.refcount(p) == 2
+    a.free(0)
+    # still referenced by owner 1: page survives, index entry survives
+    assert a.refcount(p) == 1
+    assert a.lookup(b"h0") == p
+    assert a.free(1) == 2  # p AND owner 1's fresh page hit refcount zero
+    assert a.refcount(p) == 0
+    assert a.lookup(b"h0") is None
+    assert a.available == a.capacity
+    check_invariants(a)
+
+
+def test_reserve_is_atomic_on_exhaustion():
+    a = BlockAllocator(4)  # capacity 3
+    (p,) = a.alloc(0, 1)
+    a.register(p, b"h0")
+    with pytest.raises(ValueError, match="exhausted"):
+        a.reserve(1, n_new=3, shared=[p], n_spare=1)
+    # the failed reservation must not have bumped the shared refcount
+    assert a.refcount(p) == 1
+    assert a.available == 2
+    check_invariants(a)
+
+
+def test_reserve_rejects_unallocated_shared_page():
+    a = BlockAllocator(8)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.reserve(0, n_new=1, shared=[5])
+    check_invariants(a)
+
+
+def test_cow_fork_swaps_in_the_spare():
+    a = BlockAllocator(8)
+    (p,) = a.alloc(0, 1)
+    a.register(p, b"h0")
+    a.reserve(1, n_new=1, shared=[p], n_spare=1)
+    old, new = a.cow_fork(1, 0)
+    assert old == p and new != p
+    assert a.owned(1)[0] == new
+    assert a.refcount(p) == 1     # back to the registrant alone
+    assert a.refcount(new) == 1
+    assert a.spare_count(1) == 0
+    assert a.lookup(b"h0") == p   # pristine page stays indexed
+    check_invariants(a)
+
+
+def test_cow_fork_misuse_is_loud():
+    a = BlockAllocator(8)
+    a.alloc(0, 2)
+    with pytest.raises(ValueError, match="nothing is shared"):
+        a.cow_fork(0, 0)  # refcount 1: no fork needed, forbidden
+    (p,) = [a.owned(0)[0]]
+    a.register(p, b"h")
+    a.reserve(1, n_new=0, shared=[p])  # sharer WITHOUT a spare
+    with pytest.raises(ValueError, match="no spare"):
+        a.cow_fork(1, 0)
+    check_invariants(a)
+
+
+def test_double_free_raises():
+    a = BlockAllocator(8)
+    a.alloc(0, 2)
+    a.free(0)
+    with pytest.raises(KeyError):
+        a.free(0)
+    check_invariants(a)
+
+
+def test_register_misuse_is_loud():
+    a = BlockAllocator(8)
+    (p, q) = a.alloc(0, 2)
+    a.register(p, b"h0")
+    with pytest.raises(ValueError, match="already registered"):
+        a.register(q, b"h0")   # hash collision with a live entry
+    with pytest.raises(ValueError, match="already registered"):
+        a.register(p, b"h1")   # one hash per page
+    with pytest.raises(ValueError, match="unallocated"):
+        a.register(6, b"h2")
+    check_invariants(a)
+
+
+def test_deregister_is_idempotent_and_drops_payload():
+    a = BlockAllocator(8)
+    (p,) = a.alloc(0, 1)
+    a.register(p, b"h0", payload="stuff")
+    assert a.payload(b"h0") == "stuff"
+    a.deregister(p)
+    assert a.lookup(b"h0") is None
+    assert a.payload(b"h0") is None
+    a.deregister(p)  # no-op
+    with pytest.raises(ValueError, match="unregistered"):
+        a.set_payload(b"h0", "late")
+    check_invariants(a)
+
+
+def test_prefix_block_hashes_chain_semantics():
+    """Chain hashes identify content-at-position: equal padded prefixes
+    share hashes, any earlier divergence changes every later hash, and a
+    partial trailing block never collides with a full one."""
+    h1 = prefix_block_hashes([0, 0, 1, 2, 3, 4, 5, 6], 4)
+    h2 = prefix_block_hashes([0, 0, 1, 2, 9, 9, 9, 9], 4)
+    assert h1[0] == h2[0]          # same first block
+    assert h1[1] != h2[1]          # diverging second block
+    h3 = prefix_block_hashes([7, 0, 1, 2, 3, 4, 5, 6], 4)
+    assert h3[0] != h1[0] and h3[1] != h1[1]  # early change poisons chain
+    full = prefix_block_hashes([1, 2, 3, 4], 4)
+    part = prefix_block_hashes([1, 2, 3], 4)
+    assert len(full) == len(part) == 1
+    assert full[0] != part[0]      # token count disambiguates
+    # seeds are uint32-ranged and content-determined
+    assert all(0 <= s < 2**32 for _, s in h1)
+    assert prefix_block_hashes([0, 0, 1, 2, 3, 4, 5, 6], 4) == h1
+
+
+# ---------------------------------------------------------------------------
+# Property fuzz: random admission/COW/eviction traces
+# ---------------------------------------------------------------------------
+
+
+def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
+    """Drive one random trace, checking every invariant after every op."""
+    rng = random.Random(seed)
+    a = BlockAllocator(n_blocks)
+    next_owner = 0
+    next_hash = 0
+    for _ in range(n_ops):
+        op = rng.choice(
+            ["reserve", "reserve", "register", "fork", "free", "deregister"]
+        )
+        try:
+            if op == "reserve":
+                registered = list(a.registered_pages())
+                # a random (possibly empty) run of resident pages to share
+                shared = rng.sample(
+                    registered, rng.randint(0, min(2, len(registered)))
+                )
+                n_new = rng.randint(0 if shared else 1, 3)
+                n_spare = rng.randint(0, 1) if shared else 0
+                if a.can_alloc(n_new + n_spare):
+                    a.reserve(next_owner, n_new, shared, n_spare)
+                    next_owner += 1
+            elif op == "register":
+                owners = list(a._owned)
+                if owners:
+                    pages = a.owned(rng.choice(owners))
+                    unreg = [
+                        p for p in pages if p not in a.registered_pages()
+                    ]
+                    if unreg:
+                        a.register(
+                            rng.choice(unreg),
+                            next_hash.to_bytes(8, "little"),
+                            payload=rng.choice([None, "payload"]),
+                        )
+                        next_hash += 1
+            elif op == "fork":
+                candidates = [
+                    (o, i)
+                    for o, pages in a._owned.items()
+                    for i, p in enumerate(pages)
+                    if a.refcount(p) > 1 and a.spare_count(o) > 0
+                ]
+                if candidates:
+                    a.cow_fork(*rng.choice(candidates))
+            elif op == "free":
+                owners = list(a._owned)
+                if owners:
+                    a.free(rng.choice(owners))
+            elif op == "deregister":
+                pages = list(a.registered_pages())
+                if pages:
+                    a.deregister(rng.choice(pages))
+        finally:
+            check_invariants(a)
+    # drain: releasing every owner must hand the whole pool back
+    for owner in list(a._owned):
+        a.free(owner)
+        check_invariants(a)
+    assert a.available == a.capacity
+    assert not a.registered_pages()
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    seed=st.integers(0, 10_000),
+    n_blocks=st.integers(3, 24),
+    n_ops=st.integers(10, 120),
+)
+def test_allocator_invariants_under_fuzz(seed, n_blocks, n_ops):
+    _fuzz_trace(seed, n_blocks, n_ops)
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 10_000))
+def test_allocator_invariants_under_long_tight_fuzz(seed):
+    """A tiny pool under a long trace maximizes recycling pressure: pages
+    cycle free → owned → shared → forked → free many times over."""
+    _fuzz_trace(seed, 5, 400)

@@ -525,6 +525,9 @@ def test_int8_pool_doubles_admission_capacity(smoke):
         sc = ServeConfig(
             max_batch=8, max_new_tokens=8, max_len=64, kv_block_size=8,
             kv_layout="paged", num_kv_blocks=5,
+            # identical prompts would ALSO share pages — disable sharing to
+            # isolate the dtype-driven capacity factor being pinned here
+            enable_prefix_sharing=False,
         )
         eng = ServingEngine(params, mcfg, sc)
         for _ in range(8):
@@ -568,6 +571,282 @@ def test_int8_paged_no_unused_donation_warnings(smoke):
             "error", message=".*[Dd]onat.*", category=UserWarning
         )
         _run_layout(params, icfg, "paged")
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + copy-on-write (content-hash block dedup in the paged pool)
+# ---------------------------------------------------------------------------
+
+# repeated-prefix trace: the first/second/fourth prompts are identical, the
+# third differs, mixed budgets — sharing must dedup the repeats only
+SHARED_PROMPTS = [
+    [1, 2, 3, 4, 5, 6, 7, 8],
+    [1, 2, 3, 4, 5, 6, 7, 8],
+    [9, 9, 9],
+    [1, 2, 3, 4, 5, 6, 7, 8],
+    [9, 9, 9],
+]
+SHARED_BUDGETS = [6, 4, 6, 3, 5]
+
+
+def _run_sharing(params, cfg, share, serve_kw=None):
+    kw = dict(
+        max_batch=3, max_new_tokens=8, max_len=64, kv_block_size=8,
+        kv_layout="paged", enable_prefix_sharing=share,
+    )
+    kw.update(serve_kw or {})
+    sc = ServeConfig(**kw)
+    eng = ServingEngine(params, cfg, sc)
+    for p, b in zip(SHARED_PROMPTS, SHARED_BUDGETS):
+        eng.submit(p, b)
+    return eng, eng.run()
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_prefix_sharing_byte_identical(arch):
+    """The acceptance contract: greedy decode over a repeated-prefix trace
+    must be byte-identical with prefix sharing on vs off — full-hit
+    admissions replay the stored last-token logits and state leaves of the
+    original prefill, which are bit-equal to what their own prefill would
+    have produced.  Covers attention-only and hybrid (recurrent-state)
+    families; sharing must actually fire (prefill skipped at least once)."""
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng_on, out_on = _run_sharing(params, cfg, True)
+    eng_off, out_off = _run_sharing(params, cfg, False)
+    assert out_on == out_off
+    m_on, m_off = eng_on.metrics(), eng_off.metrics()
+    assert m_off.prefix_hits == 0
+    assert m_on.prefix_hits >= 1
+    assert m_on.prefills == m_off.prefills - m_on.prefix_hits
+
+
+def test_prefix_sharing_wta_sampling_stays_per_request(smoke):
+    """A full-hit admission samples its first token from STORED logits with
+    its OWN per-request key — WTA vote noise must stay a function of
+    (rid, step), not of whether the prefill was shared."""
+    cfg, params = smoke
+    wcfg = dataclasses.replace(cfg, wta_head=True)
+    eng_on, out_on = _run_sharing(params, wcfg, True, {"seed": 11})
+    _, out_off = _run_sharing(params, wcfg, False, {"seed": 11})
+    assert out_on == out_off
+    assert eng_on.metrics().prefix_hits >= 1
+
+
+def test_prefix_sharing_cow_fork_mid_decode(smoke):
+    """An unaligned bucket (8-token prompts, 16-token blocks) leaves the
+    boundary block partially filled; identical prompts admitted in the
+    same tick share it, and the first decode write must copy-on-write fork
+    every sharer onto its reserved spare page — with decode staying
+    byte-identical to the sharing-off engine."""
+    cfg, params = smoke
+    kw = {"kv_block_size": 16, "prefill_buckets": (8, 32)}
+    eng_on, out_on = _run_sharing(params, cfg, True, kw)
+    eng_off, out_off = _run_sharing(params, cfg, False, kw)
+    assert out_on == out_off
+    m = eng_on.metrics()
+    assert m.cow_forks >= 1
+    assert m.prefix_hits >= 1
+    assert eng_off.metrics().cow_forks == 0
+    # every spare was either spent on a fork or returned at eviction
+    assert eng_on.blocks.available == eng_on.blocks.capacity
+
+
+def test_prefix_sharing_page_recycling_of_formerly_shared_block(smoke):
+    """Once every owner of a shared block is evicted the page returns to
+    the free list AND its index entry dies with it: a later request with a
+    different prompt recycles the physical page, and a later request with
+    the ORIGINAL prompt must re-prefill (a stale hit would hand it the
+    recycled content).  Byte-identity against sharing-off pins that no
+    stale content leaks through either path."""
+    cfg, params = smoke
+    shared = [1, 2, 3, 4, 5, 6, 7, 8]
+
+    def drive(share):
+        sc = ServeConfig(
+            max_batch=2, max_new_tokens=8, max_len=64, kv_block_size=8,
+            kv_layout="paged", num_kv_blocks=7,  # zero-slack working set
+            enable_prefix_sharing=share,
+        )
+        eng = ServingEngine(params, cfg, sc)
+        rids = [eng.submit(shared, 4), eng.submit(shared, 4)]
+        while eng.sched.has_work():
+            eng.tick()
+        # both owners gone: the pool must be fully reclaimed, index empty
+        assert eng.blocks.available == eng.blocks.capacity
+        assert not eng.blocks.registered_pages()
+        rids.append(eng.submit([4] * 12, 6))   # recycles the freed pages
+        rids.append(eng.submit(shared, 4))     # the formerly shared prompt
+        outs = eng.run()
+        return eng, [outs[r] for r in rids]
+
+    eng_on, out_on = drive(True)
+    _, out_off = drive(False)
+    assert out_on == out_off
+    m = eng_on.metrics()
+    assert m.prefix_hits == 1           # only the co-resident pair shared
+    assert m.prefills == len(out_on) - 1
+
+
+@pytest.mark.parametrize("dtype", ["same", "int8"])
+def test_prefix_sharing_partial_hit_shares_leading_blocks(smoke, dtype):
+    """Two same-length prompts agreeing on their first block (but not the
+    second) share exactly that block: the sharer still prefills (no full
+    hit) but maps the resident page — its table row aliases the
+    original's at block 0 and diverges at block 1 — and decode stays
+    byte-identical to sharing-off.  Works for int8 pools because block
+    seeds are content-derived, so the sharer's own insert would have
+    written the identical codes it is instead aliasing."""
+    cfg, params = smoke
+    if dtype == "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=dtype)
+    a = list(range(1, 17))
+    b = list(range(1, 9)) + [20, 21, 22, 23, 24, 25, 26, 27]
+
+    def drive(share):
+        eng = ServingEngine(
+            params, cfg,
+            ServeConfig(
+                max_batch=2, max_new_tokens=6, max_len=64, kv_block_size=8,
+                enable_prefix_sharing=share,
+            ),
+        )
+        rids = [eng.submit(a, 6), eng.submit(b, 6)]
+        eng.tick()
+        tables = eng._table.copy()
+        outs = eng.run()
+        return eng, tables, [outs[r] for r in rids]
+
+    eng_on, t_on, out_on = drive(True)
+    _, t_off, out_off = drive(False)
+    assert out_on == out_off
+    assert eng_on.metrics().prefix_hits == 0  # partial ≠ full hit
+    assert t_on[0, 0] == t_on[1, 0], "leading block not shared"
+    assert t_on[0, 1] != t_on[1, 1], "diverging block wrongly shared"
+    assert t_off[0, 0] != t_off[1, 0]
+
+
+def test_prefix_sharing_int8_within_quant_tolerance(smoke):
+    """int8 pools: block quantization seeds derive from block CONTENT
+    (chain hash), not the request id, so a shared block's codes are
+    bit-identical to what the sharer's own prefill would have written —
+    sharing on vs off stays within quantization tolerance (on this smoke
+    trace the schedules coincide, so the streams agree exactly)."""
+    cfg, params = smoke
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    eng_on, out_on = _run_sharing(params, icfg, True)
+    _, out_off = _run_sharing(params, icfg, False)
+    assert sorted(out_on) == sorted(out_off)
+    assert eng_on.metrics().prefix_hits >= 1
+    total = agree = 0
+    for rid in out_off:
+        assert len(out_on[rid]) == len(out_off[rid])
+        total += len(out_off[rid])
+        agree += sum(a == b for a, b in zip(out_on[rid], out_off[rid]))
+    assert agree / total >= 0.95, (agree, total)
+
+
+def test_prefix_sharing_recompile_guard(smoke):
+    """Shared-prefix admission and COW forks add ZERO compilations beyond
+    the existing per-bucket/per-window set plus the three one-time
+    sharing entry points (state insert, page copy, stored-logits
+    sampler) — and a repeat trace through the same engine compiles
+    nothing new at all."""
+    cfg, params = smoke
+    kw = {"kv_block_size": 16, "prefill_buckets": (8, 32)}  # forces a fork
+    eng, _ = _run_sharing(params, cfg, True, kw)
+    counts = eng.compile_counts()
+    buckets_used = {eng._bucket(len(p)) for p in SHARED_PROMPTS}
+    assert counts["prefill"] == len(buckets_used)
+    assert counts["insert"] == len(buckets_used)
+    assert counts["serve_step"] <= 4
+    assert counts["state_insert"] == 1  # one full hit or more, one compile
+    assert counts["page_copy"] == 1     # at least one fork, one compile
+    assert counts["sample0"] == 1
+    for p, b in zip(SHARED_PROMPTS, SHARED_BUDGETS):
+        eng.submit(p, b)
+    eng.run()
+    assert eng.compile_counts() == counts, "steady-state trace recompiled"
+
+
+def test_prefix_sharing_raises_admission_capacity(smoke):
+    """Acceptance contract, capacity half: at equal num_kv_blocks a
+    repeated-prefix burst admits strictly more requests with sharing on —
+    each repeat maps the resident prompt blocks and only allocates its
+    decode-budget pages."""
+    cfg, params = smoke
+
+    def admitted(share):
+        sc = ServeConfig(
+            max_batch=8, max_new_tokens=8, max_len=64, kv_block_size=8,
+            kv_layout="paged", num_kv_blocks=8,
+            enable_prefix_sharing=share,
+        )
+        eng = ServingEngine(params, cfg, sc)
+        for _ in range(8):
+            eng.submit(list(range(1, 17)), 8)  # bucket 16 + 8 → 3 blocks
+        eng.tick()
+        return sum(
+            1 for r in eng.sched.all_requests()
+            if r.state is not RequestState.QUEUED
+        )
+
+    # capacity 7: off fits floor(7/3)=2 requests; on fits the original (3
+    # pages) + 4 repeats (1 fresh decode page each) = 5
+    assert admitted(False) == 2
+    assert admitted(True) == 5
+
+
+def test_prefix_sharing_validation_is_loud(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="enable_prefix_sharing"):
+        ServingEngine(
+            params, cfg, ServeConfig(enable_prefix_sharing="off")
+        )
+
+
+def test_prefix_sharing_random_trace_equivalence(smoke):
+    """Engine-level property check: random repeated-prefix traces under a
+    tight pool must decode byte-identically with sharing on vs off (greedy
+    outputs are schedule-invariant, so even admission-order divergence
+    from the capacity win cannot change them), with allocator invariants
+    re-checked after every tick."""
+    import random as _random
+
+    from test_prefix_sharing import check_invariants
+
+    cfg, params = smoke
+    templates = [
+        [1, 2, 3, 4, 5, 6, 7, 8], [4] * 12, [9, 9, 9], [1, 2, 3, 4],
+    ]
+    for seed in (0, 1, 2):
+        rng = _random.Random(seed)
+        reqs = [
+            (list(rng.choice(templates)), rng.randint(2, 8))
+            for _ in range(7)
+        ]
+
+        def drive(share):
+            eng = ServingEngine(
+                params, cfg,
+                ServeConfig(
+                    max_batch=3, max_new_tokens=8, max_len=64,
+                    kv_block_size=8, num_kv_blocks=10,
+                    enable_prefix_sharing=share,
+                ),
+            )
+            rids = [eng.submit(p, b) for p, b in reqs]
+            while eng.sched.has_work():
+                eng.tick()
+                check_invariants(eng.blocks)
+            outs = {
+                r.rid: r.output
+                for r in eng.sched.all_requests()
+            }
+            assert eng.blocks.available == eng.blocks.capacity
+            return [outs[r] for r in rids]
+
+        assert drive(True) == drive(False), f"trace seed {seed} diverged"
 
 
 # ---------------------------------------------------------------------------

@@ -270,7 +270,8 @@ def test_int8_paged_insert_quantizes_into_tabled_pages():
     row = np.zeros((4,), np.int32)
     row[:2] = [3, 5]
     insert = jax.jit(SP.make_paged_cache_insert(cfg))
-    out = insert(cache, one, 2, jnp.asarray(row), jax.random.PRNGKey(9))
+    seeds = jnp.asarray([7, 9], jnp.uint32)  # per-block rounding seeds
+    out = insert(cache, one, 2, jnp.asarray(row), seeds)
     kp = np.asarray(out["k_pages"], np.float32)
     ks = np.asarray(out["k_scale_pages"], np.float32)
     untouched = [p for p in range(P) if p not in (3, 5)]
@@ -286,9 +287,59 @@ def test_int8_paged_insert_quantizes_into_tabled_pages():
     assert np.asarray(out["pos"])[2] == lpad
 
 
-def test_int8_paged_insert_slot_pages_and_key_are_traced():
-    """One compile serves every (slot, page set, quantization key) — the
-    stochastic-rounding seed must not trigger per-request recompiles."""
+def test_int8_paged_insert_seeds_are_content_positional():
+    """The prefix-sharing contract on the quantizer: a block's codes are a
+    function of (block content, block seed) ONLY — not of where the block
+    sits in the prefill window or what the rest of the prompt is.  Two
+    inserts whose windows agree on block 0 (same content, same seed) must
+    write bit-identical codes for it, even though their other blocks
+    differ; the same seed on different content must not."""
+    cfg = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
+    )
+    fp_cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    lpad = 2 * BS
+    one_a = SP.init_decode_cache(fp_cfg, 1, lpad)
+    kv = jax.random.normal(
+        jax.random.PRNGKey(3), one_a["k"].shape, jnp.float32
+    )
+    one_a["k"] = kv
+    one_a["v"] = kv * 0.5
+    one_b = dict(one_a)
+    # same block 0, different block 1
+    one_b["k"] = kv.at[:, :, :, BS:].add(1.0)
+    one_b["v"] = (kv * 0.5).at[:, :, :, BS:].add(1.0)
+    insert = jax.jit(SP.make_paged_cache_insert(cfg))
+    row_a = np.zeros((4,), np.int32)
+    row_a[:2] = [1, 2]
+    row_b = np.zeros((4,), np.int32)
+    row_b[:2] = [3, 4]
+    out_a = insert(
+        cache, one_a, 0, jnp.asarray(row_a), jnp.asarray([7, 9], jnp.uint32)
+    )
+    out_b = insert(
+        cache, one_b, 1, jnp.asarray(row_b), jnp.asarray([7, 11], jnp.uint32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_a["k_pages"])[:, :, 1],
+        np.asarray(out_b["k_pages"])[:, :, 3],
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_a["v_pages"])[:, :, 1],
+        np.asarray(out_b["v_pages"])[:, :, 3],
+    )
+    # same seed, different content → different codes (sanity)
+    assert not np.array_equal(
+        np.asarray(out_a["k_pages"])[:, :, 2],
+        np.asarray(out_b["k_pages"])[:, :, 4],
+    )
+
+
+def test_int8_paged_insert_slot_pages_and_seeds_are_traced():
+    """One compile serves every (slot, page set, per-block seed vector) —
+    the stochastic-rounding seeds must not trigger per-request
+    recompiles."""
     cfg = dataclasses.replace(
         get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
     )
@@ -301,10 +352,86 @@ def test_int8_paged_insert_slot_pages_and_key_are_traced():
         row[0] = slot + 1
         insert(
             cache, one, slot, jnp.asarray(row),
-            jax.random.fold_in(jax.random.PRNGKey(0), slot),
+            jnp.asarray([slot * 13 + 1], jnp.uint32),
         )
     ntraces = insert._cache_size()
     assert ntraces == 1, f"int8 paged insert recompiled {ntraces}x"
+
+
+# ---------------------------------------------------------------------------
+# Prefix-sharing entry points (state insert + COW page copy)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_state_insert_writes_only_dense_leaves_at_slot():
+    """The full-hit admission path: per-slot leaves (pos, recurrent
+    states) land at the slot, the shared page pools are untouched."""
+    cfg = get_smoke_config("recurrentgemma-2b")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    one = SP.init_decode_cache(cfg, 1, BS)
+    state = {
+        n: jnp.full_like(v, 7)
+        for n, v in one.items() if n not in ("k", "v")
+    }
+    insert = jax.jit(SP.make_paged_state_insert(cfg))
+    out = insert(cache, state, 2)
+    for name in state:
+        ax = SP.cache_batch_axis(cfg, name)
+        arr = np.moveaxis(np.asarray(out[name], np.float32), ax, 0)
+        np.testing.assert_array_equal(arr[2], 7)
+        np.testing.assert_array_equal(arr[[0, 1, 3]], 0)
+    np.testing.assert_array_equal(np.asarray(out["k_pages"]), 0)
+    np.testing.assert_array_equal(np.asarray(out["v_pages"]), 0)
+
+
+def test_paged_state_insert_slot_is_traced():
+    cfg = get_smoke_config("stablelm-3b")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    one = SP.init_decode_cache(cfg, 1, BS)
+    state = {n: v for n, v in one.items() if n not in ("k", "v")}
+    insert = jax.jit(SP.make_paged_state_insert(cfg))
+    for slot in range(B):
+        insert(cache, state, slot)
+    ntraces = insert._cache_size()
+    assert ntraces == 1, f"state insert recompiled {ntraces}x"
+
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_page_copy_copies_every_pool_leaf(int8):
+    """The device half of a COW fork: page dst becomes a bit-copy of page
+    src on every pool leaf (codes AND scale planes for int8), and no other
+    page or per-slot leaf moves."""
+    cfg = get_smoke_config("stablelm-3b")
+    if int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    pool_names = [n for n in cache if n.endswith("_pages")]
+    for i, n in enumerate(pool_names):
+        fill = jnp.arange(cache[n].size, dtype=jnp.float32).reshape(
+            cache[n].shape
+        ) % 113 + i
+        cache[n] = fill.astype(cache[n].dtype)
+    before = {n: np.asarray(cache[n]) for n in cache}
+    copy = jax.jit(SP.make_page_copy(cfg))
+    out = copy(cache, 3, 5)
+    for n in pool_names:
+        arr = np.asarray(out[n])
+        np.testing.assert_array_equal(arr[:, :, 5], before[n][:, :, 3])
+        others = [p for p in range(P) if p != 5]
+        np.testing.assert_array_equal(arr[:, :, others], before[n][:, :, others])
+    for n in cache:
+        if n not in pool_names:
+            np.testing.assert_array_equal(np.asarray(out[n]), before[n])
+
+
+def test_page_copy_page_ids_are_traced():
+    cfg = get_smoke_config("stablelm-3b")
+    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
+    copy = jax.jit(SP.make_page_copy(cfg))
+    for src, dst in ((1, 2), (3, 4), (5, 1)):
+        cache = copy(cache, src, dst)
+    ntraces = copy._cache_size()
+    assert ntraces == 1, f"page copy recompiled {ntraces}x"
 
 
 def test_sample_tokens_greedy_and_legacy_key():
