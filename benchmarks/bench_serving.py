@@ -65,6 +65,7 @@ REPORT_SCHEMA = {
     "paged_int8_vs_bf16": list,
     "int8_capacity_sweep": dict,
     "prefix_sharing": dict,
+    "partial_prefix": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -79,6 +80,11 @@ _PREFIX_KEYS = {
     "n_requests", "prompt_len", "off", "on", "prefill_savings",
     "tokens_match", "num_kv_blocks", "admitted_off", "admitted_on",
     "capacity_ratio",
+}
+_PARTIAL_KEYS = {
+    "n_requests", "prompt_len", "shared_prefix_len", "prefill_chunk",
+    "off", "on", "prefill_token_reduction", "late_ttft_ratio",
+    "tokens_match",
 }
 
 
@@ -111,6 +117,22 @@ def validate_report(report: dict) -> None:
     if report["prefix_sharing"]["tokens_match"] is not True:
         raise ValueError(
             "prefix_sharing: sharing-on vs sharing-off decode diverged"
+        )
+    missing = _PARTIAL_KEYS - set(report["partial_prefix"])
+    if missing:
+        raise ValueError(
+            f"partial_prefix missing keys {sorted(missing)}"
+        )
+    if report["partial_prefix"]["tokens_match"] is not True:
+        raise ValueError(
+            "partial_prefix: sharing-on vs sharing-off decode diverged"
+        )
+    # acceptance floor, deterministic (token counts, not timings): the
+    # shared-prefix trace must cut computed prefill tokens >= 3x
+    if report["partial_prefix"]["prefill_token_reduction"] < 3.0:
+        raise ValueError(
+            "partial_prefix: prefill-token reduction "
+            f"{report['partial_prefix']['prefill_token_reduction']} < 3.0"
         )
 
 
@@ -379,6 +401,86 @@ def bench_prefix_sharing(cfg, params, n_req: int = 12) -> dict:
     return out
 
 
+def bench_partial_prefix(cfg, params, n_req: int = 10) -> dict:
+    """Shared-system-prompt trace: a 56-token common prefix with short
+    unique suffixes, arrivals staggered so late requests land while
+    earlier ones are mid-decode.
+
+    The workload suffix-only prefill exists for.  With sharing on, every
+    late arrival maps the resident prefix blocks and computes ONLY its
+    8-token suffix (one `prefill_chunk` tick) instead of the whole
+    64-token bucket — measured end to end through the engine:
+
+    * computed prefill tokens (``metrics.prefill_tokens``) drop ≥ 3× —
+      deterministic token counts, enforced by ``validate_report``;
+    * TTFT for the late arrivals shrinks (one suffix chunk vs a full
+      bucket of chunks injected between decode steps), reported as
+      ``late_ttft_ratio`` (timing, not validated);
+    * the on/off token streams must be IDENTICAL (``tokens_match`` —
+      CI fails on divergence).
+    """
+    prefix = list(range(1, 57))               # 56 shared tokens
+    suffix_len, budget = 8, 8
+    prompts = [prefix + [200 + i] * suffix_len for i in range(n_req)]
+    serve = dict(
+        max_batch=4, max_new_tokens=budget, max_len=128,
+        kv_layout="paged", kv_block_size=8, prefill_chunk=16,
+    )
+    out: dict = {
+        "n_requests": n_req,
+        "prompt_len": len(prompts[0]),
+        "shared_prefix_len": len(prefix),
+        "prefill_chunk": serve["prefill_chunk"],
+    }
+    streams = {}
+    for label, share in (("off", False), ("on", True)):
+        eng = ServingEngine(
+            params, cfg, ServeConfig(**serve, enable_prefix_sharing=share)
+        )
+
+        def drive_pass():
+            rids: list[int] = []
+            i = tick = 0
+            while i < len(prompts) or eng.sched.has_work():
+                while i < len(prompts) and 2 * i <= tick:
+                    rids.append(eng.submit(prompts[i], budget))
+                    i += 1
+                eng.tick()
+                tick += 1
+            return rids
+
+        warm = drive_pass()   # compiles every (bucket, chunk) shape
+        m0 = eng.metrics()
+        rids = drive_pass()   # measured steady-state pass
+        outs = {r.rid: r.output for r in eng.sched.all_requests()}
+        streams[label] = [outs[r] for r in warm + rids]
+        m = eng.metrics()
+        # late arrivals land while earlier requests are mid-decode; their
+        # TTFT is the interleaved-prefill responsiveness being measured
+        late = [eng.sched.request(r).ttft for r in rids[1:]]
+        out[label] = {
+            "prefills": m.prefills - m0.prefills,
+            "prefix_partial_hits": (
+                m.prefix_partial_hits - m0.prefix_partial_hits
+            ),
+            "prefill_tokens": m.prefill_tokens - m0.prefill_tokens,
+            "prefill_tokens_saved": (
+                m.prefill_tokens_saved - m0.prefill_tokens_saved
+            ),
+            "late_ttft_ms": round(float(np.mean(late)) * 1e3, 2),
+        }
+    out["prefill_token_reduction"] = round(
+        out["off"]["prefill_tokens"] / max(out["on"]["prefill_tokens"], 1),
+        2,
+    )
+    out["late_ttft_ratio"] = round(
+        out["on"]["late_ttft_ms"] / max(out["off"]["late_ttft_ms"], 1e-9),
+        2,
+    )
+    out["tokens_match"] = streams["on"] == streams["off"]
+    return out
+
+
 def bench_int8_capacity(cfg, params, num_kv_blocks: int = 9) -> dict:
     """Equal-memory admission sweep: requests admitted on the first tick at
     a fixed ``num_kv_blocks`` budget.  int8 pages cost half the K/V bytes,
@@ -545,6 +647,25 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"admitted={pfx['admitted_off']}->{pfx['admitted_on']} "
             f"capacity={pfx['capacity_ratio']:.2f}x "
             f"match={pfx['tokens_match']}",
+        )
+    )
+    # suffix-only prefill on the shared-system-prompt trace: computed
+    # prefill tokens + late-arrival TTFT with chunked interleaved prefill
+    par = bench_partial_prefix(
+        pvd_cfg, pvd_params, n_req=6 if dry_run else 10
+    )
+    report["partial_prefix"] = par
+    rows.append(
+        (
+            "serve_partial_prefix",
+            0.0,
+            f"prefill_tokens={par['off']['prefill_tokens']}"
+            f"->{par['on']['prefill_tokens']} "
+            f"reduction={par['prefill_token_reduction']:.2f}x "
+            f"partial_hits={par['on']['prefix_partial_hits']} "
+            f"late_ttft={par['off']['late_ttft_ms']:.1f}"
+            f"->{par['on']['late_ttft_ms']:.1f}ms "
+            f"match={par['tokens_match']}",
         )
     )
     return rows, report

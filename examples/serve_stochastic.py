@@ -81,7 +81,10 @@ def main():
             f"occupancy {m.occupancy_mean:.2f} "
             f"over {m.decode_steps} decode steps; "
             f"{m.prefills} prefills ({m.prefix_hits} prefix hits, "
-            f"{m.cow_forks} COW forks)"
+            f"{m.prefix_partial_hits} partial hits, "
+            f"{m.cow_forks} COW forks; "
+            f"{m.prefill_tokens} prefill tokens computed, "
+            f"{m.prefill_tokens_saved} saved)"
         )
 
 

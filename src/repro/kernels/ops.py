@@ -335,6 +335,48 @@ def paged_attention(
     )
 
 
+def paged_prefill_attention(
+    q: jax.Array,        # (S, H, Dh) — one request's suffix-chunk queries
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
+    v_pages: jax.Array,
+    table: jax.Array,    # (W,) int32 — the request's block-table row
+    q0: jax.Array,       # () int32 absolute position of the first query
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Prefix-aware chunked-prefill attention: the suffix chunk's queries
+    attend into every block of the request's table — shared prefix pages
+    included — at their absolute positions.  Compiled Pallas kernel on
+    TPU, the pure-jnp oracle elsewhere (interpret mode would bury the
+    prefill latency the suffix path removes; kernel-vs-oracle agreement is
+    pinned by tests/test_kernels.py).  int8 pools fuse dequant into the
+    score/value math exactly like :func:`paged_attention`.
+
+    NOTE: the serving engine's off-TPU bf16 path does NOT come through
+    here — it uses the gather + attend_full route in models/attention.py,
+    whose numerics are bit-identical to the dense monolithic prefill (the
+    dense-vs-paged equivalence oracle).  This dispatch serves the TPU hot
+    path and the int8 fused-dequant math on every backend."""
+    from . import prefill_attention as _pf
+
+    if jax.default_backend() != "tpu":
+        return ref.prefill_attention_ref(
+            q, k_pages, v_pages, table, q0,
+            kind=kind, local_window=local_window, softcap=softcap,
+            k_scale=k_scale, v_scale=v_scale,
+        )
+    return _pf.paged_prefill_attention_pallas(
+        q, k_pages, v_pages, table, q0,
+        kind=kind, local_window=local_window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale,
+        interpret=False,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Stochastic rounding.
 # ---------------------------------------------------------------------------

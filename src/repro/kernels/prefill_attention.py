@@ -1,0 +1,220 @@
+"""Prefix-aware chunked-prefill attention kernel.
+
+The partial-prefix serving path computes only a prompt's *suffix* (the
+blocks not already resident in the paged pool) and lets those suffix
+queries attend into the shared prefix pages directly — the prefill-side
+analogue of the paper's thesis: delete work whose result is already
+materialized in the array (here: K/V of a shared system prompt) instead of
+regenerating it through the full pipeline.
+
+Shape contract: ONE request per call.  The query tile is the whole suffix
+chunk (S, H, Dh), resident in VMEM; keys/values are gathered block by
+block from the paged pool:
+
+  * the request's block table (scalar-prefetched into SMEM) drives the
+    BlockSpec index map, so each grid step DMAs ONE (block_size,) K/V page
+    from HBM — shared prefix pages and the chunk's own freshly written
+    pages go through the same path;
+  * queries carry their ABSOLUTE positions (``q0 + i``), so the causal /
+    local mask is exact even though the tile starts mid-prompt;
+  * the flash-attention recurrence (running max / denom / accumulator)
+    lives in VMEM scratch across the sequential block axis;
+  * blocks entirely beyond the last query position skip their compute
+    AND accumulator update via pl.when (the page DMA itself still runs —
+    the grid covers the full table width).
+
+int8 pools ride the same fused-dequant scheme as the decode kernel
+(kernels/paged_attention.py): pages DMA int8 codes plus per-(page,
+slot-in-page, head) f32 scale planes, scores pick up ``k_scale/127`` and
+softmax weights ``v_scale/127`` inside VMEM — a dequantized page never
+exists anywhere.
+
+Grid: (W,), sequential — the accumulator carries across the request's
+blocks.  The pure-jnp oracle is kernels/ref.py:prefill_attention_ref; CPU
+tests run this kernel in interpret mode (see compat.py), and off TPU the
+serving engine's bf16 path uses the gather + attend_full jnp route in
+models/attention.py (bit-identical to the dense monolithic prefill).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams as _CompilerParams
+
+NEG_INF = -2.0e38
+
+
+def _kernel(
+    tbl_ref,   # (W,) int32 SMEM (scalar prefetch): the request's block table
+    q0_ref,    # (1,) int32 SMEM (scalar prefetch): first query position
+    q_ref,     # (S, H, Dh) f32 — the whole suffix chunk's queries
+    k_ref,     # (1, bs, Hkv, Dh) f32 (or int8 codes) — page tbl[w]
+    v_ref,     # (1, bs, Hkv, Dh) f32 (or int8 codes)
+    *rest,     # int8: ks_ref, vs_ref (1, bs, Hkv) f32, then o/m/l/acc refs
+    nw: int,
+    bs: int,
+    hkv: int,
+    kind: str,
+    local_window: int,
+    softcap: float,
+    int8: bool,
+):
+    if int8:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    w = pl.program_id(0)
+
+    @pl.when(w == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = q0_ref[0]
+    s, h, dh = q_ref.shape
+    g = h // hkv
+
+    # A block whose first position is beyond the LAST query position holds
+    # no attendable keys for this chunk: skip its DMA'd page entirely.
+    @pl.when(w * bs <= q0 + s - 1)
+    def _block():
+        q = q_ref[...]                      # (S, H, Dh)
+        qg = (
+            q.reshape(s, hkv, g, dh).transpose(1, 2, 0, 3).astype(jnp.float32)
+            * jnp.float32(dh**-0.5)
+        )                                   # (Hkv, G, S, Dh)
+        k = k_ref[0].astype(jnp.float32)    # (bs, Hkv, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        sc = jnp.einsum(
+            "kgsd,tkd->kgst", qg, k, preferred_element_type=jnp.float32
+        )                                   # (Hkv, G, S, bs)
+        if int8:
+            # fused dequant: int8 codes crossed HBM; the scale multiplies
+            # the SCORES in VMEM (factors out of the Dh contraction)
+            ks = ks_ref[0].astype(jnp.float32) * jnp.float32(1.0 / 127.0)
+            sc = sc * ks.transpose(1, 0)[:, None, None, :]
+        if softcap > 0.0:
+            sc = jnp.tanh(sc / jnp.float32(softcap)) * jnp.float32(softcap)
+        # absolute positions: query i sits at q0 + i, key t at w·bs + t
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, s, bs), 2) + q0
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, s, bs), 3) + w * bs
+        ok = kpos <= qpos
+        if kind == "local":
+            ok &= kpos > (qpos - local_window)
+        sc = sc + jnp.where(ok, 0.0, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(sc - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1)
+        if int8:
+            # v-side dequant folds into the softmax numerator weights; the
+            # denominator keeps the raw pexp sums (scaled numerator /
+            # unscaled denominator, same as the decode kernel)
+            vs = vs_ref[0].astype(jnp.float32) * jnp.float32(1.0 / 127.0)
+            pv = pexp * vs.transpose(1, 0)[:, None, None, :]
+        else:
+            pv = pexp
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+            "kgst,tkd->kgsd", pv, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(w == nw - 1)
+    def _readout():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[...] = out.transpose(2, 0, 1, 3).reshape(s, h, dh)
+
+
+def paged_prefill_attention_pallas(
+    q: jax.Array,        # (S, H, Dh) f32 — the suffix chunk's queries
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) f32 (or int8 codes) block pool
+    v_pages: jax.Array,
+    table: jax.Array,    # (W,) int32 page ids; <0 treated as page 0
+    q0: jax.Array,       # () int32 absolute position of the first query
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
+    interpret: bool | object = False,
+) -> jax.Array:
+    """Returns the (S, H, Dh) attention readout of a suffix chunk over the
+    request's blocks (shared prefix pages + its own freshly written pages).
+
+    Pass int8 ``k_pages``/``v_pages`` together with ``k_scale``/``v_scale``
+    planes to run the fused-dequant path (int8 page DMA, scaling in VMEM).
+    """
+    s, h, dh = q.shape
+    n_pages, bs, hkv, dh2 = k_pages.shape
+    assert dh == dh2 and h % hkv == 0, (q.shape, k_pages.shape)
+    int8 = k_scale is not None
+    if int8:
+        assert v_scale is not None
+        assert k_scale.shape == (n_pages, bs, hkv), k_scale.shape
+    nw = table.shape[0]
+    kern = functools.partial(
+        _kernel,
+        nw=nw,
+        bs=bs,
+        hkv=hkv,
+        kind=kind,
+        local_window=local_window,
+        softcap=softcap,
+        int8=int8,
+    )
+    page_map = lambda wi, tbl, p0: (jnp.maximum(tbl[wi], 0), 0, 0, 0)
+    scale_map = lambda wi, tbl, p0: (jnp.maximum(tbl[wi], 0), 0, 0)
+    in_specs = [
+        pl.BlockSpec((s, h, dh), lambda wi, tbl, p0: (0, 0, 0)),
+        pl.BlockSpec((1, bs, hkv, dh), page_map),
+        pl.BlockSpec((1, bs, hkv, dh), page_map),
+    ]
+    # keep int8 codes int8 on the wire — halving the page DMA bytes is the
+    # point; everything else is normalized to f32 before the call
+    operands = [
+        table.astype(jnp.int32),
+        jnp.asarray(q0, jnp.int32).reshape((1,)),
+        q.astype(jnp.float32),
+        k_pages if int8 else k_pages.astype(jnp.float32),
+        v_pages if int8 else v_pages.astype(jnp.float32),
+    ]
+    if int8:
+        in_specs += [
+            pl.BlockSpec((1, bs, hkv), scale_map),
+            pl.BlockSpec((1, bs, hkv), scale_map),
+        ]
+        operands += [
+            k_scale.astype(jnp.float32),
+            v_scale.astype(jnp.float32),
+        ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nw,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((s, h, dh), lambda wi, tbl, p0: (0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, h // hkv, s), jnp.float32),
+            pltpu.VMEM((hkv, h // hkv, s), jnp.float32),
+            pltpu.VMEM((hkv, h // hkv, s, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, h, dh), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            # W must stay sequential: the scratch accumulator carries the
+            # online-softmax state across the request's blocks.
+            dimension_semantics=("arbitrary",),
+        ),
+    )(*operands)

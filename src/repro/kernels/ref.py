@@ -158,6 +158,67 @@ def paged_attention_ref(
     return out.reshape(b, h, dh)
 
 
+def prefill_attention_ref(
+    q: jax.Array,        # (S, H, Dh) — one request's suffix-chunk queries
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
+    v_pages: jax.Array,
+    table: jax.Array,    # (W,) int32 page ids; <0 treated as page 0
+    q0: jax.Array,       # () int32 absolute position of the first query
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle for prefill_attention_pallas: gather the request's blocks
+    into a contiguous (W·bs) window, then masked full-softmax attention
+    for every suffix query at once.  Query i sits at absolute position
+    ``q0 + i`` and key t of block w at ``w·bs + t``, so the causal / local
+    mask is exact even though the query tile starts mid-prompt (the whole
+    point: suffix queries attend into shared prefix pages).
+
+    int8 pools fold the gathered scale planes into scores / softmax
+    weights exactly like :func:`paged_attention_ref` (scores pick up
+    ``k_scale/127``, value-reduction weights ``v_scale/127`` — the cache
+    itself is never dequantized)."""
+    neg_inf = jnp.float32(-2.0e38)
+    s, h, dh = q.shape
+    _, bs, hkv, _ = k_pages.shape
+    g = h // hkv
+    pages = jnp.maximum(table, 0)
+    kb = k_pages[pages].reshape(-1, hkv, dh)
+    vb = v_pages[pages].reshape(-1, hkv, dh)
+    t = kb.shape[0]
+    qg = q.reshape(s, hkv, g, dh).astype(jnp.float32) * jnp.float32(
+        dh**-0.5
+    )
+    sc = jnp.einsum(
+        "skgd,tkd->kgst", qg, kb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if k_scale is not None:
+        ks = k_scale[pages].reshape(t, hkv)
+        sc = sc * (ks.transpose(1, 0) / 127.0)[:, None, None, :]
+    if softcap > 0.0:
+        sc = jnp.tanh(sc / jnp.float32(softcap)) * jnp.float32(softcap)
+    qpos = q0 + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = kpos <= qpos
+    if kind == "local":
+        ok &= kpos > (qpos - local_window)
+    sc = sc + jnp.where(ok, 0.0, neg_inf)[None, None, :, :]
+    w = jax.nn.softmax(sc, axis=-1)
+    if v_scale is not None:
+        vs = v_scale[pages].reshape(t, hkv)
+        w = w * (vs.transpose(1, 0) / 127.0)[:, None, None, :]
+    out = jnp.einsum(
+        "kgst,tkd->skgd", w, vb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(s, h, dh)
+
+
 def stoch_round_ref(
     x: jax.Array,
     seed: jax.Array,

@@ -48,6 +48,11 @@ def main() -> None:
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable content-hash prompt-block sharing with "
                          "copy-on-write in the paged pool")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="max prefill tokens computed per engine tick "
+                         "(paged layout; 0 = whole bucket at once); also "
+                         "the partial-prefix resume grid for "
+                         "recurrent/SSM families")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -76,6 +81,9 @@ def main() -> None:
             kv_block_size=args.kv_block_size,
             num_kv_blocks=args.kv_blocks,
             enable_prefix_sharing=not args.no_prefix_sharing,
+            # passed through verbatim: ServeConfig.validate raises loudly
+            # on --kv-layout dense + --prefill-chunk (paged-only knob)
+            prefill_chunk=args.prefill_chunk,
         ),
     )
     rng = jax.random.PRNGKey(7)
@@ -95,6 +103,8 @@ def main() -> None:
         f"served {len(outs)} requests, {total} tokens in {dt:.2f}s "
         f"({total / max(dt, 1e-9):.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms,"
         f" occupancy {m.occupancy_mean:.2f}, prefix hits {m.prefix_hits},"
+        f" partial hits {m.prefix_partial_hits},"
+        f" prefill tokens saved {m.prefill_tokens_saved},"
         f" engine={'static' if args.static else 'continuous'}, sampler="
         f"{'WTA votes' if args.wta else 'greedy'})"
     )

@@ -121,99 +121,55 @@ def make_cache_insert(cfg: ModelConfig):
     return insert
 
 
-def make_paged_cache_insert(cfg: ModelConfig):
-    """Insert one request's prefill cache into the paged batch cache.
+def init_prefill_state(cfg: ModelConfig) -> dict:
+    """Zeroed B=1 state leaves entering a chunked paged prefill."""
+    return TF.init_prefill_state(cfg)
 
-    (paged_cache, one_cache(B=1, len=L·), slot int32, table_row int32
-    [, quant_seeds]) → paged_cache.  The one-request cache comes out of the
-    ordinary dense prefill, built at a window already padded to a block
-    multiple; its K/V are reshaped into blocks and scattered to the pages
-    named by the first ``L/block_size`` entries of ``table_row``.  Dense
-    per-slot leaves (pos, recurrent/SSM states) use the slot-addressable
-    update.  Slot and page ids are traced, so one compile per prefill
-    bucket serves every (slot, page set) of a live batch.
 
-    Int8 pools (``k_scale_pages`` present): the dense prefill K/V stay full
-    precision and are quantized HERE, one block at a time — per-(position,
-    head) scale, codes stochastically rounded
-    (kernels.ops.quantize_kv_pair_int8) under the per-block ``quant_seeds``
-    ((L/block_size,) uint32).  The engine derives each block's seed from
-    its *content chain hash* (scheduler.prefix_block_hashes), NOT from the
-    request id: any re-prefill of the same prompt prefix then produces
-    bit-identical codes, which is what lets prefix sharing map an int8
-    block into several requests' tables (a request-keyed seed would make
-    the "same" block byte-diverge per request).  The seed vector is
-    traced: one compile per prefill bucket, same as the rest.
+def make_paged_suffix_prefill(cfg: ModelConfig):
+    """One suffix chunk of a resumable, chunked paged prefill.
+
+    (params, paged_cache, state{B=1}, tokens (1, c) int32, table_row
+    (Wp,) int32, q0 int32 [, quant_seeds (nbc,) uint32], *, bucket) →
+    (paged_cache, state', last-token logits (1, V)).
+
+    THE paged prefill entry point — it subsumes the old monolithic
+    per-request prefill + block scatter: a cold admission runs its whole
+    bucket as chunks from zeroed state (:func:`init_prefill_state`), a
+    partial-prefix hit runs only the suffix (``q0 > 0``) attending into
+    the shared pages already mapped in ``table_row``, and the engine
+    interleaves at most ``ServeConfig.prefill_chunk`` tokens per tick
+    between decode steps.  Only the page-pool leaves of ``paged_cache``
+    are touched — the per-slot leaves ride along untouched, so a chunked
+    prefill in flight is never corrupted by the batched decode steps
+    running for the OTHER slots (the engine threads ``state`` host-side
+    and writes it at the slot once, on completion).
+
+    Compile discipline: ``bucket`` is the only static argument (the
+    attention window slice), so compiles are one per (bucket, chunk
+    shape) pair; page ids, the start position, and the int8 rounding
+    seeds are all traced.  int8 pools quantize each chunk block under its
+    content-derived seed (chain hash → uint32, folded with the unit and
+    sublayer index inside) — the canonical-seed contract that keeps
+    shared int8 blocks bit-identical across writers.
     """
-    from repro.kernels import ops as KOPS
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
 
-    def insert(
-        batch_cache: dict, one_cache: dict, slot, table_row, quant_seeds=None
-    ) -> dict:
-        out = {}
-        int8_pool = "k_scale_pages" in batch_cache
-        if int8_pool:
-            # blockwise quantization under content-derived per-block seeds;
-            # element counters restart per block, so (block content, seed)
-            # fully determines the codes regardless of block position in
-            # the prefill window
-            src_k, src_v = one_cache["k"], one_cache["v"]
-            nu, na, _, lpad, hkv, dh = src_k.shape
-            bs = batch_cache["k_pages"].shape[3]
-            assert lpad % bs == 0, (
-                f"prefill window {lpad} not a multiple of the KV block "
-                f"size {bs}"
-            )
-            nb = lpad // bs
-            kb = src_k[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
-            vb = src_v[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
-            kc, ks, vc, vs = [], [], [], []
-            for b in range(nb):
-                k8, ksc, v8, vsc = KOPS.quantize_kv_pair_int8(
-                    kb[:, :, b], vb[:, :, b], quant_seeds[b]
-                )
-                kc.append(k8)
-                ks.append(ksc)
-                vc.append(v8)
-                vs.append(vsc)
-            quantized = {
-                "k_pages": (jnp.stack(kc, axis=2), jnp.stack(ks, axis=2)),
-                "v_pages": (jnp.stack(vc, axis=2), jnp.stack(vs, axis=2)),
-            }
-        for name, leaf in batch_cache.items():
-            if name in ("k_pages", "v_pages"):
-                src = one_cache[name[0]]  # dense "k"/"v": (nu,na,1,L,Hkv,Dh)
-                nu, na, _, lpad, hkv, dh = src.shape
-                bs = leaf.shape[3]
-                assert lpad % bs == 0, (
-                    f"prefill window {lpad} not a multiple of the KV block "
-                    f"size {bs}"
-                )
-                nb = lpad // bs
-                if int8_pool:
-                    blocks, sblocks = quantized[name]
-                    out[name] = leaf.at[:, :, table_row[:nb]].set(blocks)
-                    sleaf = batch_cache[f"{name[0]}_scale_pages"]
-                    out[f"{name[0]}_scale_pages"] = sleaf.at[
-                        :, :, table_row[:nb]
-                    ].set(sblocks)
-                else:
-                    blocks = src[:, :, 0].reshape(nu, na, nb, bs, hkv, dh)
-                    out[name] = leaf.at[:, :, table_row[:nb]].set(
-                        blocks.astype(leaf.dtype)
-                    )
-            elif name in ("k_scale_pages", "v_scale_pages"):
-                continue  # written alongside k_pages/v_pages above
-            elif name == "quant_step":
-                out[name] = leaf  # decode-step counter: inserts don't tick it
-            else:
-                upd = one_cache[name].astype(leaf.dtype)
-                out[name] = jax.lax.dynamic_update_slice_in_dim(
-                    leaf, upd, slot, axis=cache_batch_axis(cfg, name)
-                )
-        return out
+    def suffix_chunk(
+        params, cache: dict, state: dict, tokens, table_row, q0,
+        quant_seeds=None, *, bucket: int,
+    ):
+        pool = {n: cache[n] for n in PAGE_POOL_LEAVES if n in cache}
+        new_pool, new_state, logits = TF.lm_prefill_chunk(
+            params, tokens, cfg, pool, state, table_row, q0, bucket,
+            quant_seeds,
+        )
+        out = dict(cache)
+        out.update(new_pool)
+        return out, new_state, logits
 
-    return insert
+    return suffix_chunk
 
 
 # page-pool cache leaves (vs the dense per-slot leaves) — the split that

@@ -436,6 +436,132 @@ def paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
     )
 
 
+def paged_write_chunk(
+    pages: jax.Array,   # (P, bs, ...) block pool (K/V or scale planes)
+    new: jax.Array,     # (nbc, bs, ...) block-shaped chunk rows
+    table_row: jax.Array,  # (Wp,) int32 — ONE request's block-table row
+    b0: jax.Array,      # () int32 first block index the chunk covers
+) -> jax.Array:
+    """Scatter a suffix chunk's K/V rows (or scales) into its own pages.
+
+    The chunk covers blocks ``[b0, b0 + nbc)`` of the request's table; the
+    engine guarantees the chunk starts block-aligned (resume points and
+    ``prefill_chunk`` are block multiples), so whole blocks scatter at
+    once.  A ragged final block carries zero-padded rows beyond the prompt
+    — those positions are masked out of every read until the decode step
+    overwrites them row by row.  Page ids and ``b0`` are traced: one
+    compile per (bucket, chunk shape) serves every page set."""
+    nbc = new.shape[0]
+    ids = jax.lax.dynamic_slice(table_row, (b0,), (nbc,))
+    return pages.at[jnp.maximum(ids, 0)].set(new.astype(pages.dtype))
+
+
+def _chunk_to_blocks(x: jax.Array, bs: int) -> jax.Array:
+    """(1, c, ...) chunk rows → (nbc, bs, ...) zero-padded whole blocks."""
+    c = x.shape[1]
+    nbc = -(-c // bs)
+    pad = [(0, 0), (0, nbc * bs - c)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad)[0].reshape((nbc, bs) + x.shape[2:])
+
+
+def paged_prefill_self_attention(
+    p: dict,
+    x: jax.Array,        # (1, c, D) — one request's suffix chunk
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — this layer's block pool
+    v_pages: jax.Array,
+    table_row: jax.Array,  # (Wp,) int32 — blocks covering the prompt bucket
+    q0: jax.Array,       # () int32 absolute position of the chunk's start
+    bucket: int,         # static padded prompt length (table covers it)
+    cfg: ModelConfig,
+    kind: str = "global",
+    k_scale_pages: Optional[jax.Array] = None,  # (P, bs, Hkv) int8 pools
+    v_scale_pages: Optional[jax.Array] = None,
+    quant_seeds: Optional[jax.Array] = None,    # (nbc,) uint32, int8 pools
+):
+    """Suffix-chunk attention against the paged pool (the chunked-prefill
+    building block).  Writes the chunk's K/V into its own pages, then the
+    chunk's queries attend over the WHOLE prompt window ``[0, bucket)`` —
+    shared prefix pages and the chunk's fresh pages alike — with absolute
+    position offsets, so a suffix that starts mid-prompt masks exactly as
+    if the full prompt had been prefilled monolithically.
+
+    On TPU the gather+attend runs as the fused Pallas chunked-prefill
+    kernel (kernels/prefill_attention.py).  Off TPU the bf16 path is the
+    jnp gather + the same :func:`attend_full` used by the monolithic dense
+    prefill — per-query online-softmax values are independent of which
+    other queries share the tile, which is what makes suffix-only prefill
+    byte-identical to prefilling the whole prompt (the dense-vs-paged and
+    sharing-on-vs-off equivalence contracts).  int8 pools quantize each
+    chunk block under its content-derived ``quant_seeds`` (shared blocks
+    stay bit-identical across writers) and run the fused-dequant oracle.
+
+    Returns (out (1, c, D) after w_o, k_pages, v_pages) — plus the scale
+    planes for int8 pools.
+    """
+    int8_pool = k_pages.dtype == jnp.int8
+    b, c, _ = x.shape
+    bs = k_pages.shape[1]
+    positions = jnp.broadcast_to(q0 + jnp.arange(c)[None], (b, c))
+    q, k, v = qkv(p, x, cfg, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    b0 = q0 // bs
+    kb = _chunk_to_blocks(k, bs)   # (nbc, bs, Hkv, Dh)
+    vb = _chunk_to_blocks(v, bs)
+    if int8_pool:
+        from repro.kernels import ops as KOPS
+
+        kc, ks, vc, vs = [], [], [], []
+        for i in range(kb.shape[0]):
+            # per-block quantization under content-derived seeds: any
+            # writer of the same block content produces bit-identical
+            # codes, which is what keeps int8 blocks shareable
+            k8, ksc, v8, vsc = KOPS.quantize_kv_pair_int8(
+                kb[i], vb[i], quant_seeds[i]
+            )
+            kc.append(k8)
+            ks.append(ksc)
+            vc.append(v8)
+            vs.append(vsc)
+        k_pages = paged_write_chunk(k_pages, jnp.stack(kc), table_row, b0)
+        v_pages = paged_write_chunk(v_pages, jnp.stack(vc), table_row, b0)
+        k_scale_pages = paged_write_chunk(
+            k_scale_pages, jnp.stack(ks), table_row, b0
+        )
+        v_scale_pages = paged_write_chunk(
+            v_scale_pages, jnp.stack(vs), table_row, b0
+        )
+    else:
+        k_pages = paged_write_chunk(k_pages, kb, table_row, b0)
+        v_pages = paged_write_chunk(v_pages, vb, table_row, b0)
+    if jax.default_backend() == "tpu" or int8_pool:
+        from repro.kernels import ops as KOPS
+
+        out = KOPS.paged_prefill_attention(
+            q[0], k_pages, v_pages, table_row, q0,
+            kind=kind,
+            local_window=cfg.local_window,
+            softcap=cfg.attn_softcap,
+            k_scale=k_scale_pages if int8_pool else None,
+            v_scale=v_scale_pages if int8_pool else None,
+        )[None].astype(x.dtype)          # (1, c, H, Dh)
+    else:
+        # bit-parity route with the monolithic prefill: gather the window,
+        # slice it to exactly the bucket length (same key chunking as
+        # attend_full over the full prompt), same online-softmax helper
+        k_buf = paged_gather(k_pages, table_row[None])[:, :bucket]
+        v_buf = paged_gather(v_pages, table_row[None])[:, :bucket]
+        qpos = q0 + jnp.arange(c)
+        kpos = jnp.arange(bucket)
+        out = attend_full(q, k_buf, v_buf, qpos, kpos, kind, cfg)
+    # w_o through the same direct matmul as the monolithic lm_prefill (the
+    # byte-identity oracle), not the decode path's analog projection
+    o = out.reshape(b, c, -1) @ p["wo"].astype(x.dtype)
+    if int8_pool:
+        return o, k_pages, v_pages, k_scale_pages, v_scale_pages
+    return o, k_pages, v_pages
+
+
 def paged_decode_self_attention(
     p: dict,
     x: jax.Array,        # (B, 1, D)

@@ -68,12 +68,22 @@ def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
     return z, x, b, c, dt
 
 
-def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+def _causal_conv(
+    u: jax.Array, w: jax.Array, b: jax.Array, cache=None
+) -> jax.Array:
     """Depthwise causal conv1d.  u: (B,S,C), w: (K,C).  f32 accumulation so
-    the decode step (which recomputes taps in f32) matches bit-for-bit."""
+    the decode step (which recomputes taps in f32) matches bit-for-bit.
+
+    ``cache`` (B, K-1, C), when given, replaces the zero left-pad with
+    the raw conv inputs preceding the chunk (a resumable prefill); a zero
+    cache is value-identical to the zero pad, which is what keeps
+    single-chunk prefills bit-identical to the monolithic path."""
     k = w.shape[0]
     uf = u.astype(jnp.float32)
-    pad = jnp.pad(uf, ((0, 0), (k - 1, 0), (0, 0)))
+    if cache is None:
+        pad = jnp.pad(uf, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([cache.astype(jnp.float32), uf], axis=1)
     out = jnp.zeros_like(uf)
     wf = w.astype(jnp.float32)
     for i in range(k):  # K is 4: unrolled taps, no conv primitive needed
@@ -187,13 +197,44 @@ def mamba_prefill(
     cfg: ModelConfig,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Forward pass that also returns decode-cache state:
-    (y (B,S,D), conv input tail (B,K-1,C), final ssm state (B,H,P,N))."""
+    (y (B,S,D), conv input tail (B,K-1,C), final ssm state (B,H,P,N)).
+
+    Delegates to :func:`mamba_prefill_chunk` with zeroed carry — the
+    monolithic prefill IS the single-chunk case, so the two can never
+    drift apart numerically (the dense-vs-paged byte-identity anchor)."""
+    bsz = u.shape[0]
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return mamba_prefill_chunk(
+        p, u,
+        jnp.zeros((bsz, cfg.ssm_conv - 1, conv_ch), u.dtype),
+        jnp.zeros(
+            (bsz, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        cfg,
+    )
+
+
+def mamba_prefill_chunk(
+    p: dict,
+    u: jax.Array,           # (B,S,D) — one suffix chunk
+    conv_cache: jax.Array,  # (B,K-1,C) raw conv inputs preceding the chunk
+    state0: jax.Array,      # (B,H,P,N) f32 SSM state entering the chunk
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of a resumable prefill: :func:`mamba_prefill` math with
+    the conv window and SSM state carried across chunks.  Returns
+    (y (B,S,D), new conv tail (B,K-1,C), final ssm state (B,H,P,N))."""
     bsz, s, d = u.shape
     zxbcdt = u @ p["in_proj"].astype(u.dtype)
     z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
     conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
-    conv_tail = conv_in[:, -(cfg.ssm_conv - 1) :, :]
-    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    new_tail = jnp.concatenate(
+        [conv_cache.astype(conv_in.dtype), conv_in], axis=1
+    )[:, -(cfg.ssm_conv - 1) :, :]
+    conv_out = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"], cache=conv_cache
+    )
     di, n = cfg.d_inner, cfg.ssm_state
     x = conv_out[..., :di]
     bmat = conv_out[..., di : di + n].astype(jnp.float32)
@@ -205,14 +246,15 @@ def mamba_prefill(
     log_decay = dtf * a
     xdt = xh * dtf[..., None]
     y, state = ssd_chunked(
-        xdt, log_decay, bmat, cmat, cfg.ssm_chunk, unroll=cfg.cost_exact
+        xdt, log_decay, bmat, cmat, cfg.ssm_chunk,
+        h0=state0.astype(jnp.float32), unroll=cfg.cost_exact,
     )
     y = y + xh * p["d_skip"][None, None, :, None]
     y = y.reshape(bsz, s, di).astype(u.dtype)
     y = y * jax.nn.silu(z)
     y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
     out = y @ p["out_proj"].astype(y.dtype)
-    return out, conv_tail, state
+    return out, new_tail, state
 
 
 def mamba_decode_step(

@@ -56,11 +56,19 @@ def init_rglru_block(key, cfg: ModelConfig) -> dict:
     }
 
 
-def _conv(u, w, b):
-    """f32-accumulated causal conv (matches decode-step recomputation)."""
+def _conv(u, w, b, cache=None):
+    """f32-accumulated causal conv (matches decode-step recomputation).
+
+    ``cache`` (B, K-1, W), when given, replaces the zero left-pad with
+    the raw conv inputs preceding the chunk (a resumable prefill); a zero
+    cache is value-identical to the zero pad, which is what keeps
+    single-chunk prefills bit-identical to the monolithic path."""
     k = w.shape[0]
     uf = u.astype(jnp.float32)
-    pad = jnp.pad(uf, ((0, 0), (k - 1, 0), (0, 0)))
+    if cache is None:
+        pad = jnp.pad(uf, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([cache.astype(jnp.float32), uf], axis=1)
     out = jnp.zeros_like(uf)
     wf = w.astype(jnp.float32)
     for i in range(k):
@@ -130,11 +138,39 @@ def rglru_prefill(
     cfg: ModelConfig,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Forward that also returns decode state:
-    (out (B,S,D), conv input tail (B,3,W), final hidden h (B,W))."""
+    (out (B,S,D), conv input tail (B,3,W), final hidden h (B,W)).
+
+    Delegates to :func:`rglru_prefill_chunk` with zeroed carry — the
+    monolithic prefill IS the single-chunk case, so the two can never
+    drift apart numerically (the dense-vs-paged byte-identity anchor)."""
+    b = x.shape[0]
+    w = p["w_main"].shape[1]
+    return rglru_prefill_chunk(
+        p, x,
+        jnp.zeros((b, 3, w), x.dtype),
+        jnp.zeros((b, w), jnp.float32),
+        cfg,
+    )
+
+
+def rglru_prefill_chunk(
+    p: dict,
+    x: jax.Array,           # (B,S,D) — one suffix chunk
+    conv_cache: jax.Array,  # (B,3,W) raw conv inputs preceding the chunk
+    h0: jax.Array,          # (B,W) f32 hidden state entering the chunk
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of a resumable prefill: :func:`rglru_prefill` math with
+    the recurrence carried across chunks.  With zero (conv_cache, h0) and
+    the chunk covering the whole prompt this is bit-identical to
+    ``rglru_prefill`` — the chunked serving prefill's equivalence anchor.
+    Returns (out (B,S,D), new conv tail (B,3,W), last hidden h (B,W))."""
     main = x @ p["w_main"].astype(x.dtype)
     gate_br = x @ p["w_gate_br"].astype(x.dtype)
-    conv_tail = main[:, -3:, :]
-    main_c = _conv(main, p["conv_w"], p["conv_b"])
+    new_tail = jnp.concatenate(
+        [conv_cache.astype(main.dtype), main], axis=1
+    )[:, -3:, :]
+    main_c = _conv(main, p["conv_w"], p["conv_b"], cache=conv_cache)
     mf = main_c.astype(jnp.float32)
     za = mf @ p["wa"].astype(jnp.float32) + p["ba"]
     zx = mf @ p["wx"].astype(jnp.float32) + p["bx"]
@@ -142,10 +178,10 @@ def rglru_prefill(
     i = jax.nn.sigmoid(zx)
     log_a_unit = -jax.nn.softplus(-p["lam"])
     log_a = _C_EXP * r * log_a_unit[None, None, :]
-    h = rglru_scan(i * mf, log_a)
+    h = rglru_scan(i * mf, log_a, h0=h0.astype(jnp.float32))
     y = h.astype(x.dtype) * jax.nn.gelu(gate_br, approximate=True)
     out = y @ p["w_out"].astype(y.dtype)
-    return out, conv_tail, h[:, -1, :]
+    return out, new_tail, h[:, -1, :]
 
 
 def rglru_decode_step(

@@ -539,6 +539,145 @@ def lm_decode_step(
     return new_cache, logits[:, 0, :]
 
 
+def init_prefill_state(cfg: ModelConfig) -> dict:
+    """Zeroed B=1 per-slot state leaves entering a chunked prefill.
+
+    ``pos`` plus the recurrent/SSM leaves — exactly the leaves
+    :func:`lm_prefill_chunk` threads between chunks and the engine's
+    state insert writes at the slot on completion."""
+    state = {"pos": jnp.zeros((1,), jnp.int32)}
+    state.update(_state_cache_leaves(cfg, 1))
+    return state
+
+
+def lm_prefill_chunk(
+    params: dict,
+    tokens: jax.Array,     # (1, c) — one request's suffix chunk
+    cfg: ModelConfig,
+    pool: dict,            # page-pool leaves (k_pages/v_pages[/scales])
+    state: dict,           # B=1 per-slot leaves incl. "pos" (see above)
+    table_row: jax.Array,  # (Wp,) int32 blocks covering the prompt bucket
+    q0: jax.Array,         # () int32 absolute position of the chunk start
+    bucket: int,           # static padded prompt length
+    quant_seeds: Optional[jax.Array] = None,  # (nbc,) uint32, int8 pools
+) -> tuple[dict, dict, jax.Array]:
+    """One chunk of a resumable paged prefill.
+
+    The chunked analogue of :func:`lm_prefill` for the paged layout:
+    attention layers write the chunk's K/V into the request's own pages
+    and attend over the whole prompt window (shared prefix pages
+    included) at absolute positions; recurrent/SSM layers advance their
+    state from the carried ``state`` leaves.  A single chunk covering the
+    whole bucket from zeroed state reproduces the monolithic prefill
+    bit-for-bit — the equivalence anchor for the dense-vs-paged and
+    sharing-on-vs-off byte-identity contracts.  int8 pools quantize each
+    chunk block under its content-derived seed (folded with the unit and
+    sublayer index), so shared blocks stay bit-identical across writers.
+
+    Returns (pool', state', last-token logits (1, V)); ``state'`` is the
+    boundary snapshot the engine stashes in the prefix index so a later
+    partial-prefix hit can resume exactly here.
+    """
+    b, c = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(q0 + jnp.arange(c)[None], (b, c))
+    int8_pool = "k_scale_pages" in pool
+    layer_state = {k: v for k, v in state.items() if k != "pos"}
+
+    def body(carry, xs):
+        h = carry
+        up, uc, us, uidx = xs
+        new_uc = dict(uc)
+        new_us = dict(us)
+        ia = ir = ism = 0
+        for i, kind in enumerate(cfg.layer_pattern):
+            sub = up[f"l{i}"]
+            if kind in ("global", "local"):
+                hin = rmsnorm(sub["ln1"], h, cfg.norm_eps)
+                kw = {}
+                if int8_pool:
+                    # content seed folded with (unit, sublayer): rounding
+                    # draws decorrelate across layers while staying a pure
+                    # function of (block content, block position, layer) —
+                    # the property that keeps int8 blocks shareable
+                    kw = dict(
+                        k_scale_pages=uc["k_scale_pages"][ia],
+                        v_scale_pages=uc["v_scale_pages"][ia],
+                        quant_seeds=(
+                            quant_seeds
+                            + jnp.asarray(uidx).astype(jnp.uint32)
+                            * jnp.uint32(40503)
+                            + jnp.uint32(i * 1299721)
+                        ),
+                    )
+                res = ATT.paged_prefill_self_attention(
+                    sub["attn"], hin,
+                    uc["k_pages"][ia], uc["v_pages"][ia],
+                    table_row, q0, bucket, cfg, kind=kind, **kw,
+                )
+                o, kp, vp = res[:3]
+                new_uc["k_pages"] = new_uc["k_pages"].at[ia].set(kp)
+                new_uc["v_pages"] = new_uc["v_pages"].at[ia].set(vp)
+                if int8_pool:
+                    new_uc["k_scale_pages"] = (
+                        new_uc["k_scale_pages"].at[ia].set(res[3])
+                    )
+                    new_uc["v_scale_pages"] = (
+                        new_uc["v_scale_pages"].at[ia].set(res[4])
+                    )
+                if cfg.post_norms:
+                    o = rmsnorm(sub["post_ln1"], o, cfg.norm_eps)
+                h = h + o
+                hm = rmsnorm(sub["ln2"], h, cfg.norm_eps)
+                if cfg.n_experts > 0:
+                    f, _ = MOE.moe_apply(sub["moe"], hm, cfg, None)
+                else:
+                    f = mlp_apply(sub["ffn"], hm, cfg, None)
+                if cfg.post_norms:
+                    f = rmsnorm(sub["post_ln2"], f, cfg.norm_eps)
+                h = h + f
+                ia += 1
+            elif kind == "rec":
+                hin = rmsnorm(sub["ln1"], h, cfg.norm_eps)
+                o, conv, hl = RG.rglru_prefill_chunk(
+                    sub["rec"], hin,
+                    us["rec_conv"][ir], us["rec_h"][ir], cfg,
+                )
+                new_us["rec_conv"] = new_us["rec_conv"].at[ir].set(conv)
+                new_us["rec_h"] = new_us["rec_h"].at[ir].set(hl)
+                h = h + o
+                h = h + mlp_apply(
+                    sub["ffn"], rmsnorm(sub["ln2"], h, cfg.norm_eps),
+                    cfg, None,
+                )
+                ir += 1
+            elif kind == "ssm":
+                hin = rmsnorm(sub["ln1"], h, cfg.norm_eps)
+                o, conv, st = M2.mamba_prefill_chunk(
+                    sub["mixer"], hin,
+                    us["ssm_conv"][ism], us["ssm_state"][ism], cfg,
+                )
+                new_us["ssm_conv"] = new_us["ssm_conv"].at[ism].set(conv)
+                new_us["ssm_state"] = new_us["ssm_state"].at[ism].set(st)
+                h = h + o
+                ism += 1
+        return h, (new_uc, new_us)
+
+    # always scan over units — :func:`lm_prefill` scans unconditionally
+    # (unlike the decode step, which branches on ``scan_layers``), and the
+    # bit-identity anchor requires the exact same HLO structure
+    x, (new_pool, new_layer_state) = jax.lax.scan(
+        body, x,
+        (params["units"], pool, layer_state, jnp.arange(cfg.n_units)),
+        unroll=True if cfg.cost_exact else 1,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_out(params["embed"], params.get("head"), x[:, -1:, :], cfg)
+    new_state = dict(new_layer_state)
+    new_state["pos"] = jnp.full((b,), q0 + c, jnp.int32)
+    return new_pool, new_state, logits[:, 0, :]
+
+
 def lm_prefill(
     params: dict,
     tokens: jax.Array,  # (B,S)

@@ -8,12 +8,17 @@ applied to LM decoding; greedy argmax is the digital baseline.
 
 ``ServingEngine`` is a continuous-batching engine: a slot-based scheduler
 (`repro.serving.scheduler`) admits queued requests into free slots of a
-live decode batch.  Each admission prefills ONE request (prompt left-padded
-to a compile-size bucket) and inserts its cache at the free slot index —
-no recompilation, the decode step keeps running for the other slots.
-Finished requests (EOS or per-request ``max_new_tokens``) are evicted and
-their slot refilled mid-flight, which is what lifts slot occupancy over
-static batching on mixed-length traces.
+live decode batch.  Under the paged layout, prefill is a CHUNKED,
+INTERLEAVED phase: an admission enqueues a prefill job (prompt left-padded
+to a compile-size bucket) and the engine computes at most
+``ServeConfig.prefill_chunk`` suffix tokens per tick between batched
+decode steps — long prompts never stall the in-flight decodes for more
+than one chunk's worth of work, and a partial-prefix hit starts its job
+mid-prompt (see below).  The dense layout keeps the monolithic
+one-request prefill as the byte-identity oracle.  Finished requests (EOS
+or per-request ``max_new_tokens``) are evicted and their slot refilled
+mid-flight, which is what lifts slot occupancy over static batching on
+mixed-length traces.
 
 The KV cache is **paged** by default (``ServeConfig.kv_layout``): a global
 pool of fixed-size blocks plus a per-slot block table, so cache capacity is
@@ -36,15 +41,21 @@ buys twice the pages, so admission takes ~2x the requests at equal budget
 
 Prefix sharing (``ServeConfig.enable_prefix_sharing``, paged only): each
 admission chains content hashes over its padded prompt's blocks and maps
-any resident match into its block table (refcount bump in the allocator's
-prefix index) instead of re-prefilling it — a *full* match skips the
-bucket prefill entirely, sampling its first token from the original
-prefill's stored last-token logits and inserting the stored O(1) per-slot
-state leaves.  The first write into a still-shared block copy-on-write
-forks it onto a spare page reserved at admission; pages return to the free
-list only at refcount zero.  int8 pools stay shareable because block
-quantization seeds derive from block CONTENT (chain hash), not the request
-id (docs/serving.md §"Prefix sharing & copy-on-write").
+the deepest resident match into its block table (refcount bump in the
+allocator's prefix index) instead of re-prefilling it.  A *full* match
+skips prefill entirely (first token sampled from the original prefill's
+stored last-token logits, stored O(1) state leaves inserted).  A
+*partial* match prefills ONLY the suffix: the job starts at the resume
+point and its chunks attend into the shared paged K/V through the
+prefix-aware chunked-prefill kernel — attention-only families resume at
+the full matched block depth, recurrent/SSM families at the deepest chunk
+boundary whose state snapshot is stashed in the index.  The first decode
+write into a still-shared block copy-on-write forks it onto a spare page
+reserved at admission; pages return to the free list only at refcount
+zero.  int8 pools stay shareable because block quantization seeds derive
+from block CONTENT (chain hash), not the request id (docs/serving.md
+§"Prefix sharing & copy-on-write", §"Partial-prefix prefill & chunked
+scheduling").
 
 WTA sampling stays independent per request: every slot carries the key
 ``fold_in(base_key, rid)`` and a step counter, so a request's vote noise is
@@ -110,6 +121,17 @@ class ServeConfig:
     # byte-identical with sharing on vs off (tests/test_serving.py); turn
     # it off to isolate raw pool behavior (capacity benchmarks).
     enable_prefix_sharing: bool = True
+    # paged layout only: at most this many prefill tokens are COMPUTED per
+    # engine tick, between decode steps — a long prompt prefills as a
+    # sequence of suffix chunks while the in-flight slots keep decoding,
+    # bounding the decode-latency jitter a monolithic bucket prefill would
+    # inject.  0 (the default) computes the whole bucket as one chunk.
+    # Must be a positive multiple of kv_block_size when set; chunk
+    # boundaries are also the resume grid for partial-prefix hits of
+    # recurrent/SSM families (their boundary states are stashed in the
+    # prefix index), so smaller chunks = finer-grained prefix reuse for
+    # stateful models, at more (bucket, chunk) compile pairs.
+    prefill_chunk: int = 0
 
     def buckets(self) -> tuple[int, ...]:
         if not self.prefill_buckets:
@@ -175,6 +197,17 @@ class ServeConfig:
                     f"enable_prefix_sharing must be a bool, got "
                     f"{self.enable_prefix_sharing!r}"
                 )
+            if self.prefill_chunk < 0:
+                raise ValueError(
+                    f"prefill_chunk must be >= 0, got {self.prefill_chunk}"
+                )
+            if self.prefill_chunk and self.prefill_chunk % self.kv_block_size:
+                # chunk boundaries must land on block boundaries: chunks
+                # scatter whole blocks and the resume grid is block-indexed
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be a "
+                    f"multiple of kv_block_size={self.kv_block_size}"
+                )
             # the smallest admissible request: shortest prefill bucket + one
             # generated token, whole lifetime reserved at admission
             need = -(
@@ -188,6 +221,11 @@ class ServeConfig:
                     f"request (bucket {min(self.buckets())} + 1 token) "
                     f"needs {need}; no request could ever be admitted"
                 )
+        elif self.prefill_chunk:
+            raise ValueError(
+                "prefill_chunk is a paged-layout knob; the dense layout "
+                "prefills monolithically (it is the byte-identity oracle)"
+            )
 
 
 @dataclasses.dataclass
@@ -206,6 +244,9 @@ class ServingMetrics:
     decode_time: float = 0.0     # seconds inside batched decode steps only
     prefix_hits: int = 0         # admissions that skipped prefill entirely
     cow_forks: int = 0           # shared blocks forked on first write
+    prefix_partial_hits: int = 0  # admissions that mapped SOME prompt blocks
+    prefill_tokens: int = 0       # prefill tokens actually computed
+    prefill_tokens_saved: int = 0  # prompt tokens skipped via the index
 
     @property
     def decode_step_ms(self) -> float:
@@ -250,15 +291,24 @@ class ServingEngine:
             self._serve_step = jax.jit(
                 SP.make_paged_serve_step(model_cfg), donate_argnums=(1,)
             )
-            self._insert = jax.jit(
-                SP.make_paged_cache_insert(model_cfg), donate_argnums=(0,)
+            # THE paged prefill: a resumable suffix-chunk step (cold
+            # prefills run their whole bucket as chunks from zeroed state,
+            # partial-prefix hits start at q0 > 0 attending into shared
+            # pages).  ``bucket`` is the only static argument — one
+            # compile per (bucket, chunk shape) pair; the cache is donated
+            # (in-place page writes), the threaded state is NOT (boundary
+            # snapshots are stashed in the prefix index and must survive
+            # the next chunk call).
+            self._suffix_prefill = jax.jit(
+                SP.make_paged_suffix_prefill(model_cfg),
+                static_argnames=("bucket",), donate_argnums=(1,),
             )
             # prefix-sharing entry points (each compiles at most once —
             # state-leaf shapes are bucket-independent, page ids / logits
-            # shapes are fixed): the full-hit admission inserts stored
-            # per-slot states instead of prefilling, samples the first
-            # token from stored last-token logits, and COW forks copy one
-            # pool page onto another
+            # shapes are fixed): completion/full-hit admissions insert
+            # per-slot state leaves, sample the first token from last
+            # chunk (or stored) logits, and COW forks copy one pool page
+            # onto another
             self._state_insert = jax.jit(
                 SP.make_paged_state_insert(model_cfg), donate_argnums=(0,)
             )
@@ -272,14 +322,25 @@ class ServingEngine:
                 )
             )
             # rid -> admission plan built by the gate (block hashes,
-            # content-derived int8 quant seeds, full-hit flag); consumed by
-            # _admit_one.  A True gate always leads to admission, so plans
-            # cannot leak.
+            # content-derived int8 quant seeds, resume depth, full-hit
+            # flag); consumed by _admit_one.  A True gate always leads to
+            # admission, so plans cannot leak.
             self._plans: dict[int, dict] = {}
             # rid -> (hashes, seeds): pure function of the prompt, but a
             # back-pressured queue head is re-gated every tick — memoize
             # so only the index lookups rerun per attempt
             self._hash_memo: dict[int, tuple] = {}
+            # rid -> in-flight chunked-prefill job, processed FIFO (the
+            # ordering that guarantees a sharer's source pages and
+            # boundary-state payloads are resident before its first chunk)
+            self._jobs: dict[int, dict] = {}
+            self._job_fifo: list[int] = []
+            # recurrent/SSM families can only resume a partial-prefix hit
+            # at a chunk boundary whose state snapshot is stashed;
+            # attention-only families resume at any matched block
+            self._stateful = any(
+                k in ("rec", "ssm") for k in model_cfg.layer_pattern
+            )
         else:
             self.blocks = None
             self._serve_step = jax.jit(
@@ -288,7 +349,7 @@ class ServingEngine:
             self._insert = jax.jit(
                 SP.make_cache_insert(model_cfg), donate_argnums=(0,)
             )
-        self._prefill = jax.jit(self._make_prefill())
+            self._prefill = jax.jit(self._make_prefill())
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._cache = None  # allocated lazily on first admission
         self._tokens = np.zeros((b,), np.int32)   # last emitted, per slot
@@ -299,35 +360,27 @@ class ServingEngine:
         self._prefills = 0
         self._prefix_hits = 0
         self._cow_forks = 0
+        self._prefix_partial_hits = 0
+        self._prefill_tokens = 0
+        self._prefill_tokens_saved = 0
         self._total_tokens = 0
         self._busy_time = 0.0
         self._decode_time = 0.0
 
     def _make_prefill(self):
+        """Monolithic one-request prefill — the DENSE layout only (the
+        paged layout's prefill is the chunked ``_suffix_prefill``, which
+        subsumes it; a single whole-bucket chunk is bit-identical)."""
         cfg, max_len = self.mcfg, self.cfg.max_len
-        paged, bs = self.paged, self.cfg.kv_block_size
-        if self.int8:
-            # the POOL is int8; the one-request prefill cache stays full
-            # precision and is quantized (stochastic rounding) by the paged
-            # insert as it scatters blocks into pages
-            cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
 
         def prefill(params, tokens, key):  # tokens (1, L), key (2,) uint32
             fns = get_model_fns(cfg)
-            # paged: build the one-request cache at the bucket rounded up to
-            # a block multiple (O(bucket) memory) instead of max_len — the
-            # insert scatters it into whole pool pages.
-            lb = tokens.shape[1]
-            window = -(-lb // bs) * bs if paged else max_len
             cache, logits = fns.prefill(
-                params, {"tokens": tokens}, cfg, window
+                params, {"tokens": tokens}, cfg, max_len
             )
             tok0 = SP.sample_tokens(
                 cfg, logits, key[None, :], jnp.zeros((1,), jnp.int32)
             )
-            # logits ride along so prefix sharing can stash them: a later
-            # identical prompt samples ITS tok0 from these exact bits
-            # (with its own per-request key) without recomputing prefill
             return cache, tok0, logits
 
         return prefill
@@ -394,24 +447,50 @@ class ServingEngine:
             self.mcfg, self.cfg.max_batch, self.cfg.max_len
         )
 
+    def _chunk_tokens(self, bucket: int) -> int:
+        """The prefill chunk grid for ``bucket`` (0 → whole bucket)."""
+        return min(self.cfg.prefill_chunk or bucket, bucket)
+
+    def _resume_tokens(self, n_matched: int, bucket: int) -> int:
+        """How many prompt tokens a partial hit can SKIP computing.
+
+        Attention-only families resume at the full matched depth: suffix
+        hidden states are per-position functions of (token, attended
+        K/V), so any block boundary is an exact resume point.
+        Recurrent/SSM families additionally need the carried state at the
+        resume point, which the chunked prefill stashes at CHUNK
+        boundaries only — so the matched depth truncates down to the
+        chunk grid (every registrant shares the grid, so a grid-boundary
+        block always carries a state snapshot by the time this request's
+        first chunk runs — FIFO job order).
+        """
+        p = n_matched * self.cfg.kv_block_size
+        if not self._stateful:
+            return p
+        grid = self._chunk_tokens(bucket)
+        return (p // grid) * grid
+
     def _try_reserve_blocks(self, req: Request) -> bool:
         """Admission gate: reserve the request's whole block budget, or
         refuse.  Reserving *inside* the gate (not later in the prefill) is
         what makes multi-admission ticks safe: each True answer has already
         taken its pages, so the next queue head is gated against what is
-        actually left.  A True from the gate always leads to admission, so
-        a reservation can never leak.
+        actually left.  A True from the gate always leads to admission and
+        a False leaves the allocator COMPLETELY untouched — matching is a
+        read-only probe (``longest_prefix_match``) and the refcount bumps
+        for the mapped pages happen only inside the atomic ``reserve``, so
+        a refused or re-gated request can never leak a reference
+        (tests/test_serving.py::test_admission_gate_refusal_has_no_side_effects).
 
-        With prefix sharing the gate first matches the padded prompt's
-        block chain hashes against the allocator's index: hits are mapped
-        (refcount bump) instead of allocated, a shared *partial* boundary
-        block additionally reserves one spare page as the guaranteed COW
-        fork target (the request WILL write into that block at its first
-        decode token), and the request's own fresh prompt blocks are
-        registered immediately — so identical prompts admitted in the same
-        tick already share.  Registration before the prefill write is safe:
-        shared pages are only ever read by the batched decode step, which
-        runs after every admission of the tick has inserted its content.
+        With prefix sharing the gate maps the deepest resident chain hit
+        into the request's table (refcount bump — capacity win even when
+        the compute resume point truncates below it), reserves one spare
+        COW page for a full hit ending in a partial boundary block (the
+        request WILL write there at its first decode token), and registers
+        the request's own fresh prompt blocks immediately so same-tick
+        duplicates already share; their CONTENT lands later, chunk by
+        chunk, which is safe because prefill jobs run FIFO — a sharer's
+        first chunk never precedes its source's covering chunk.
         """
         bucket = self._bucket(len(req.prompt))
         nb_total = self._blocks_needed(bucket, req.max_new_tokens)
@@ -419,7 +498,8 @@ class ServingEngine:
         n_prompt = -(-bucket // bs)
         plan: dict = {
             "full_hit": False, "hashes": None, "seeds": None,
-            "n_prompt": n_prompt, "n_shared": 0,
+            "n_prompt": n_prompt, "n_shared": 0, "resume": 0,
+            "bucket": bucket,
         }
         if self.sharing or self.int8:
             memo = self._hash_memo.get(req.rid)
@@ -438,11 +518,9 @@ class ServingEngine:
             plan["hashes"], plan["seeds"] = memo
         shared: list[int] = []
         if self.sharing:
-            for h, _ in plan["hashes"]:
-                page = self.blocks.lookup(h)
-                if page is None:
-                    break
-                shared.append(page)
+            shared = self.blocks.longest_prefix_match(
+                [h for h, _ in plan["hashes"]]
+            )
         full = len(shared) == n_prompt
         # a shared partial boundary block is written at the first decode
         # token — reserve its fork page NOW so the COW can never starve
@@ -456,6 +534,8 @@ class ServingEngine:
                 self.blocks.register(pages[i], plan["hashes"][i][0])
             plan["full_hit"] = full
             plan["n_shared"] = len(shared)
+            if not full:
+                plan["resume"] = self._resume_tokens(len(shared), bucket)
         self._plans[req.rid] = plan
         return True
 
@@ -475,72 +555,69 @@ class ServingEngine:
         self._table[req.slot, :] = 0
 
     def _admit_one(self, req: Request) -> None:
+        """Bind an admitted request to its slot.
+
+        Dense: monolithic prefill + slot insert, decode starts immediately
+        (the PR-1 oracle path, unchanged).  Paged: enqueue a chunked
+        prefill job — the slot's table row stays pointed at the trash page
+        and its per-slot cache leaves stay engine-owned (threaded through
+        the chunk steps host-side) until the job completes, so the batched
+        decode steps running for the OTHER slots in the meantime can never
+        corrupt a prefill in flight."""
         slot = req.slot
         plen = self._bucket(len(req.prompt))
         rkey = jax.random.fold_in(self._base_key, req.rid)
-        plan = self._plans.pop(req.rid, None) if self.paged else None
-        if self.paged:
-            self._hash_memo.pop(req.rid, None)
-        if self.paged:
-            pages = self.blocks.owned(req.rid)  # reserved by the gate
-            row = np.zeros((self._max_blocks,), np.int32)
-            row[: len(pages)] = pages
-            self._table[slot] = row
-            self._host_pos[slot] = plen
         if self._cache is None:
             self._cache = self._init_cache()
-        payload = None
-        if plan is not None and plan["full_hit"]:
-            # every block covering the padded prompt is resident; the last
-            # block's index entry carries the original prefill's last-token
-            # logits + per-slot state leaves (filled before this admission
-            # runs — FIFO order guarantees the registrant admitted first)
-            payload = self.blocks.payload(plan["hashes"][-1][0])
-        if payload is not None:
-            logits, state = payload
-            self._cache = self._state_insert(self._cache, state, slot)
-            tok0 = self._sample0(logits, rkey)
-            self._prefix_hits += 1
-        else:
+        self._req_keys[slot] = np.asarray(rkey)
+        if not self.paged:
             toks = np.asarray([left_pad(req.prompt, plen)], np.int32)
-            one_cache, tok0, logits = self._prefill(
+            one_cache, tok0, _ = self._prefill(
                 self.params, jnp.asarray(toks), rkey
             )
-            if self.paged:
-                if self.int8:
-                    # content-derived per-block rounding seeds (NOT the
-                    # request key): shared prefixes re-quantize to
-                    # bit-identical codes, which is what makes an int8
-                    # block shareable at all
-                    self._cache = self._insert(
-                        self._cache, one_cache, slot,
-                        jnp.asarray(self._table[slot]),
-                        jnp.asarray(plan["seeds"]),
-                    )
-                else:
-                    self._cache = self._insert(
-                        self._cache, one_cache, slot,
-                        jnp.asarray(self._table[slot]),
-                    )
-                if self.sharing:
-                    # publish this prompt's terminal entry so a later (or
-                    # same-tick) identical prompt can skip its prefill;
-                    # pool K/V live in the pages, so only the O(1)
-                    # per-slot leaves need stashing
-                    self.blocks.set_payload(
-                        plan["hashes"][-1][0],
-                        (
-                            logits,
-                            {
-                                n: v for n, v in one_cache.items()
-                                if n not in ("k", "v")
-                            },
-                        ),
-                    )
-            else:
-                self._cache = self._insert(self._cache, one_cache, slot)
+            self._cache = self._insert(self._cache, one_cache, slot)
             self._prefills += 1
-        self._req_keys[slot] = np.asarray(rkey)
+            self._prefill_tokens += plen
+            self._finish_admission(req, tok0)
+            return
+        plan = self._plans.pop(req.rid)
+        self._hash_memo.pop(req.rid, None)
+        pages = self.blocks.owned(req.rid)  # reserved by the gate
+        row = np.zeros((self._max_blocks,), np.int32)
+        row[: len(pages)] = pages
+        if plan["full_hit"]:
+            # stash the terminal payload NOW if it already exists: the
+            # registrant may in-place-diverge its partial boundary block
+            # (dropping the index entry and payload with it) before this
+            # job reaches the head of the prefill FIFO.  A logits-less
+            # (None, state) payload is a CHUNK-BOUNDARY snapshot of a
+            # longer in-flight prompt whose grid boundary happens to be
+            # this prompt's terminal hash — not a terminal payload; the
+            # job will demote to a suffix recompute instead.
+            payload = self.blocks.payload(plan["hashes"][-1][0])
+            plan["payload"] = (
+                payload
+                if payload is not None and payload[0] is not None
+                else None
+            )
+        elif plan["n_shared"] > 0:
+            self._prefix_partial_hits += 1
+            self._prefill_tokens_saved += plan["resume"]
+        self._jobs[req.rid] = {
+            "req": req,
+            "row": row,
+            "plan": plan,
+            "q0": plen if plan["full_hit"] else plan["resume"],
+            "bucket": plen,
+            "rkey": rkey,
+            "state": None,
+            "tokens": left_pad(req.prompt, plen),
+        }
+        self._job_fifo.append(req.rid)
+
+    def _finish_admission(self, req: Request, tok0) -> None:
+        """Shared admission tail: first token, decode start, bookkeeping."""
+        slot = req.slot
         self.sched.start_decode(req)
         t0 = int(tok0[0])  # blocks on the prefill — TTFT stamps after it
         self._tokens[slot] = t0
@@ -551,8 +628,150 @@ class ServingEngine:
         )
         self._release_if_done(req)  # budget=1 or instant EOS
 
+    def _complete_job(self, rid: int, job: dict, tok0) -> None:
+        """Finish a chunked-prefill job: publish the real block-table row
+        (decode writes may now land in the request's own pages), mirror
+        the final position, and start decoding."""
+        req = job["req"]
+        self._table[req.slot] = job["row"]
+        self._host_pos[req.slot] = job["bucket"]
+        self._job_fifo.pop(0)
+        del self._jobs[rid]
+        self._finish_admission(req, tok0)
+
+    def _resume_state(self, plan: dict, q0: int) -> dict:
+        """State leaves entering a job's first computed chunk: zeroed for
+        a cold start, the stashed boundary snapshot for a stateful
+        partial-prefix resume (attention-only families carry no recurrent
+        state — their resume needs only the shared pages)."""
+        if q0 == 0 or not self._stateful:
+            return SP.init_prefill_state(self.mcfg)
+        h = plan["hashes"][q0 // self.cfg.kv_block_size - 1][0]
+        payload = self.blocks.payload(h)
+        assert payload is not None, (
+            "missing boundary-state snapshot for a grid-aligned resume"
+        )
+        return payload[1]
+
+    def _prefill_tick(self, emitted: list[tuple[int, int]]) -> None:
+        """Advance the chunked-prefill pipeline by at most one compute
+        chunk (≤ ``prefill_chunk`` tokens), completing any number of
+        zero-compute full hits along the way.
+
+        Jobs run strictly FIFO — the ordering that makes gate-time
+        registration safe: by the time a sharer's first chunk (or a full
+        hit's payload fetch) runs, the source request's covering chunks
+        have already written their pages and boundary snapshots."""
+        computed = False
+        while self._job_fifo:
+            rid = self._job_fifo[0]
+            job = self._jobs[rid]
+            req, plan = job["req"], job["plan"]
+            bucket = job["bucket"]
+            if plan["full_hit"]:
+                payload = plan.get("payload") or self.blocks.payload(
+                    plan["hashes"][-1][0]
+                )
+                # a logits-less boundary snapshot cannot seed the first
+                # token — only a completed identical prompt's terminal
+                # (logits, state) can; anything else demotes below (the
+                # recompute republishes terminal logits on the hash, so
+                # LATER repeats of this prompt full-hit properly)
+                if payload is not None and payload[0] is not None:
+                    logits, state = payload
+                    self._cache = self._state_insert(
+                        self._cache, state, req.slot
+                    )
+                    tok0 = self._sample0(logits, job["rkey"])
+                    self._prefix_hits += 1
+                    self._prefill_tokens_saved += bucket
+                    self._complete_job(rid, job, tok0)
+                    emitted.append((rid, req.output[-1]))
+                    continue
+                # no usable terminal payload: it died while this job
+                # waited (the registrant in-place-diverged its boundary
+                # block with its decode writes), or the matched terminal
+                # hash only ever carried a longer prompt's chunk-boundary
+                # snapshot.  Demote to a minimal grid-aligned suffix
+                # recompute — the interior shared pages are still
+                # content-valid, only the boundary block and the
+                # (logits, state) must be regenerated
+                plan["full_hit"] = False
+                grid = (
+                    self._chunk_tokens(bucket) if self._stateful
+                    else self.cfg.kv_block_size
+                )
+                job["q0"] = ((bucket - 1) // grid) * grid
+                bs = self.cfg.kv_block_size
+                last = plan["n_prompt"] - 1
+                page = int(job["row"][last])
+                if (
+                    bucket % bs != 0
+                    and self.blocks.refcount(page) > 1
+                    and self.blocks.spare_count(rid) > 0
+                ):
+                    # the diverged boundary page now carries the
+                    # registrant's live decode rows — the recompute must
+                    # NOT rewrite it in place.  Fork onto the spare the
+                    # full-hit plan reserved; no device copy is needed
+                    # because the recompute rewrites every row of the
+                    # block (prompt rows with identical bits, the rest
+                    # with masked zero padding).
+                    _, new = self.blocks.cow_fork(rid, last)
+                    job["row"][last] = new
+                    self._cow_forks += 1
+                self._prefix_partial_hits += 1
+                self._prefill_tokens_saved += job["q0"]
+            if computed:
+                break
+            q0 = job["q0"]
+            if job["state"] is None:
+                job["state"] = self._resume_state(plan, q0)
+            grid = self._chunk_tokens(bucket)
+            c = min((q0 // grid + 1) * grid, bucket) - q0
+            bs = self.cfg.kv_block_size
+            b0, b1 = q0 // bs, -(-(q0 + c) // bs)
+            args = [
+                self.params,
+                self._cache,
+                job["state"],
+                jnp.asarray([job["tokens"][q0 : q0 + c]], jnp.int32),
+                jnp.asarray(job["row"][: plan["n_prompt"]]),
+                jnp.asarray(q0, jnp.int32),
+            ]
+            if self.int8:
+                args.append(jnp.asarray(plan["seeds"][b0:b1]))
+            self._cache, job["state"], logits = self._suffix_prefill(
+                *args, bucket=bucket
+            )
+            self._prefill_tokens += c
+            job["q0"] = q0 + c
+            computed = True
+            done = job["q0"] == bucket
+            if self.sharing:
+                # stash the boundary snapshot on the chunk's last block so
+                # later admissions can resume (or, on the final chunk with
+                # its logits, skip) exactly here; if an in-flight
+                # duplicate registered the hash first, its own chunk
+                # attaches — ours would be identical bits anyway
+                h_last = plan["hashes"][b1 - 1][0]
+                if self.blocks.lookup(h_last) == int(job["row"][b1 - 1]):
+                    self.blocks.set_payload(
+                        h_last, (logits if done else None, job["state"])
+                    )
+            if not done:
+                break
+            self._cache = self._state_insert(
+                self._cache, job["state"], req.slot
+            )
+            tok0 = self._sample0(logits, job["rkey"])
+            self._prefills += 1
+            self._complete_job(rid, job, tok0)
+            emitted.append((rid, req.output[-1]))
+
     def tick(self) -> list[tuple[int, int]]:
-        """One engine iteration: admit+prefill, then one batched decode step.
+        """One engine iteration: admit, advance the (chunked) prefill
+        pipeline, then one batched decode step for the decoding slots.
 
         Returns the (rid, token) pairs emitted during this tick.
         """
@@ -561,7 +780,10 @@ class ServingEngine:
         gate = self._try_reserve_blocks if self.paged else None
         for req in self.sched.admit(gate):
             self._admit_one(req)
-            emitted.append((req.rid, req.output[-1]))
+            if not self.paged:
+                emitted.append((req.rid, req.output[-1]))
+        if self.paged:
+            self._prefill_tick(emitted)
         active = self.sched.active()
         if active and self.sharing:
             self._cow_pass(active)
@@ -701,27 +923,31 @@ class ServingEngine:
             decode_time=self._decode_time,
             prefix_hits=self._prefix_hits,
             cow_forks=self._cow_forks,
+            prefix_partial_hits=self._prefix_partial_hits,
+            prefill_tokens=self._prefill_tokens,
+            prefill_tokens_saved=self._prefill_tokens_saved,
         )
 
     def compile_counts(self) -> dict[str, int]:
         """Traced-computation counts per jitted entry point.
 
-        The recompile-guard tests pin these: a whole trace must cost one
-        compile per prefill bucket (prefill + insert) and one per decode
-        window bucket (serve_step) — never one per tick or per slot.  The
-        prefix-sharing entry points (state_insert, page_copy, sample0)
+        The recompile-guard tests pin these.  Paged: one compile per
+        (bucket, suffix-chunk shape) pair for the chunked prefill entry
+        point and one per decode window bucket (serve_step) — never one
+        per tick, slot, page set, or start position (those are traced).
+        The sharing entry points (state_insert, page_copy, sample0)
         compile at most ONCE each over the engine's lifetime: their
-        argument shapes are bucket-independent and page ids / slots /
-        seeds are all traced."""
-        counts = {
-            "prefill": self._prefill._cache_size(),
-            "insert": self._insert._cache_size(),
-            "serve_step": self._serve_step._cache_size(),
-        }
+        argument shapes are bucket-independent.  Dense: one compile per
+        prefill bucket (prefill + insert)."""
+        counts = {"serve_step": self._serve_step._cache_size()}
         if self.paged:
+            counts["suffix_prefill"] = self._suffix_prefill._cache_size()
             counts["state_insert"] = self._state_insert._cache_size()
             counts["page_copy"] = self._page_copy._cache_size()
             counts["sample0"] = self._sample0._cache_size()
+        else:
+            counts["prefill"] = self._prefill._cache_size()
+            counts["insert"] = self._insert._cache_size()
         return counts
 
 

@@ -279,6 +279,26 @@ class BlockAllocator:
         """Resident page holding the block hashed ``h``, or None."""
         return self._prefix.get(h)
 
+    def longest_prefix_match(self, hashes: Sequence[bytes]) -> list[int]:
+        """Deepest resident chain hit for a prompt's block hashes.
+
+        Walks ``hashes`` (one chain digest per prompt block, in table
+        order) and returns the pages of the longest *consecutive* leading
+        run that is resident in the prefix index — the match an admission
+        maps into its block table.  Chain digests make consecutiveness
+        structural (block ``i``'s hash commits to everything before it),
+        so the first miss ends the usable prefix.  Read-only: probing
+        never bumps a refcount or touches the index — only a subsequent
+        ``reserve(shared=...)`` takes references, and atomically.
+        """
+        pages: list[int] = []
+        for h in hashes:
+            page = self._prefix.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
     def payload(self, h: bytes) -> Any:
         return self._payload.get(h)
 

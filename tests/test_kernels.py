@@ -273,6 +273,137 @@ def test_paged_attention_op_dispatches_off_tpu():
 
 
 # ---------------------------------------------------------------------------
+# prefix-aware chunked-prefill attention (suffix-only prefill kernel)
+# ---------------------------------------------------------------------------
+
+
+def _suffix_case(seed, s, h, hkv, dh, n_pages, bs, w):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (s, h, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, bs, hkv, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, bs, hkv, dh), jnp.float32)
+    perm = jax.random.permutation(ks[3], n_pages - 1)[:w] + 1
+    table = perm.astype(jnp.int32)
+    return q, kp, vp, table
+
+
+@pytest.mark.parametrize("kind,local_window", [("global", 0), ("local", 5)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+@pytest.mark.parametrize(
+    "s,q0",
+    [
+        (8, 0),    # whole-prompt chunk from position 0
+        (8, 16),   # suffix chunk starting exactly at a block boundary
+        (5, 16),   # ragged suffix length, block-boundary start
+        (13, 8),   # ragged length spanning several blocks
+    ],
+)
+def test_prefill_attention_kernel_matches_oracle(
+    kind, local_window, softcap, s, q0
+):
+    """Interpret-mode kernel vs the pure-jnp oracle: GQA heads, ragged
+    suffix lengths, block-boundary suffix starts, both mask kinds, with
+    and without soft-capping."""
+    from repro.kernels.prefill_attention import paged_prefill_attention_pallas
+
+    bs, w = 8, 4
+    q, kp, vp, table = _suffix_case(0, s, 4, 2, 16, 16, bs, w)
+    y_ref = ops.ref.prefill_attention_ref(
+        q, kp, vp, table, jnp.asarray(q0, jnp.int32),
+        kind=kind, local_window=local_window, softcap=softcap,
+    )
+    y_k = paged_prefill_attention_pallas(
+        q, kp, vp, table, jnp.asarray(q0, jnp.int32),
+        kind=kind, local_window=local_window, softcap=softcap,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_ref), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_prefill_attention_kernel_matches_oracle_int8():
+    """int8 pages + scale planes: the fused-dequant kernel path agrees
+    with the oracle's scores-not-cache math on a mid-prompt suffix."""
+    from repro.kernels.prefill_attention import paged_prefill_attention_pallas
+
+    s, bs, w = 7, 8, 3
+    q, kp, vp, table = _suffix_case(3, s, 4, 2, 16, 12, bs, w)
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    kp8 = jax.random.randint(ks[0], kp.shape, -127, 128, jnp.int32).astype(
+        jnp.int8
+    )
+    vp8 = jax.random.randint(ks[1], vp.shape, -127, 128, jnp.int32).astype(
+        jnp.int8
+    )
+    k_scale = jnp.abs(
+        jax.random.normal(ks[0], kp.shape[:3], jnp.float32)
+    ) + 0.1
+    v_scale = jnp.abs(
+        jax.random.normal(ks[1], vp.shape[:3], jnp.float32)
+    ) + 0.1
+    q0 = jnp.asarray(8, jnp.int32)
+    y_ref = ops.ref.prefill_attention_ref(
+        q, kp8, vp8, table, q0, k_scale=k_scale, v_scale=v_scale
+    )
+    y_k = paged_prefill_attention_pallas(
+        q, kp8, vp8, table, q0, k_scale=k_scale, v_scale=v_scale,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_ref), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_prefill_attention_suffix_matches_full_restriction():
+    """Per-query independence — the property suffix-only prefill rests
+    on: computing only the suffix's queries must give exactly the same
+    rows the full-prompt oracle gives for those positions."""
+    bs, w = 8, 3
+    q, kp, vp, table = _suffix_case(5, bs * w, 4, 4, 16, 12, bs, w)
+    y_full = ops.ref.prefill_attention_ref(
+        q, kp, vp, table, jnp.asarray(0, jnp.int32)
+    )
+    suffix = q[16:]
+    y_sfx = ops.ref.prefill_attention_ref(
+        suffix, kp, vp, table, jnp.asarray(16, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_sfx), np.asarray(y_full)[16:], atol=1e-6, rtol=1e-6
+    )
+
+
+def test_prefill_attention_ignores_blocks_beyond_chunk():
+    """Pages entirely beyond the chunk's last query must not leak into
+    the output: poison them and compare against a short-table oracle."""
+    from repro.kernels.prefill_attention import paged_prefill_attention_pallas
+
+    s, bs, w = 6, 8, 4
+    q, kp, vp, table = _suffix_case(7, s, 4, 4, 16, 12, bs, w)
+    q0 = jnp.asarray(8, jnp.int32)  # queries cover positions 8..13
+    poison = np.asarray(table[2:])
+    kp = kp.at[poison].set(1e9)
+    vp = vp.at[poison].set(1e9)
+    y_short = ops.ref.prefill_attention_ref(q, kp, vp, table[:2], q0)
+    y_k = paged_prefill_attention_pallas(
+        q, kp, vp, table, q0, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_short), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_prefill_attention_op_dispatches_off_tpu():
+    """ops.paged_prefill_attention falls back to the oracle off-TPU (the
+    serving prefill path must not run interpret-mode emulation)."""
+    q, kp, vp, table = _suffix_case(2, 5, 4, 2, 16, 8, 8, 2)
+    q0 = jnp.asarray(8, jnp.int32)
+    y = ops.paged_prefill_attention(q, kp, vp, table, q0)
+    y_ref = ops.ref.prefill_attention_ref(q, kp, vp, table, q0)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
 # portable PRNG quality
 # ---------------------------------------------------------------------------
 

@@ -176,6 +176,31 @@ def test_deregister_is_idempotent_and_drops_payload():
     check_invariants(a)
 
 
+def test_longest_prefix_match_is_deep_and_read_only():
+    """The partial-prefix probe: returns the deepest CONSECUTIVE leading
+    run of resident hashes, stops at the first miss, and never mutates
+    allocator state (refcounts, index, free list)."""
+    a = BlockAllocator(10)
+    pages = a.alloc(0, 3)
+    for i, p in enumerate(pages):
+        a.register(p, bytes([i]))
+    refs = dict(a._refs)
+    free = list(a._free)
+    assert a.longest_prefix_match([bytes([0]), bytes([1]), bytes([2])]) == pages
+    assert a.longest_prefix_match([bytes([0]), bytes([9]), bytes([2])]) == (
+        pages[:1]
+    )
+    assert a.longest_prefix_match([bytes([9])]) == []
+    assert a.longest_prefix_match([]) == []
+    # probing bumped nothing and freed nothing
+    assert a._refs == refs and a._free == free
+    check_invariants(a)
+    # a deregistered middle block truncates later probes structurally
+    a.deregister(pages[1])
+    assert a.longest_prefix_match([bytes([i]) for i in range(3)]) == pages[:1]
+    check_invariants(a)
+
+
 def test_prefix_block_hashes_chain_semantics():
     """Chain hashes identify content-at-position: equal padded prefixes
     share hashes, any earlier divergence changes every later hash, and a
@@ -206,12 +231,52 @@ def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
     a = BlockAllocator(n_blocks)
     next_owner = 0
     next_hash = 0
+    # synthetic chains: hash -> page history, so "match"/"suffix_reserve"
+    # can build plausible (and implausible) probe sequences
     for _ in range(n_ops):
         op = rng.choice(
-            ["reserve", "reserve", "register", "fork", "free", "deregister"]
+            [
+                "reserve", "reserve", "register", "fork", "free",
+                "deregister", "match", "suffix_reserve",
+            ]
         )
         try:
-            if op == "reserve":
+            if op == "match":
+                # probe with a mix of live hashes and junk: the result must
+                # be the leading resident run, and probing must not mutate
+                registered = list(a.registered_pages().items())
+                rng.shuffle(registered)
+                probe = [h for _, h in registered[:3]]
+                cut = rng.randint(0, len(probe))
+                probe.insert(cut, b"\xff-junk")
+                refs_before = dict(a._refs)
+                got = a.longest_prefix_match(probe)
+                want = []
+                for h in probe:
+                    p = a.lookup(h)
+                    if p is None:
+                        break
+                    want.append(p)
+                assert got == want
+                assert a._refs == refs_before, "match mutated refcounts"
+            elif op == "suffix_reserve":
+                # the suffix-prefill admission shape: map the deepest run
+                # of a registered chain, take fresh pages for the suffix +
+                # decode budget, register the fresh ones under new hashes
+                registered = list(a.registered_pages().values())
+                probe = registered[: rng.randint(0, min(3, len(registered)))]
+                shared = a.longest_prefix_match(probe)
+                n_new = rng.randint(0 if shared else 1, 3)
+                n_spare = rng.randint(0, 1) if shared else 0
+                if a.can_alloc(n_new + n_spare):
+                    pages = a.reserve(next_owner, n_new, shared, n_spare)
+                    assert pages[: len(shared)] == shared
+                    for p in pages[len(shared) :]:
+                        if rng.random() < 0.5:
+                            a.register(p, next_hash.to_bytes(8, "little"))
+                            next_hash += 1
+                    next_owner += 1
+            elif op == "reserve":
                 registered = list(a.registered_pages())
                 # a random (possibly empty) run of resident pages to share
                 shared = rng.sample(

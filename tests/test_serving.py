@@ -394,17 +394,19 @@ def test_paged_engine_no_unused_donation_warnings(smoke):
 
 
 def test_paged_recompile_guard(smoke):
-    """Driving a full mixed-length trace costs one compile per prefill
-    bucket (prefill + insert) and one per decode window width
-    (serve_step) — and a SECOND identical trace through the same engine
-    costs zero new compiles.  No per-tick / per-slot / per-page-set
-    recompiles."""
+    """Driving a full mixed-length trace costs one compile per (bucket,
+    suffix-chunk shape) pair for the chunked-prefill entry point — with
+    the default whole-bucket chunks and no prefix overlap, one per
+    bucket — and one per decode window width (serve_step); a SECOND
+    identical trace through the same engine costs zero new compiles.  No
+    per-tick / per-slot / per-page-set / per-start-position recompiles."""
     cfg, params = smoke
     eng, _ = _run_layout(params, cfg, "paged")
     counts = eng.compile_counts()
     buckets_used = {eng._bucket(len(p)) for p in MIXED_PROMPTS}
-    assert counts["prefill"] == len(buckets_used)
-    assert counts["insert"] == len(buckets_used)
+    assert counts["suffix_prefill"] == len(buckets_used)
+    assert counts["state_insert"] == 1  # every completion, one compile
+    assert counts["sample0"] == 1
     # window widths are power-of-two bucketed: far fewer than decode steps
     m = eng.metrics()
     assert counts["serve_step"] <= 4
@@ -544,15 +546,15 @@ def test_int8_pool_doubles_admission_capacity(smoke):
 
 def test_int8_paged_recompile_guard(smoke):
     """The int8 layout keeps the compile discipline: one compile per
-    prefill bucket (prefill + insert, quant key traced) and one per decode
-    window bucket, zero new compiles on a repeat trace."""
+    (bucket, chunk shape) pair for the chunked prefill (the per-block
+    rounding-seed vector is traced) and one per decode window bucket,
+    zero new compiles on a repeat trace."""
     cfg, params = smoke
     icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
     eng, _ = _run_layout(params, icfg, "paged")
     counts = eng.compile_counts()
     buckets_used = {eng._bucket(len(p)) for p in MIXED_PROMPTS}
-    assert counts["prefill"] == len(buckets_used)
-    assert counts["insert"] == len(buckets_used)
+    assert counts["suffix_prefill"] == len(buckets_used)
     m = eng.metrics()
     assert counts["serve_step"] <= 4
     assert m.decode_steps > counts["serve_step"]
@@ -691,11 +693,12 @@ def test_prefix_sharing_page_recycling_of_formerly_shared_block(smoke):
 @pytest.mark.parametrize("dtype", ["same", "int8"])
 def test_prefix_sharing_partial_hit_shares_leading_blocks(smoke, dtype):
     """Two same-length prompts agreeing on their first block (but not the
-    second) share exactly that block: the sharer still prefills (no full
-    hit) but maps the resident page — its table row aliases the
-    original's at block 0 and diverges at block 1 — and decode stays
+    second) share exactly that block: the sharer prefills ONLY its suffix
+    (no full hit, but a partial hit that skips the matched block's
+    tokens) and maps the resident page — its table row aliases the
+    original's at block 0 and diverges at block 1 — with decode
     byte-identical to sharing-off.  Works for int8 pools because block
-    seeds are content-derived, so the sharer's own insert would have
+    seeds are content-derived, so the sharer's own prefill would have
     written the identical codes it is instead aliasing."""
     cfg, params = smoke
     if dtype == "int8":
@@ -712,7 +715,12 @@ def test_prefix_sharing_partial_hit_shares_leading_blocks(smoke, dtype):
             ),
         )
         rids = [eng.submit(a, 6), eng.submit(b, 6)]
-        eng.tick()
+        # chunked prefill interleaves: tick until both jobs published
+        # their table rows (request b's job runs a tick after a's)
+        while not all(
+            r.state is RequestState.DECODE for r in eng.sched.all_requests()
+        ):
+            eng.tick()
         tables = eng._table.copy()
         outs = eng.run()
         return eng, tables, [outs[r] for r in rids]
@@ -720,7 +728,13 @@ def test_prefix_sharing_partial_hit_shares_leading_blocks(smoke, dtype):
     eng_on, t_on, out_on = drive(True)
     _, t_off, out_off = drive(False)
     assert out_on == out_off
-    assert eng_on.metrics().prefix_hits == 0  # partial ≠ full hit
+    m = eng_on.metrics()
+    assert m.prefix_hits == 0           # partial ≠ full hit
+    assert m.prefix_partial_hits == 1   # request b mapped block 0
+    # the attention-only smoke family resumes at the full matched depth:
+    # request b computed only its 8-token suffix
+    assert m.prefill_tokens_saved == 8
+    assert m.prefill_tokens == 16 + 8
     assert t_on[0, 0] == t_on[1, 0], "leading block not shared"
     assert t_on[0, 1] != t_on[1, 1], "diverging block wrongly shared"
     assert t_off[0, 0] != t_off[1, 0]
@@ -757,10 +771,9 @@ def test_prefix_sharing_recompile_guard(smoke):
     eng, _ = _run_sharing(params, cfg, True, kw)
     counts = eng.compile_counts()
     buckets_used = {eng._bucket(len(p)) for p in SHARED_PROMPTS}
-    assert counts["prefill"] == len(buckets_used)
-    assert counts["insert"] == len(buckets_used)
+    assert counts["suffix_prefill"] == len(buckets_used)
     assert counts["serve_step"] <= 4
-    assert counts["state_insert"] == 1  # one full hit or more, one compile
+    assert counts["state_insert"] == 1  # bucket-independent, one compile
     assert counts["page_copy"] == 1     # at least one fork, one compile
     assert counts["sample0"] == 1
     for p, b in zip(SHARED_PROMPTS, SHARED_BUDGETS):
@@ -847,6 +860,253 @@ def test_prefix_sharing_random_trace_equivalence(smoke):
             return [outs[r] for r in rids]
 
         assert drive(True) == drive(False), f"trace seed {seed} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Suffix-only prefill + chunked, interleaved prefill scheduling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_partial_sharing_byte_identity(arch):
+    """Acceptance contract for suffix-only prefill: a trace of prompts
+    sharing a long common prefix (but NOT full prompts) decodes
+    byte-identically with sharing on vs off, while sharing-on computes
+    only the suffixes.  ``prefill_chunk=8`` gives the hybrid family a
+    chunk grid whose boundary states are stashed, so recurrent-state
+    models get suffix resumes too — not just the attention-only family."""
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    head = list(range(1, 17))  # 16 shared real tokens
+    prompts = [
+        head + [30 + i] * 8 for i in range(3)  # 24 tokens, bucket 32
+    ]
+
+    def drive(share):
+        eng = ServingEngine(
+            params, cfg,
+            ServeConfig(
+                max_batch=3, max_new_tokens=6, max_len=64, kv_block_size=8,
+                prefill_chunk=8, enable_prefix_sharing=share,
+            ),
+        )
+        rids = [eng.submit(p, 6) for p in prompts]
+        outs = eng.run()
+        return eng, [outs[r] for r in rids]
+
+    eng_on, out_on = drive(True)
+    eng_off, out_off = drive(False)
+    assert out_on == out_off
+    m_on, m_off = eng_on.metrics(), eng_off.metrics()
+    assert m_off.prefix_partial_hits == 0
+    assert m_off.prefill_tokens_saved == 0
+    # padded prompts agree on 8 pad + 16 head = 24 tokens = 3 blocks; the
+    # two repeats each resume at 24 (a chunk boundary, so the hybrid
+    # family's stored state snapshot is used)
+    assert m_on.prefix_partial_hits == 2
+    assert m_on.prefill_tokens_saved == 2 * 24
+    assert m_on.prefill_tokens == m_off.prefill_tokens - 2 * 24
+    assert m_on.prefix_hits == 0  # no full hits in this trace
+
+
+def test_chunked_prefill_interleaves_with_decode(smoke):
+    """A long prompt's prefill spreads over multiple ticks (one chunk per
+    tick) while an in-flight request keeps emitting a token EVERY tick —
+    the TTFT-jitter bound chunking exists for.  Token streams stay
+    byte-identical to the unchunked engine."""
+    cfg, params = smoke
+
+    def drive(chunk):
+        eng = ServingEngine(
+            params, cfg,
+            ServeConfig(
+                max_batch=2, max_new_tokens=10, max_len=64,
+                kv_block_size=8, prefill_chunk=chunk,
+            ),
+        )
+        # disjoint token ranges: no padded block of r1 can match r0's
+        r0 = eng.submit([50, 51, 52], 10)
+        eng.tick()  # r0 prefills (one 8-token bucket = one chunk), decodes
+        r1 = eng.submit(list(range(1, 28)), 4)  # bucket 32 -> 4 chunks
+        decode_ticks = 0
+        while eng.sched.request(r1).state is not RequestState.DECODE:
+            before = len(eng.sched.request(r0).output)
+            eng.tick()
+            decode_ticks += len(eng.sched.request(r0).output) - before
+        outs = eng.run()
+        return decode_ticks, [outs[r] for r in (r0, r1)]
+
+    ticks_chunked, outs_chunked = drive(8)
+    ticks_mono, outs_mono = drive(0)
+    assert outs_chunked == outs_mono
+    # r1's prefill took 4 ticks (4 chunks); r0 decoded through every one
+    assert ticks_chunked >= 4
+    assert ticks_mono <= 2
+
+
+def test_chunked_prefill_recompile_guard(smoke):
+    """Chunked prefill compiles once per (bucket, chunk shape) pair — the
+    start position, page ids, slot and seeds are traced — and a repeat
+    trace (including the partial-hit suffix shapes) compiles nothing."""
+    cfg, params = smoke
+    eng = ServingEngine(
+        params, cfg,
+        ServeConfig(
+            max_batch=2, max_new_tokens=4, max_len=64, kv_block_size=8,
+            prefill_chunk=16,
+        ),
+    )
+
+    def trace():
+        rids = [
+            # long budget: still resident when the third request arrives
+            eng.submit(list(range(1, 25)), 16),  # bucket 32: 16+16 chunks
+            eng.submit(list(range(1, 7)), 4),    # bucket 8: one 8 chunk
+            # shares 3 padded blocks with the first prompt (8 pad + 16
+            # head); admitted into the second slot after the short
+            # request evicts, while the first is still decoding
+            eng.submit(list(range(1, 17)) + [40] * 8, 4),
+        ]
+        eng.run()
+        return rids
+
+    trace()
+    counts = eng.compile_counts()
+    # three (bucket, chunk-shape) pairs: bucket-32 cold runs as two
+    # 16-token chunks (ONE compile), bucket 8 as one whole-bucket chunk,
+    # and the partial hit (24 matched tokens: 8 pad + 16 head = 3 blocks)
+    # resumes mid-grid with an 8-token tail chunk [24, 32)
+    assert counts["suffix_prefill"] == 3, counts
+    m = eng.metrics()
+    assert m.prefix_partial_hits == 1
+    assert m.prefill_tokens_saved == 24
+    trace()
+    assert eng.compile_counts() == counts, "repeat trace recompiled"
+
+
+def test_prefill_chunk_validation_is_loud(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(
+            params, cfg, ServeConfig(kv_block_size=8, prefill_chunk=12)
+        )
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(params, cfg, ServeConfig(prefill_chunk=-8))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(
+            params, cfg, ServeConfig(kv_layout="dense", prefill_chunk=16)
+        )
+
+
+def test_demoted_full_hit_does_not_corrupt_registrant(smoke):
+    """Regression: a full-hit job that loses its stored payload while
+    queued (the registrant's first decode write in-place-diverges the
+    partial boundary block, deregistering it) demotes to a boundary-block
+    recompute — which must COW-fork the now-diverged shared page onto the
+    job's reserved spare instead of rewriting it in place, or the
+    registrant's live decode K/V rows get zeroed and its token stream
+    silently diverges from the sharing-off engine.
+
+    The trace forces the window: R1 (unaligned 12-token bucket) admits
+    and completes first; M occupies the one compute chunk of the next
+    tick so R2 (identical to R1, full hit stashed with no payload yet)
+    waits in the FIFO while R1's decode kills the terminal index entry."""
+    cfg, params = smoke
+    kw = dict(
+        max_batch=3, max_new_tokens=8, max_len=64, kv_block_size=8,
+        prefill_buckets=(12, 16),
+    )
+    prompts = [
+        list(range(1, 13)),    # R1: bucket 12, partial boundary block
+        list(range(20, 36)),   # M: bucket 16, blocks the compute slot
+        list(range(1, 13)),    # R2: full match on R1, demotes later
+    ]
+
+    def drive(share):
+        eng = ServingEngine(
+            params, cfg,
+            ServeConfig(**kw, enable_prefix_sharing=share),
+        )
+        rids = [eng.submit(p, 8) for p in prompts]
+        outs = eng.run()
+        return eng, [outs[r] for r in rids]
+
+    eng_on, out_on = drive(True)
+    _, out_off = drive(False)
+    assert out_on == out_off
+    m = eng_on.metrics()
+    assert m.prefix_partial_hits >= 1  # the demotion actually fired
+    assert m.cow_forks >= 1            # ...and forked, not rewrote
+    assert eng_on.blocks.available == eng_on.blocks.capacity
+
+
+def test_full_hit_on_boundary_snapshot_demotes_not_crashes(smoke):
+    """Regression: a short prompt that IS the shared prefix of a longer
+    in-flight prompt full-matches blocks whose terminal hash carries only
+    the longer prompt's logits-less chunk-boundary snapshot.  The engine
+    must demote that job to a suffix recompute (never feed None logits to
+    the sampler) and republish terminal logits on the hash, so a LATER
+    identical short prompt full-hits properly — with every token stream
+    byte-identical to sharing-off."""
+    cfg, params = smoke
+    kw = dict(
+        max_batch=3, max_new_tokens=6, max_len=64, kv_block_size=8,
+        prefill_buckets=(16, 32), prefill_chunk=16,
+    )
+
+    def drive(share):
+        eng = ServingEngine(
+            params, cfg, ServeConfig(**kw, enable_prefix_sharing=share)
+        )
+        a = eng.submit(list(range(1, 25)), 6)  # bucket 32: [0]*8 + 1..24
+        eng.tick()  # A's first chunk [0, 16) stashes (None, state)
+        # B's padded prompt ([0]*8 + 1..8) == A's first 16 padded tokens:
+        # B full-matches A's blocks but the terminal payload has no logits
+        b = eng.submit(list(range(1, 9)), 6)
+        c = eng.submit(list(range(1, 9)), 6)  # repeat of B
+        outs = eng.run()
+        return eng, [outs[r] for r in (a, b, c)]
+
+    eng_on, out_on = drive(True)
+    _, out_off = drive(False)
+    assert out_on == out_off
+    m = eng_on.metrics()
+    assert m.prefix_partial_hits >= 1  # B demoted to a suffix recompute
+    assert m.prefix_hits >= 1          # C full-hit on B's republished logits
+
+
+def test_admission_gate_refusal_has_no_side_effects(smoke):
+    """Directed regression for the admission-gate audit: a gate that
+    REFUSES (pool exhausted) must leave the allocator bit-for-bit
+    untouched — no refcount bump on the probed/matched pages, no index
+    mutation — even when the refused request had a partial prefix match.
+    A True gate bumps exactly the pages it maps (its owned list)."""
+    from repro.serving.scheduler import prefix_block_hashes
+
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=2, max_new_tokens=8, max_len=64, kv_block_size=8,
+        num_kv_blocks=6,  # capacity 5: the first request takes 3
+    )
+    eng = ServingEngine(params, cfg, sc)
+    head = list(range(1, 17))  # bucket 16, block-aligned: 2 prompt blocks
+    r1 = eng.submit(head, 8)   # + 8 budget tokens -> 3 blocks
+    eng.tick()                 # admitted, prefilled, decoding
+    hashes = [h for h, _ in prefix_block_hashes(head, 8)]
+    matched = eng.blocks.longest_prefix_match(hashes)
+    assert len(matched) == 2   # r1's prompt blocks are resident
+    refs_before = {p: eng.blocks.refcount(p) for p in matched}
+    index_before = eng.blocks.registered_pages()
+    # same head, bigger budget: matches both prompt blocks but needs 3
+    # fresh decode pages when only 2 remain -> the gate must refuse
+    # without touching anything
+    r2 = eng.submit(head, 24)
+    eng.tick()
+    assert eng.sched.request(r2).state is RequestState.QUEUED
+    assert {p: eng.blocks.refcount(p) for p in matched} == refs_before
+    assert eng.blocks.registered_pages() == index_before
+    outs = eng.run()  # r1 evicts -> r2 admits and completes
+    assert sorted(outs) == [r1, r2]
 
 
 # ---------------------------------------------------------------------------

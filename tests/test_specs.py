@@ -142,40 +142,106 @@ def test_paged_cache_hybrid_keeps_dense_state_leaves():
     assert specs["k_pages"].shape[2] == P  # pool axis, not slots
 
 
-def test_paged_insert_writes_only_the_tabled_pages():
-    """Prefill K/V land in exactly the pages named by the table row; pos
-    updates at the slot; untouched pages stay zero."""
-    cfg = get_smoke_config("stablelm-3b")
+def _suffix_prefill_fixture(cfg):
+    """(params, paged cache, zero state, jitted chunk fn) for one arch."""
+    from repro.models import get_model_fns
+
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
     cache = SP.init_paged_decode_cache(cfg, B, P, BS)
-    lpad = 2 * BS  # a 2-block prefill window
-    one = jax.tree.map(
-        lambda l: jnp.full_like(l, 7), SP.init_decode_cache(cfg, 1, lpad)
+    state = SP.init_prefill_state(cfg)
+    fn = jax.jit(
+        SP.make_paged_suffix_prefill(cfg), static_argnames=("bucket",)
     )
-    row = np.zeros((4,), np.int32)
-    row[:2] = [3, 5]
-    insert = jax.jit(SP.make_paged_cache_insert(cfg))
-    out = insert(cache, one, 2, jnp.asarray(row))
-    kp = np.asarray(out["k_pages"], np.float32)
-    np.testing.assert_array_equal(kp[:, :, [3, 5]], 7)
-    untouched = [p for p in range(P) if p not in (3, 5)]
-    np.testing.assert_array_equal(kp[:, :, untouched], 0)
-    pos = np.asarray(out["pos"])
-    assert pos[2] == 7 and (pos[[0, 1, 3]] == 0).all()
+    return params, cache, state, fn
 
 
-def test_paged_insert_slot_and_pages_are_traced():
-    """One compile serves every (slot, page set) — refills must not
-    specialize on which pages the allocator handed out."""
+def test_suffix_prefill_writes_only_covered_pages():
+    """A chunk's K/V land in exactly the pages its blocks cover; pages of
+    other blocks (and every per-slot batch-cache leaf) stay untouched;
+    the returned state carries the advanced position."""
     cfg = get_smoke_config("stablelm-3b")
-    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
-    one = SP.init_decode_cache(cfg, 1, BS)
-    insert = jax.jit(SP.make_paged_cache_insert(cfg))
-    for slot in range(B):
-        row = np.full((4,), 0, np.int32)
-        row[0] = slot + 1
-        insert(cache, one, slot, jnp.asarray(row))
-    ntraces = insert._cache_size()
-    assert ntraces == 1, f"paged insert recompiled {ntraces}x"
+    params, cache, state, fn = _suffix_prefill_fixture(cfg)
+    bucket = 2 * BS
+    toks = jnp.arange(1, bucket + 1, dtype=jnp.int32)[None]
+    row = jnp.asarray([3, 5], jnp.int32)
+    # first chunk covers block 0 only -> page 3 written, page 5 not yet
+    out, st1, _ = fn(
+        params, cache, state, toks[:, :BS], row,
+        jnp.asarray(0, jnp.int32), bucket=bucket,
+    )
+    kp = np.asarray(out["k_pages"], np.float32)
+    assert np.abs(kp[:, :, 3]).sum() > 0
+    untouched = [p for p in range(P) if p != 3]
+    np.testing.assert_array_equal(kp[:, :, untouched], 0)
+    assert np.asarray(st1["pos"])[0] == BS
+    # the batch cache's per-slot leaves ride along untouched: a prefill
+    # in flight can never be corrupted by interleaved decode steps
+    np.testing.assert_array_equal(np.asarray(out["pos"]), 0)
+    # second chunk resumes at q0=BS and fills page 5
+    out2, st2, logits = fn(
+        params, out, st1, toks[:, BS:], row,
+        jnp.asarray(BS, jnp.int32), bucket=bucket,
+    )
+    kp2 = np.asarray(out2["k_pages"], np.float32)
+    assert np.abs(kp2[:, :, 5]).sum() > 0
+    np.testing.assert_array_equal(
+        kp2[:, :, [p for p in range(P) if p not in (3, 5)]], 0
+    )
+    assert np.asarray(st2["pos"])[0] == bucket
+    assert logits.shape == (1, cfg.vocab)
+
+
+def test_suffix_prefill_matches_monolithic_prefill():
+    """THE equivalence anchor: one whole-bucket chunk from zeroed state
+    writes bit-identical K/V to the monolithic lm_prefill and returns
+    bit-identical last-token logits — which is why dense-vs-paged (and
+    sharing-on-vs-off) greedy decode stays byte-identical."""
+    from repro.models import transformer as TF
+
+    for arch in ("stablelm-3b", "recurrentgemma-2b"):
+        cfg = get_smoke_config(arch)
+        params, cache, state, fn = _suffix_prefill_fixture(cfg)
+        bucket = 2 * BS
+        toks = (jnp.arange(bucket, dtype=jnp.int32) % 97 + 1)[None]
+        row = jnp.asarray([4, 2], jnp.int32)
+        out, st, logits = fn(
+            params, cache, state, toks, row,
+            jnp.asarray(0, jnp.int32), bucket=bucket,
+        )
+        ref_cache, ref_logits = TF.lm_prefill(params, toks, cfg, bucket)
+        kb = np.asarray(out["k_pages"])[:, :, [4, 2]]  # (nu,na,2,BS,H,D)
+        ref_k = np.asarray(ref_cache["k"])[:, :, 0].reshape(kb.shape)
+        np.testing.assert_array_equal(kb, ref_k)
+        vb = np.asarray(out["v_pages"])[:, :, [4, 2]]
+        ref_v = np.asarray(ref_cache["v"])[:, :, 0].reshape(vb.shape)
+        np.testing.assert_array_equal(vb, ref_v)
+        np.testing.assert_array_equal(
+            np.asarray(logits), np.asarray(ref_logits)
+        )
+        for name, leaf in st.items():
+            if name == "pos":
+                assert int(np.asarray(leaf)[0]) == bucket
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(leaf), np.asarray(ref_cache[name])
+                )
+
+
+def test_suffix_prefill_start_and_pages_are_traced():
+    """One compile serves every (start position, page set) of a given
+    (bucket, chunk shape) — resume points and allocator page choices must
+    not specialize the trace."""
+    cfg = get_smoke_config("stablelm-3b")
+    params, cache, state, fn = _suffix_prefill_fixture(cfg)
+    bucket = 2 * BS
+    toks = jnp.ones((1, BS), jnp.int32)
+    for q0, row in ((0, [3, 5]), (BS, [3, 5]), (BS, [6, 1]), (0, [2, 4])):
+        cache, state, _ = fn(
+            params, cache, state, toks, jnp.asarray(row, jnp.int32),
+            jnp.asarray(q0, jnp.int32), bucket=bucket,
+        )
+    ntraces = fn._cache_size()
+    assert ntraces == 1, f"suffix prefill recompiled {ntraces}x"
 
 
 @pytest.mark.parametrize("wta", [False, True])
@@ -203,6 +269,30 @@ def test_paged_serve_step_rejects_encdec():
     cfg = get_smoke_config("whisper-small")
     with pytest.raises(ValueError, match="token-LM"):
         SP.make_paged_serve_step(cfg)
+    with pytest.raises(ValueError, match="token-LM"):
+        SP.make_paged_suffix_prefill(cfg)
+
+
+def test_suffix_prefill_shape_contract():
+    """(params, cache, state, tokens, row, q0) -> (cache, state, logits):
+    output cache and state specs must equal the inputs' (cache donation +
+    state threading across chunks rely on it)."""
+    cfg = get_smoke_config("recurrentgemma-2b")
+    ps = SP.params_specs(cfg)
+    cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    ss = jax.eval_shape(lambda: SP.init_prefill_state(cfg))
+    out_cache, out_state, logits = jax.eval_shape(
+        lambda p, c, s, t, r, q: SP.make_paged_suffix_prefill(cfg)(
+            p, c, s, t, r, q, bucket=2 * BS
+        ),
+        ps, cs, ss,
+        jax.ShapeDtypeStruct((1, BS), jnp.int32),
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    assert _tree_specs(out_cache) == _tree_specs(cs)
+    assert _tree_specs(out_state) == _tree_specs(ss)
+    assert logits.shape == (1, cfg.vocab)
 
 
 def test_paged_cache_int8_layout():
@@ -248,78 +338,78 @@ def test_int8_paged_serve_step_shape_contract(wta):
     assert out_tok.shape == (B,)
 
 
-def test_int8_paged_insert_quantizes_into_tabled_pages():
-    """A full-precision one-request prefill cache lands as int8 codes +
-    scales in exactly the tabled pages; untouched pages keep zero codes
-    and unit scales; the dequantized codes reconstruct the source within
-    one scale step (the stochastic-rounding error bound)."""
+def test_int8_suffix_prefill_quantizes_into_covered_pages():
+    """A chunk lands as int8 codes + scales in exactly the pages it
+    covers; untouched pages keep zero codes and unit scales; the first
+    unit's dequantized codes reconstruct the full-precision K the
+    monolithic prefill computes within one scale step (the
+    stochastic-rounding error bound).  Only unit 0 is compared: the
+    chunked int8 prefill attends against the already-quantized pages, so
+    deeper units' K legitimately absorb upstream quantization error —
+    exactly what their decode-time readers see (engine-level agreement is
+    pinned at token level by tests/test_serving.py)."""
+    from repro.models import transformer as TF
+
     cfg = dataclasses.replace(
         get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
     )
     fp_cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
-    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
-    lpad = 2 * BS
-    one = SP.init_decode_cache(fp_cfg, 1, lpad)
-    one["k"] = jax.random.normal(
-        jax.random.PRNGKey(3), one["k"].shape, jnp.float32
+    params, cache, state, fn = _suffix_prefill_fixture(cfg)
+    bucket = 2 * BS
+    toks = (jnp.arange(bucket, dtype=jnp.int32) % 89 + 1)[None]
+    row = jnp.asarray([3, 5], jnp.int32)
+    seeds = jnp.asarray([7, 9], jnp.uint32)  # per-block content seeds
+    out, st, _ = fn(
+        params, cache, state, toks, row,
+        jnp.asarray(0, jnp.int32), seeds, bucket=bucket,
     )
-    one["v"] = jax.random.normal(
-        jax.random.PRNGKey(4), one["v"].shape, jnp.float32
-    )
-    one["pos"] = jnp.full((1,), lpad, jnp.int32)
-    row = np.zeros((4,), np.int32)
-    row[:2] = [3, 5]
-    insert = jax.jit(SP.make_paged_cache_insert(cfg))
-    seeds = jnp.asarray([7, 9], jnp.uint32)  # per-block rounding seeds
-    out = insert(cache, one, 2, jnp.asarray(row), seeds)
     kp = np.asarray(out["k_pages"], np.float32)
     ks = np.asarray(out["k_scale_pages"], np.float32)
     untouched = [p for p in range(P) if p not in (3, 5)]
     np.testing.assert_array_equal(kp[:, :, untouched], 0)
     np.testing.assert_array_equal(ks[:, :, untouched], 1.0)
-    nu, na, _, L, hkv, dh = one["k"].shape
-    src = np.asarray(one["k"], np.float32)[:, :, 0].reshape(
+    ref_cache, _ = TF.lm_prefill(params, toks, fp_cfg, bucket)
+    nu, na, _, L, hkv, dh = ref_cache["k"].shape
+    src = np.asarray(ref_cache["k"], np.float32)[:, :, 0].reshape(
         nu, na, 2, BS, hkv, dh
     )
     deq = kp[:, :, [3, 5]] * ks[:, :, [3, 5], ..., None] / 127.0
     step = ks[:, :, [3, 5], ..., None] / 127.0
-    assert np.all(np.abs(deq - src) <= step + 1e-6)
-    assert np.asarray(out["pos"])[2] == lpad
+    assert np.all(np.abs(deq - src)[0] <= step[0] + 1e-6)
+    # the scale plane is the per-row max |K| of the same unit-0 source
+    sc_ref = np.maximum(np.abs(src).max(-1), 1e-6)
+    np.testing.assert_allclose(
+        ks[:, :, [3, 5]][0], sc_ref[0], rtol=1e-6
+    )
+    assert np.asarray(st["pos"])[0] == bucket
 
 
-def test_int8_paged_insert_seeds_are_content_positional():
-    """The prefix-sharing contract on the quantizer: a block's codes are a
-    function of (block content, block seed) ONLY — not of where the block
-    sits in the prefill window or what the rest of the prompt is.  Two
-    inserts whose windows agree on block 0 (same content, same seed) must
-    write bit-identical codes for it, even though their other blocks
-    differ; the same seed on different content must not."""
+def test_int8_suffix_prefill_seeds_are_content_positional():
+    """The prefix-sharing contract on the quantizer: a block's codes are
+    a function of (block content at position, block seed, layer) ONLY —
+    not of what the rest of the prompt is.  Two prefills agreeing on
+    block 0 (same tokens, same seed) write bit-identical codes for it
+    even though their second blocks differ; the same seed on different
+    content must not."""
     cfg = dataclasses.replace(
         get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
     )
-    fp_cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
-    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
-    lpad = 2 * BS
-    one_a = SP.init_decode_cache(fp_cfg, 1, lpad)
-    kv = jax.random.normal(
-        jax.random.PRNGKey(3), one_a["k"].shape, jnp.float32
+    params, cache, state, fn = _suffix_prefill_fixture(cfg)
+    bucket = 2 * BS
+    toks_a = jnp.concatenate(
+        [jnp.arange(1, BS + 1), jnp.arange(30, 30 + BS)]
+    ).astype(jnp.int32)[None]
+    toks_b = jnp.concatenate(
+        [jnp.arange(1, BS + 1), jnp.arange(60, 60 + BS)]
+    ).astype(jnp.int32)[None]
+    seeds = jnp.asarray([7, 9], jnp.uint32)
+    out_a, _, _ = fn(
+        params, cache, state, toks_a, jnp.asarray([1, 2], jnp.int32),
+        jnp.asarray(0, jnp.int32), seeds, bucket=bucket,
     )
-    one_a["k"] = kv
-    one_a["v"] = kv * 0.5
-    one_b = dict(one_a)
-    # same block 0, different block 1
-    one_b["k"] = kv.at[:, :, :, BS:].add(1.0)
-    one_b["v"] = (kv * 0.5).at[:, :, :, BS:].add(1.0)
-    insert = jax.jit(SP.make_paged_cache_insert(cfg))
-    row_a = np.zeros((4,), np.int32)
-    row_a[:2] = [1, 2]
-    row_b = np.zeros((4,), np.int32)
-    row_b[:2] = [3, 4]
-    out_a = insert(
-        cache, one_a, 0, jnp.asarray(row_a), jnp.asarray([7, 9], jnp.uint32)
-    )
-    out_b = insert(
-        cache, one_b, 1, jnp.asarray(row_b), jnp.asarray([7, 11], jnp.uint32)
+    out_b, _, _ = fn(
+        params, cache, state, toks_b, jnp.asarray([3, 4], jnp.int32),
+        jnp.asarray(0, jnp.int32), seeds, bucket=bucket,
     )
     np.testing.assert_array_equal(
         np.asarray(out_a["k_pages"])[:, :, 1],
@@ -336,26 +426,22 @@ def test_int8_paged_insert_seeds_are_content_positional():
     )
 
 
-def test_int8_paged_insert_slot_pages_and_seeds_are_traced():
-    """One compile serves every (slot, page set, per-block seed vector) —
-    the stochastic-rounding seeds must not trigger per-request
+def test_int8_suffix_prefill_seeds_are_traced():
+    """One compile serves every (page set, start, per-block seed vector)
+    — the stochastic-rounding seeds must not trigger per-request
     recompiles."""
     cfg = dataclasses.replace(
         get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
     )
-    fp_cfg = dataclasses.replace(cfg, kv_cache_dtype="same")
-    cache = SP.init_paged_decode_cache(cfg, B, P, BS)
-    one = SP.init_decode_cache(fp_cfg, 1, BS)
-    insert = jax.jit(SP.make_paged_cache_insert(cfg))
-    for slot in range(B):
-        row = np.full((4,), 0, np.int32)
-        row[0] = slot + 1
-        insert(
-            cache, one, slot, jnp.asarray(row),
-            jnp.asarray([slot * 13 + 1], jnp.uint32),
+    params, cache, state, fn = _suffix_prefill_fixture(cfg)
+    for i in range(3):
+        cache, state, _ = fn(
+            params, cache, state, jnp.ones((1, BS), jnp.int32),
+            jnp.asarray([i + 1], jnp.int32), jnp.asarray(0, jnp.int32),
+            jnp.asarray([i * 13 + 1], jnp.uint32), bucket=BS,
         )
-    ntraces = insert._cache_size()
-    assert ntraces == 1, f"int8 paged insert recompiled {ntraces}x"
+    ntraces = fn._cache_size()
+    assert ntraces == 1, f"int8 suffix prefill recompiled {ntraces}x"
 
 
 # ---------------------------------------------------------------------------
