@@ -27,7 +27,12 @@ and mean slot occupancy.  The headline system-level claims:
   workload): prefill computations saved via content-hash block reuse,
   admission capacity at an equal num_kv_blocks budget, and a standing
   byte-identity check between the sharing-on and sharing-off token
-  streams (validate_report fails the run on divergence).
+  streams (validate_report fails the run on divergence);
+* sharded paged decode over the local (data, model) host mesh: token
+  identity vs the single-device engine and admission capacity scaling
+  with the data axis at constant per-device pool memory (run under
+  XLA_FLAGS=--xla_force_host_platform_device_count=N for a real
+  multi-device mesh; degrades to a 1x1 mesh identity check otherwise).
 
 Results (tokens/s, TTFT, decode-step ms, occupancy for every engine) are
 also written to a JSON file for CI artifact tracking.
@@ -66,6 +71,7 @@ REPORT_SCHEMA = {
     "int8_capacity_sweep": dict,
     "prefix_sharing": dict,
     "partial_prefix": dict,
+    "sharded_decode": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -85,6 +91,11 @@ _PARTIAL_KEYS = {
     "n_requests", "prompt_len", "shared_prefix_len", "prefill_chunk",
     "off", "on", "prefill_token_reduction", "late_ttft_ratio",
     "tokens_match",
+}
+_SHARDED_KEYS = {
+    "mesh", "devices", "single", "sharded", "tokens_match",
+    "per_device_kv_blocks", "admitted_single", "admitted_sharded",
+    "capacity_ratio",
 }
 
 
@@ -133,6 +144,15 @@ def validate_report(report: dict) -> None:
         raise ValueError(
             "partial_prefix: prefill-token reduction "
             f"{report['partial_prefix']['prefill_token_reduction']} < 3.0"
+        )
+    missing = _SHARDED_KEYS - set(report["sharded_decode"])
+    if missing:
+        raise ValueError(
+            f"sharded_decode missing keys {sorted(missing)}"
+        )
+    if report["sharded_decode"]["tokens_match"] is not True:
+        raise ValueError(
+            "sharded_decode: mesh-sharded vs single-device decode diverged"
         )
 
 
@@ -518,6 +538,86 @@ def bench_int8_capacity(cfg, params, num_kv_blocks: int = 9) -> dict:
     return out
 
 
+def bench_sharded_decode(cfg, params, n_req: int = 8) -> dict:
+    """Sharded paged decode over the local ``(data, model)`` host mesh.
+
+    All local devices go to the data axis (``model=1``: data-axis
+    sharding preserves every reduction order, so the token-identity
+    check is exact, not tie-lucky).  Two end-to-end claims:
+
+    * safety — the same arrival trace through the unsharded engine and
+      the mesh-sharded engine must produce IDENTICAL token streams
+      (``tokens_match``; validate_report fails the run on divergence);
+    * capacity — at a FIXED per-device block budget the sharded pool's
+      page axis spreads over data, so total admission capacity scales
+      with the data axis at constant per-device memory.  Measured
+      through the admission gate like the int8 sweep: requests admitted
+      on the first tick at ``num_kv_blocks = per_device · data``.
+
+    On a single-device host (no ``--xla_force_host_platform_device_count``)
+    this degrades to a 1×1 mesh: the identity check still runs (and is
+    the byte-identity contract), the capacity ratio is 1.0.
+    """
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(model=1)  # every local device on the data axis
+    data, model = (int(s) for s in mesh.devices.shape)
+    serve = dict(
+        max_batch=4, max_new_tokens=8, max_len=64,
+        kv_layout="paged", kv_block_size=8,
+    )
+    out: dict = {"mesh": {"data": data, "model": model},
+                 "devices": data * model}
+
+    trace = make_trace(
+        seed=3, n_req=n_req, mean_gap_ticks=1.0,
+        prompt_len_range=(2, 12), new_tokens_range=(3, 9), vocab=cfg.vocab,
+    )
+    streams = {}
+    for label, m in (("single", None), ("sharded", mesh)):
+        eng = ServingEngine(params, cfg, ServeConfig(**serve, mesh=m))
+        drive_continuous(eng, trace)
+        streams[label] = {
+            r.rid: r.output for r in eng.sched.all_requests()
+            if r.state is RequestState.DONE
+        }
+        met = eng.metrics()
+        out[label] = {
+            "tokens_per_s": round(met.tokens_per_s, 1),
+            "decode_step_ms": round(met.decode_step_ms, 3),
+            "completed": met.completed,
+        }
+    out["tokens_match"] = streams["single"] == streams["sharded"]
+
+    # admission capacity at a fixed PER-DEVICE budget: the sharded pool
+    # holds per_device·data pages at the same bytes per device
+    per_device = 8
+    out["per_device_kv_blocks"] = per_device
+    prompt = [1, 2, 3]  # bucket 8 + budget 8 -> 2 blocks per request
+    for label, m, blocks in (
+        ("admitted_single", None, per_device),
+        ("admitted_sharded", mesh, per_device * data),
+    ):
+        eng = ServingEngine(
+            params, cfg,
+            ServeConfig(
+                **dict(serve, max_batch=32), num_kv_blocks=blocks,
+                enable_prefix_sharing=False, mesh=m,
+            ),
+        )
+        for _ in range(32):
+            eng.submit(prompt, 8)
+        eng.tick()
+        out[label] = sum(
+            1 for r in eng.sched.all_requests()
+            if r.state is not RequestState.QUEUED
+        )
+    out["capacity_ratio"] = round(
+        out["admitted_sharded"] / max(out["admitted_single"], 1), 2
+    )
+    return out
+
+
 def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     base = get_smoke_config("stablelm-3b")
     if dry_run:
@@ -668,6 +768,22 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"match={par['tokens_match']}",
         )
     )
+    # sharded paged decode over the local host mesh: token identity vs the
+    # single-device engine + admission capacity scaling with the data axis
+    shd = bench_sharded_decode(
+        pvd_cfg, pvd_params, n_req=6 if dry_run else 8
+    )
+    report["sharded_decode"] = shd
+    rows.append(
+        (
+            "serve_sharded_decode",
+            0.0,
+            f"mesh=({shd['mesh']['data']},{shd['mesh']['model']}) "
+            f"admitted={shd['admitted_single']}->{shd['admitted_sharded']} "
+            f"capacity={shd['capacity_ratio']:.2f}x "
+            f"match={shd['tokens_match']}",
+        )
+    )
     return rows, report
 
 
@@ -681,7 +797,17 @@ def main() -> None:
         "--out", default="BENCH_serving.json",
         help="where to write the machine-readable report",
     )
+    ap.add_argument(
+        "--validate", metavar="PATH",
+        help="validate an existing report against the published schema "
+             "and exit (the CI artifact check)",
+    )
     args = ap.parse_args()
+    if args.validate:
+        with open(args.validate) as f:
+            validate_report(json.load(f))
+        print(f"{args.validate}: schema OK")
+        return
     rows, report = run(dry_run=args.dry_run)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

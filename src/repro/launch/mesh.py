@@ -20,8 +20,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Degenerate mesh over the locally available devices (tests/examples)."""
+def make_host_mesh(model: int = 1, data: int | None = None):
+    """``(data, model)`` mesh over locally available devices.
+
+    The serving mesh for tests, benches, and CPU multi-device runs
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  With
+    ``data=None`` every local device not consumed by ``model`` goes to
+    the data axis; pass ``data`` explicitly to use a subset (e.g. a 1×1
+    mesh on a multi-device host for byte-identity checks).
+    """
     n = len(jax.devices())
-    assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"model axis {model} does not divide the {n} local devices"
+        )
+    if data is None:
+        data = n // model
+    if data < 1 or data * model > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {data * model} devices, "
+            f"have {n}"
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        devices=jax.devices()[: data * model],
+    )

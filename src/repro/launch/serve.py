@@ -53,6 +53,14 @@ def main() -> None:
                          "(paged layout; 0 = whole bucket at once); also "
                          "the partial-prefix resume grid for "
                          "recurrent/SSM families")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the paged pool + decode step over a "
+                         "(data, model) mesh of the local devices (use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+                         " for a multi-device CPU mesh)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-axis size of the serving mesh (--sharded); "
+                         "remaining devices go to the data axis")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -70,6 +78,13 @@ def main() -> None:
             params = state  # params-only checkpoints
             print(f"loaded checkpoint step {step}")
 
+    mesh = None
+    if args.sharded:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(model=args.mesh_model)
+        print(f"serving mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
     engine_cls = StaticServingEngine if args.static else ServingEngine
     eng = engine_cls(
         params, cfg,
@@ -84,6 +99,7 @@ def main() -> None:
             # passed through verbatim: ServeConfig.validate raises loudly
             # on --kv-layout dense + --prefill-chunk (paged-only knob)
             prefill_chunk=args.prefill_chunk,
+            mesh=mesh,
         ),
     )
     rng = jax.random.PRNGKey(7)

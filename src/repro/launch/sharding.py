@@ -8,6 +8,10 @@ Policy summary (baseline — hillclimbed variants in EXPERIMENTS.md §Perf):
     over "data" (ZeRO-3); optimizer moments inherit parameter shardings
   * decode KV caches → batch over data; kv_heads over "model" when
     divisible, else the cache *sequence* dim over "model"
+  * paged KV pools → the page axis over "data" (pooled capacity scales
+    with the data axis at constant per-device memory), kv_heads over
+    "model"; scale planes follow their code pages; per-slot state leaves
+    keep the dense batch→data rules
 Every rule is divisibility-guarded: a mesh axis that does not divide the
 dimension is dropped (replicated) rather than relying on GSPMD padding.
 """
@@ -181,9 +185,26 @@ def batch_shardings(batch_sds: dict, mesh: Mesh, batch_size: int) -> dict:
     return out
 
 
-def cache_shardings(
+def cache_partition_specs(
     cache_sds: dict, mesh: Mesh, cfg: ModelConfig, batch_size: int
 ) -> dict:
+    """PartitionSpec per decode-cache leaf (dense AND paged layouts).
+
+    ``mesh`` only needs ``axis_names`` + ``devices.shape`` (a fake mesh
+    works), so the name rules are testable without real devices;
+    :func:`cache_shardings` wraps the specs in ``NamedSharding``.
+
+    Dense leaves shard batch over data and kv_heads over "model" (seq
+    over "model" as the non-divisible fallback).  Paged-pool leaves
+    (``k_pages``/``v_pages``/``k_scale_pages``/``v_scale_pages``,
+    shaped ``(nu, n_attn, n_pages, block, Hkv[, Dh])``) shard the PAGE
+    axis over "data" — pool capacity grows with the data axis at
+    constant per-device memory, which is the serving mesh's scaling
+    story — and ``kv_heads`` over "model", each independently guarded:
+    a non-divisible dimension replicates instead of padding.  The block
+    table stays host-global, so any slot may read any page; GSPMD
+    inserts the cross-shard gathers.
+    """
     sizes = mesh_axis_sizes(mesh)
     m = sizes.get("model", 1)
     bax = batch_axes(mesh, batch_size)
@@ -207,6 +228,20 @@ def cache_shardings(
         nd = len(v.shape)
         if k == "pos":
             spec = P(bax)
+        elif k in ("k_pages", "v_pages"):
+            # (nu, n_attn, n_pages, block, Hkv, Dh): pages over data,
+            # kv_heads over model (replicated when not divisible)
+            spec = _guard(
+                [None, None, "data", None, "model" if kv_div else None,
+                 None],
+                v.shape,
+            )
+        elif k in ("k_scale_pages", "v_scale_pages"):
+            # (nu, n_attn, n_pages, block, Hkv): follow the code pages
+            spec = _guard(
+                [None, None, "data", None, "model" if kv_div else None],
+                v.shape,
+            )
         elif k in ("k", "v", "ck", "cv"):
             # (..., B, S, Hkv, Dh) with 1-2 leading stack axes
             lead = nd - 4
@@ -241,6 +276,20 @@ def cache_shardings(
             w = v.shape[-1]
             spec = P(None, None, bax, "model" if w % m == 0 else None)
         else:
+            # quant_step (scalar) and any future bookkeeping leaves
             spec = P(*([None] * nd))
-        out[k] = NamedSharding(mesh, spec)
+        out[k] = spec
     return out
+
+
+def cache_shardings(
+    cache_sds: dict, mesh: Mesh, cfg: ModelConfig, batch_size: int
+) -> dict:
+    """NamedSharding per decode-cache leaf; see :func:`cache_partition_specs`
+    for the name rules (this wrapper needs a real device mesh)."""
+    return {
+        k: NamedSharding(mesh, spec)
+        for k, spec in cache_partition_specs(
+            cache_sds, mesh, cfg, batch_size
+        ).items()
+    }

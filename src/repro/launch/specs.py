@@ -229,6 +229,130 @@ def make_page_copy(cfg: ModelConfig):
     return copy
 
 
+def paged_cache_shardings(
+    cfg: ModelConfig, mesh, batch: int, n_pages: int, block_size: int
+) -> dict:
+    """NamedSharding per paged-cache leaf under ``mesh`` (page axis over
+    "data", kv_heads over "model", per-slot leaves batch over "data" —
+    every rule divisibility-guarded; see sharding.cache_partition_specs)."""
+    from repro.launch import sharding as SH
+
+    sds = paged_decode_cache_specs(cfg, batch, n_pages, block_size)
+    return SH.cache_shardings(sds, mesh, cfg, batch)
+
+
+def make_sharded_paged_entry_points(
+    cfg: ModelConfig, mesh, *, batch: int, n_pages: int, block_size: int
+) -> dict:
+    """The paged serving entry points, jitted mesh-aware.
+
+    Each of the four device entry points the paged engine drives —
+    :func:`make_paged_serve_step`, :func:`make_paged_suffix_prefill`,
+    :func:`make_paged_state_insert`, :func:`make_page_copy` — gains
+    ``in_shardings``/``out_shardings`` (``jax.jit`` + ``NamedSharding``)
+    over a ``(data, model)`` mesh:
+
+      * the paged pool shards its PAGE axis over ``data`` and ``kv_heads``
+        over ``model`` (divisibility-guarded — a non-divisible dim
+        replicates), so pool capacity scales with the data axis at
+        constant per-device memory;
+      * per-slot decode inputs — block table ``(B, W)``, tokens ``(B,)``,
+        per-slot keys ``(B, 2)``, step counters ``(B,)`` — shard their
+        slot axis over ``data`` (guarded on ``B``);
+      * params are REPLICATED across the serving mesh: decode is
+        memory-bound on the KV pool, and replicated weights keep every
+        reduction order identical to the single-device engine (the
+        byte-identity contract on a 1×1 mesh, token identity on wider
+        meshes);
+      * B=1 prefill-side arguments (suffix-chunk tokens, threaded state,
+        table row, q0, quant seeds) and the chunk logits are replicated —
+        one request's chunk is not worth sharding.
+
+    The block table, ``BlockAllocator``, and the content-hash prefix
+    index stay HOST-GLOBAL: any slot may map any page, so prefix sharing
+    and copy-on-write work across shards unchanged; GSPMD inserts the
+    cross-shard page gathers.
+
+    Donation and compile discipline match the unsharded entry points
+    (cache donated everywhere; ``bucket`` the only static argument of the
+    suffix prefill), so the engine's recompile guards hold verbatim.
+
+    Returns ``{"serve_step", "suffix_prefill", "state_insert",
+    "page_copy", "shardings"}`` where ``shardings`` maps
+    ``params/cache/table/slot_vec/slot_keys/replicated`` to the
+    NamedShardings used — the engine places its host→device transfers
+    (``jax.device_put``) with exactly these.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch import sharding as SH
+
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+    cache_sh = paged_cache_shardings(cfg, mesh, batch, n_pages, block_size)
+    rep = NamedSharding(mesh, PartitionSpec())
+    params_sh = jax.tree_util.tree_map(lambda _: rep, params_specs(cfg))
+    bax = SH.batch_axes(mesh, batch)
+    vec_sh = NamedSharding(mesh, PartitionSpec(bax))
+    mat_sh = NamedSharding(mesh, PartitionSpec(bax, None))
+    serve_step = jax.jit(
+        make_paged_serve_step(cfg),
+        donate_argnums=(1,),
+        in_shardings=(params_sh, cache_sh, mat_sh, vec_sh, mat_sh, vec_sh),
+        out_shardings=(cache_sh, vec_sh),
+    )
+    # (params, cache, state, tokens, table_row, q0[, quant_seeds])
+    prefill_in = [params_sh, cache_sh, rep, rep, rep, rep]
+    if cfg.kv_cache_dtype == "int8":
+        prefill_in.append(rep)
+    # pjit rejects kwargs once in_shardings is given, so the static
+    # ``bucket`` rides as the LAST positional arg here; the thin kwarg
+    # shim below keeps the engine's ``(*args, bucket=...)`` call site
+    # layout-agnostic.  in_shardings covers only the dynamic args.
+    base_prefill = make_paged_suffix_prefill(cfg)
+
+    def _prefill_pos(*args):
+        return base_prefill(*args[:-1], bucket=args[-1])
+
+    prefill_jit = jax.jit(
+        _prefill_pos,
+        static_argnums=(len(prefill_in),),
+        donate_argnums=(1,),
+        in_shardings=tuple(prefill_in),
+        out_shardings=(cache_sh, rep, rep),
+    )
+
+    def suffix_prefill(*args, bucket):
+        return prefill_jit(*args, bucket)
+
+    suffix_prefill._cache_size = prefill_jit._cache_size
+    state_insert = jax.jit(
+        make_paged_state_insert(cfg),
+        donate_argnums=(0,),
+        in_shardings=(cache_sh, rep, rep),
+        out_shardings=cache_sh,
+    )
+    page_copy = jax.jit(
+        make_page_copy(cfg),
+        donate_argnums=(0,),
+        in_shardings=(cache_sh, rep, rep),
+        out_shardings=cache_sh,
+    )
+    return {
+        "serve_step": serve_step,
+        "suffix_prefill": suffix_prefill,
+        "state_insert": state_insert,
+        "page_copy": page_copy,
+        "shardings": {
+            "params": params_sh,
+            "cache": cache_sh,
+            "table": mat_sh,
+            "slot_vec": vec_sh,
+            "slot_keys": mat_sh,
+            "replicated": rep,
+        },
+    }
+
+
 def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):
     """Next-token selection shared by prefill and decode steps.
 

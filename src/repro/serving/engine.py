@@ -69,7 +69,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +132,17 @@ class ServeConfig:
     # prefix index), so smaller chunks = finer-grained prefix reuse for
     # stateful models, at more (bucket, chunk) compile pairs.
     prefill_chunk: int = 0
+    # paged layout only: a jax.sharding.Mesh with ("data", "model") axes.
+    # When set, the paged pool shards its page axis over data (capacity
+    # scales with the data axis at constant per-device memory) and
+    # kv_heads over model, per-slot decode inputs shard their slot axis
+    # over data, and every device entry point runs with mesh-aware
+    # in_shardings/out_shardings — while the block table, BlockAllocator,
+    # and the content-hash prefix index stay host-global, so prefix
+    # sharing and COW work across shards unchanged.  Non-divisible dims
+    # replicate (divisibility guards).  A 1×1 mesh is byte-identical to
+    # mesh=None (tests/test_serving.py pins it).
+    mesh: Optional[Any] = None
 
     def buckets(self) -> tuple[int, ...]:
         if not self.prefill_buckets:
@@ -226,6 +237,18 @@ class ServeConfig:
                 "prefill_chunk is a paged-layout knob; the dense layout "
                 "prefills monolithically (it is the byte-identity oracle)"
             )
+        if self.mesh is not None:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "mesh sharding is a paged-layout knob; the dense "
+                    "layout is the single-device byte-identity oracle"
+                )
+            names = set(getattr(self.mesh, "axis_names", ()))
+            if not {"data", "model"} <= names:
+                raise ValueError(
+                    f"serving mesh needs ('data', 'model') axes, got "
+                    f"{sorted(names)}"
+                )
 
 
 @dataclasses.dataclass
@@ -274,6 +297,7 @@ class ServingEngine:
         self.paged = cfg.kv_layout == "paged"
         self.int8 = self.paged and model_cfg.kv_cache_dtype == "int8"
         self.sharing = self.paged and cfg.enable_prefix_sharing
+        self.mesh = cfg.mesh if self.paged else None
         self.params = params
         self.mcfg = model_cfg
         self.cfg = cfg
@@ -288,33 +312,58 @@ class ServingEngine:
             self._table = np.zeros((b, self._max_blocks), np.int32)
             # host mirror of cache["pos"] (drives the decode window width)
             self._host_pos = np.zeros((b,), np.int64)
-            self._serve_step = jax.jit(
-                SP.make_paged_serve_step(model_cfg), donate_argnums=(1,)
-            )
-            # THE paged prefill: a resumable suffix-chunk step (cold
-            # prefills run their whole bucket as chunks from zeroed state,
-            # partial-prefix hits start at q0 > 0 attending into shared
-            # pages).  ``bucket`` is the only static argument — one
-            # compile per (bucket, chunk shape) pair; the cache is donated
-            # (in-place page writes), the threaded state is NOT (boundary
-            # snapshots are stashed in the prefix index and must survive
-            # the next chunk call).
-            self._suffix_prefill = jax.jit(
-                SP.make_paged_suffix_prefill(model_cfg),
-                static_argnames=("bucket",), donate_argnums=(1,),
-            )
-            # prefix-sharing entry points (each compiles at most once —
-            # state-leaf shapes are bucket-independent, page ids / logits
-            # shapes are fixed): completion/full-hit admissions insert
-            # per-slot state leaves, sample the first token from last
-            # chunk (or stored) logits, and COW forks copy one pool page
-            # onto another
-            self._state_insert = jax.jit(
-                SP.make_paged_state_insert(model_cfg), donate_argnums=(0,)
-            )
-            self._page_copy = jax.jit(
-                SP.make_page_copy(model_cfg), donate_argnums=(0,)
-            )
+            if self.mesh is not None:
+                # sharded decode: the SAME four entry points, jitted with
+                # mesh-aware in/out shardings (pool pages over data,
+                # kv_heads over model, per-slot inputs over data; params
+                # replicated).  Donation + static-arg discipline match
+                # the unsharded jits, so the recompile guards hold.
+                eps = SP.make_sharded_paged_entry_points(
+                    model_cfg, self.mesh, batch=b,
+                    n_pages=cfg.pool_blocks(model_cfg.kv_cache_dtype),
+                    block_size=cfg.kv_block_size,
+                )
+                self._serve_step = eps["serve_step"]
+                self._suffix_prefill = eps["suffix_prefill"]
+                self._state_insert = eps["state_insert"]
+                self._page_copy = eps["page_copy"]
+                self._shardings = eps["shardings"]
+                # params live replicated on the mesh — placed ONCE here,
+                # not re-transferred per call
+                self.params = jax.device_put(
+                    params, self._shardings["params"]
+                )
+            else:
+                self._serve_step = jax.jit(
+                    SP.make_paged_serve_step(model_cfg),
+                    donate_argnums=(1,),
+                )
+                # THE paged prefill: a resumable suffix-chunk step (cold
+                # prefills run their whole bucket as chunks from zeroed
+                # state, partial-prefix hits start at q0 > 0 attending
+                # into shared pages).  ``bucket`` is the only static
+                # argument — one compile per (bucket, chunk shape) pair;
+                # the cache is donated (in-place page writes), the
+                # threaded state is NOT (boundary snapshots are stashed
+                # in the prefix index and must survive the next chunk
+                # call).
+                self._suffix_prefill = jax.jit(
+                    SP.make_paged_suffix_prefill(model_cfg),
+                    static_argnames=("bucket",), donate_argnums=(1,),
+                )
+                # prefix-sharing entry points (each compiles at most once
+                # — state-leaf shapes are bucket-independent, page ids /
+                # logits shapes are fixed): completion/full-hit
+                # admissions insert per-slot state leaves, sample the
+                # first token from last chunk (or stored) logits, and
+                # COW forks copy one pool page onto another
+                self._state_insert = jax.jit(
+                    SP.make_paged_state_insert(model_cfg),
+                    donate_argnums=(0,),
+                )
+                self._page_copy = jax.jit(
+                    SP.make_page_copy(model_cfg), donate_argnums=(0,)
+                )
             self._sample0 = jax.jit(
                 lambda logits, key: SP.sample_tokens(
                     model_cfg, logits, key[None, :],
@@ -394,6 +443,14 @@ class ServingEngine:
     ) -> int:
         """Queue a request; returns its request id."""
         n = len(prompt_tokens)
+        if n == 0:
+            # an empty prompt would left-pad to an all-pad window and seed
+            # decoding from the logits of a pad token — refuse loudly
+            # (same spirit as the max_len check below)
+            raise ValueError(
+                "empty prompt: at least one prompt token is required "
+                "(decoding seeds from the last prompt token's logits)"
+            )
         if n > max(self.cfg.buckets()):
             raise ValueError(
                 f"prompt length {n} exceeds largest prefill bucket "
@@ -438,14 +495,31 @@ class ServingEngine:
 
     def _init_cache(self):
         if self.paged:
-            return SP.init_paged_decode_cache(
+            cache = SP.init_paged_decode_cache(
                 self.mcfg, self.cfg.max_batch,
                 self.cfg.pool_blocks(self.mcfg.kv_cache_dtype),
                 self.cfg.kv_block_size,
             )
+            if self.mesh is not None:
+                # place the pool sharded from the start: pages over data,
+                # kv_heads over model — each device holds 1/|data| of the
+                # pool, which is where capacity scaling comes from
+                cache = jax.device_put(cache, self._shardings["cache"])
+            return cache
         return SP.init_decode_cache(
             self.mcfg, self.cfg.max_batch, self.cfg.max_len
         )
+
+    def _put(self, x, kind: str):
+        """Host→device transfer for a per-tick decode input.
+
+        Unsharded engines take the plain ``jnp.asarray`` path; under a
+        mesh the transfer is PLACED (``jax.device_put`` with the entry
+        point's NamedSharding) so the jit never needs a follow-up
+        reshard of an uncommitted array."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return jax.device_put(np.asarray(x), self._shardings[kind])
 
     def _chunk_tokens(self, bucket: int) -> int:
         """The prefill chunk grid for ``bucket`` (0 → whole bucket)."""
@@ -552,7 +626,10 @@ class ServingEngine:
         if not (self.paged and req.state is RequestState.DONE):
             return
         self.blocks.free(req.rid)
-        self._table[req.slot, :] = 0
+        # eviction nulled req.slot (the slot is no longer this request's
+        # — the next admission reuses it); the historical binding lives
+        # in req.done_slot, which is the row to neutralize here
+        self._table[req.done_slot, :] = 0
 
     def _admit_one(self, req: Request) -> None:
         """Bind an admitted request to its slot.
@@ -794,10 +871,10 @@ class ServingEngine:
                 self._cache, nxt = self._serve_step(
                     self.params,
                     self._cache,
-                    jnp.asarray(self._table[:, :w]),
-                    jnp.asarray(self._tokens),
-                    jnp.asarray(self._req_keys),
-                    jnp.asarray(self._steps),
+                    self._put(self._table[:, :w], "table"),
+                    self._put(self._tokens, "slot_vec"),
+                    self._put(self._req_keys, "slot_keys"),
+                    self._put(self._steps, "slot_vec"),
                 )
                 self._host_pos += 1  # mirrors the step's pos+1, every slot
             else:

@@ -49,9 +49,15 @@ class Request:
     prompt: list[int]
     max_new_tokens: int
     state: RequestState = RequestState.QUEUED
-    slot: Optional[int] = None
+    slot: Optional[int] = None         # live binding; None once DONE
     output: list[int] = dataclasses.field(default_factory=list)
     done_reason: Optional[str] = None  # "eos" | "length"
+    # the slot this request occupied while live, recorded at eviction —
+    # the historical value for metrics/debugging.  ``slot`` itself is
+    # nulled when the request leaves its slot, so a late reader can never
+    # silently index per-slot state that now belongs to the NEXT request
+    # admitted into the same slot.
+    done_slot: Optional[int] = None
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
@@ -190,6 +196,14 @@ class BlockAllocator:
                 f"pool exhausted: want {n_new + n_spare}, "
                 f"have {len(self._free)}"
             )
+        if len(set(shared)) != len(shared):
+            # a duplicated shared page would be double-mapped into one
+            # owner's table AND double-refcounted — free() would then
+            # decref it twice for a single logical mapping
+            dupes = sorted(
+                {p for p in shared if list(shared).count(p) > 1}
+            )
+            raise ValueError(f"duplicate shared page(s) {dupes}")
         for p in shared:
             if p not in self._refs:
                 raise ValueError(f"cannot share unallocated page {p}")
@@ -412,6 +426,13 @@ class Scheduler:
         req.state = RequestState.DONE
         req.done_reason = reason
         req.done_time = now
+        # sever the live slot binding: the next admission reuses this
+        # slot, and a DONE request that kept aliasing it would let any
+        # late reader (metrics, debug hooks, sharded transfer paths)
+        # index ANOTHER request's per-slot state.  The historical slot
+        # stays available as done_slot.
+        req.done_slot = req.slot
+        req.slot = None
 
     # -- views --------------------------------------------------------------
 

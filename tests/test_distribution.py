@@ -202,3 +202,104 @@ def test_serving_wta_head_runs():
     eng.submit([5, 6, 7])
     outs = eng.step()
     assert len(outs[0]) == 3
+
+
+def test_paged_pool_partition_specs_on_fake_mesh():
+    """Directed check of the paged-pool name rules on a (data=2, model=2)
+    mesh: pool pages shard over data + kv_heads over model (stablelm
+    smoke, kv_heads=4), and the kv_heads axis REPLICATES when model does
+    not divide it — never GSPMD padding."""
+    from repro.launch import specs as SP
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((2, 2))
+
+    cfg = get_smoke_config("stablelm-3b")  # kv_heads=4: divisible by 2
+    sds = SP.paged_decode_cache_specs(cfg, batch=4, n_pages=8, block_size=8)
+    specs = SH.cache_partition_specs(sds, FakeMesh(), cfg, 4)
+    # (nu, n_attn, n_pages, block, Hkv, Dh)
+    assert specs["k_pages"] == P(None, None, "data", None, "model", None)
+    assert specs["v_pages"] == P(None, None, "data", None, "model", None)
+    assert specs["pos"] == P(("data",))
+    # int8 layout: scale planes follow their code pages
+    import dataclasses
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    sds8 = SP.paged_decode_cache_specs(cfg8, batch=4, n_pages=8,
+                                       block_size=8)
+    specs8 = SH.cache_partition_specs(sds8, FakeMesh(), cfg8, 4)
+    assert specs8["k_pages"] == P(None, None, "data", None, "model", None)
+    assert specs8["k_scale_pages"] == P(None, None, "data", None, "model")
+    assert specs8["v_scale_pages"] == P(None, None, "data", None, "model")
+    assert specs8["quant_step"] == P()
+    # kv_heads=1 (recurrentgemma smoke) % model=2 != 0 → heads replicate,
+    # pages still shard over data
+    cfg1 = get_smoke_config("recurrentgemma-2b")
+    sds1 = SP.paged_decode_cache_specs(cfg1, batch=4, n_pages=8,
+                                       block_size=8)
+    specs1 = SH.cache_partition_specs(sds1, FakeMesh(), cfg1, 4)
+    assert specs1["k_pages"] == P(None, None, "data", None, None, None)
+    # a pool whose page count the data axis does not divide replicates
+    sds_odd = SP.paged_decode_cache_specs(cfg, batch=4, n_pages=7,
+                                          block_size=8)
+    specs_odd = SH.cache_partition_specs(sds_odd, FakeMesh(), cfg, 4)
+    assert specs_odd["k_pages"] == P(None, None, None, None, "model", None)
+
+
+def test_sharded_engine_token_identity_subprocess():
+    """Sharded-vs-unsharded token identity on real multi-device meshes
+    (4 fake host devices): the full continuous-batching trace through a
+    (1, model) mesh — the ISSUE's kv_heads-divisible contract — plus a
+    (2, 2) mesh admission-capacity check of the data-axis pool scaling."""
+    out = _run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        from repro.configs import get_smoke_config
+        from repro.models import get_model_fns
+        from repro.serving import RequestState, ServeConfig, ServingEngine
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = get_smoke_config("stablelm-3b")  # kv_heads=4: model-divisible
+        params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+        prompts = [
+            [163, 131, 69, 79, 11, 20, 5, 45],
+            [166, 233, 129, 155, 248, 187, 162, 139],
+            [239, 71, 209, 172, 1, 101],
+            [142, 9, 196, 187, 216, 45, 23, 221],
+        ]
+
+        def run(mesh):
+            eng = ServingEngine(params, cfg, ServeConfig(
+                max_batch=2, max_new_tokens=8, max_len=64,
+                kv_layout="paged", kv_block_size=8, mesh=mesh))
+            for p in prompts:
+                eng.submit(list(p))
+            return eng.step()
+
+        base = run(None)
+        print("MODEL_MESH_OK", base == run(make_host_mesh(model=4, data=1)))
+        print("DATA_MESH_OK", base == run(make_host_mesh(model=1, data=2)))
+        print("GRID_MESH_OK", base == run(make_host_mesh(model=2, data=2)))
+
+        # data-axis capacity: per-device budget 8 blocks, (2, 2) mesh pool
+        # holds 16 pages at the same bytes per device
+        def admitted(mesh, blocks):
+            eng = ServingEngine(params, cfg, ServeConfig(
+                max_batch=16, max_new_tokens=8, max_len=64,
+                kv_layout="paged", kv_block_size=8, num_kv_blocks=blocks,
+                enable_prefix_sharing=False, mesh=mesh))
+            for _ in range(16):
+                eng.submit([1, 2, 3], 8)
+            eng.tick()
+            return sum(1 for r in eng.sched.all_requests()
+                       if r.state is not RequestState.QUEUED)
+
+        single = admitted(None, 8)
+        sharded = admitted(make_host_mesh(model=2, data=2), 16)
+        print("CAPACITY_OK", sharded > single, single, sharded)
+    """)
+    assert "MODEL_MESH_OK True" in out
+    assert "DATA_MESH_OK True" in out
+    assert "GRID_MESH_OK True" in out
+    assert "CAPACITY_OK True" in out

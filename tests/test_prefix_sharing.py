@@ -112,6 +112,23 @@ def test_reserve_rejects_unallocated_shared_page():
     check_invariants(a)
 
 
+def test_reserve_rejects_duplicate_shared_pages():
+    """A duplicated page in ``shared`` would double-map one physical block
+    into two table positions of the same owner AND double-bump its
+    refcount — the first ``free`` would then leave a dangling reference.
+    The reservation must be rejected whole, with no refcount side effect."""
+    a = BlockAllocator(8)
+    (p,) = a.alloc(0, 1)
+    a.register(p, b"h0")
+    with pytest.raises(ValueError, match="duplicate shared page"):
+        a.reserve(1, n_new=1, shared=[p, p])
+    # atomic: the failed reservation bumped nothing, owner 1 never existed
+    assert a.refcount(p) == 1
+    assert 1 not in a._owned
+    assert a.available == a.capacity - 1
+    check_invariants(a)
+
+
 def test_cow_fork_swaps_in_the_spare():
     a = BlockAllocator(8)
     (p,) = a.alloc(0, 1)
@@ -237,7 +254,7 @@ def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
         op = rng.choice(
             [
                 "reserve", "reserve", "register", "fork", "free",
-                "deregister", "match", "suffix_reserve",
+                "deregister", "match", "suffix_reserve", "reserve_dup",
             ]
         )
         try:
@@ -276,6 +293,18 @@ def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
                             a.register(p, next_hash.to_bytes(8, "little"))
                             next_hash += 1
                     next_owner += 1
+            elif op == "reserve_dup":
+                # adversarial: a duplicated shared page must be rejected
+                # whole, with refcounts and ownership left untouched
+                registered = list(a.registered_pages())
+                if registered:
+                    p = rng.choice(registered)
+                    refs_before = dict(a._refs)
+                    owners_before = set(a._owned)
+                    with pytest.raises(ValueError, match="duplicate"):
+                        a.reserve(next_owner, 0, [p, p])
+                    assert a._refs == refs_before
+                    assert set(a._owned) == owners_before
             elif op == "reserve":
                 registered = list(a.registered_pages())
                 # a random (possibly empty) run of resident pages to share

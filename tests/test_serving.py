@@ -1147,3 +1147,101 @@ def test_wta_vote_concentration_with_trials(smoke):
     assert rates[256] > rates[16] - 0.05
     assert rates[256] > 0.9, rates
     assert rates[256] > rates[1] + 0.1, rates
+
+
+# ---------------------------------------------------------------------------
+# Host-bookkeeping bug sweep + sharded decode over the (data, model) mesh
+# ---------------------------------------------------------------------------
+
+
+def test_evict_severs_slot_binding():
+    """Refill-reuse regression: eviction must null the DONE request's live
+    ``slot`` binding (keeping the historical slot as ``done_slot``), so a
+    done record can never alias the per-slot state of whichever request
+    refills the slot next."""
+    s = Scheduler(n_slots=1)
+    a = s.submit([1, 2], max_new_tokens=1)
+    b = s.submit([3, 4], max_new_tokens=1)
+    (req,) = s.admit()
+    s.start_decode(req)
+    assert s.record_token(req, 5, eos_token=-1) is True
+    assert a.state is RequestState.DONE
+    assert a.slot is None          # live binding severed
+    assert a.done_slot == 0        # history survives for metrics/debug
+    (req2,) = s.admit()
+    assert req2 is b and req2.slot == 0
+    assert a.slot != req2.slot     # DONE record does not alias the reuse
+
+
+def test_submit_rejects_empty_prompt(smoke):
+    """An empty prompt would left-pad to an all-pad window and decode from
+    a pad token's logits — garbage that previously sailed through."""
+    cfg, params = smoke
+    eng = ServingEngine(
+        params, cfg, ServeConfig(max_batch=1, max_new_tokens=2, max_len=32)
+    )
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    assert not eng.sched.has_work()
+
+
+def test_mesh_validation_is_loud(smoke):
+    cfg, params = smoke
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(model=1, data=1)
+    with pytest.raises(ValueError, match="paged-layout knob"):
+        ServingEngine(
+            params, cfg,
+            ServeConfig(
+                max_batch=1, max_new_tokens=2, max_len=32,
+                kv_layout="dense", mesh=mesh,
+            ),
+        )
+    bad = jax.make_mesh((1,), ("x",), devices=jax.devices()[:1])
+    with pytest.raises(ValueError, match=r"\('data', 'model'\) axes"):
+        ServingEngine(
+            params, cfg,
+            ServeConfig(
+                max_batch=1, max_new_tokens=2, max_len=32,
+                kv_layout="paged", mesh=bad,
+            ),
+        )
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_sharded_1x1_mesh_byte_identity(arch):
+    """The sharded-decode acceptance contract: an engine on a 1×1
+    ``(data, model)`` mesh must be BYTE-identical to ``mesh=None`` over
+    the full mixed-length trace (admission, refill, page recycling) —
+    for pure-attention and hybrid recurrent families."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    _, base = _run_layout(params, cfg, "paged")
+    _, shard = _run_layout(
+        params, cfg, "paged", {"mesh": make_host_mesh(model=1, data=1)}
+    )
+    assert base == shard
+
+
+def test_sharded_recompile_guard(smoke):
+    """The mesh-aware entry points keep the compile discipline of the
+    single-device engine: one suffix-prefill compile per bucket, windowed
+    serve_step compiles, zero new compiles on a repeat trace."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg, params = smoke
+    eng, _ = _run_layout(
+        params, cfg, "paged", {"mesh": make_host_mesh(model=1, data=1)}
+    )
+    counts = eng.compile_counts()
+    buckets_used = {eng._bucket(len(p)) for p in MIXED_PROMPTS}
+    assert counts["suffix_prefill"] == len(buckets_used)
+    assert counts["state_insert"] == 1
+    assert counts["serve_step"] <= 4
+    for p, b in zip(MIXED_PROMPTS, MIXED_BUDGETS):
+        eng.submit(p, b)
+    eng.run()
+    assert eng.compile_counts() == counts, "steady-state trace recompiled"
