@@ -54,6 +54,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import get_model_fns
 from repro.serving import (
+    PRIORITY_BATCH,
+    PRIORITY_INTERACTIVE,
     RequestState,
     ServeConfig,
     ServingEngine,
@@ -72,6 +74,7 @@ REPORT_SCHEMA = {
     "prefix_sharing": dict,
     "partial_prefix": dict,
     "sharded_decode": dict,
+    "preemption": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -96,6 +99,10 @@ _SHARDED_KEYS = {
     "mesh", "devices", "single", "sharded", "tokens_match",
     "per_device_kv_blocks", "admitted_single", "admitted_sharded",
     "capacity_ratio",
+}
+_PREEMPTION_KEYS = {
+    "n_batch", "n_interactive", "burst_tick", "on", "off",
+    "tokens_match", "interactive_p99_ratio",
 }
 
 
@@ -153,6 +160,34 @@ def validate_report(report: dict) -> None:
     if report["sharded_decode"]["tokens_match"] is not True:
         raise ValueError(
             "sharded_decode: mesh-sharded vs single-device decode diverged"
+        )
+    pre = report["preemption"]
+    missing = _PREEMPTION_KEYS - set(pre)
+    if missing:
+        raise ValueError(f"preemption missing keys {sorted(missing)}")
+    # spill/restore safety: every request that COMPLETED in both runs must
+    # carry the identical token stream — preemption must never change what
+    # a request generates, only when
+    if pre["tokens_match"] is not True:
+        raise ValueError(
+            "preemption: preemption-on vs preemption-off decode diverged"
+        )
+    if pre["on"]["preemptions"] < 1:
+        raise ValueError(
+            "preemption: the bursty two-class trace triggered no "
+            "preemption — the benchmark is not exercising the policy"
+        )
+    # the point of preempting: the interactive burst's tail latency must be
+    # STRICTLY better with preemption on (the batch victims absorb the wait)
+    if not (
+        pre["on"]["interactive"]["ttft_p99_ms"]
+        < pre["off"]["interactive"]["ttft_p99_ms"]
+    ):
+        raise ValueError(
+            "preemption: interactive p99 TTFT did not improve with "
+            "preemption on "
+            f"(on={pre['on']['interactive']['ttft_p99_ms']}ms, "
+            f"off={pre['off']['interactive']['ttft_p99_ms']}ms)"
         )
 
 
@@ -618,6 +653,83 @@ def bench_sharded_decode(cfg, params, n_req: int = 8) -> dict:
     return out
 
 
+def bench_preemption(cfg, params, n_each: int = 3) -> dict:
+    """Bursty two-class trace: batch jobs saturate the slots, then an
+    interactive burst arrives mid-decode at higher priority.
+
+    The SLO scenario preemption exists for.  With preemption ON the
+    engine spills the lowest-priority decoding victims to host (pages +
+    recurrent state), seats the burst immediately, and restores the
+    victims afterwards through the normal admission gate; with it OFF the
+    burst queues behind the batch jobs' full decode budgets.  Reported
+    per mode: per-class p50/p99 TTFT and completion latency, preemption /
+    restore counts.  Two claims are ENFORCED by ``validate_report``:
+
+    * ``tokens_match`` — every request completing in both runs carries an
+      identical token stream (spill/restore byte identity, end to end);
+    * the interactive class's p99 TTFT is STRICTLY better with
+      preemption on (the batch victims absorb the wait).
+    """
+    batch_budget, inter_budget, burst_tick = 24, 4, 4
+    serve = dict(
+        max_batch=2, max_new_tokens=batch_budget, max_len=128,
+        kv_layout="paged", kv_block_size=8, prefill_buckets=(16,),
+    )
+    batch_prompts = [
+        list(range(1 + i, 13 + i)) for i in range(n_each)
+    ]
+    inter_prompts = [
+        list(range(100 + i, 109 + i)) for i in range(n_each)
+    ]
+    out: dict = {
+        "n_batch": n_each, "n_interactive": n_each,
+        "burst_tick": burst_tick,
+    }
+    streams: dict[str, dict] = {}
+    for label, enable in (("off", False), ("on", True)):
+        eng = ServingEngine(
+            params, cfg, ServeConfig(**serve, enable_preemption=enable)
+        )
+        rids: dict[str, list[int]] = {"batch": [], "interactive": []}
+        for p in batch_prompts:
+            rids["batch"].append(
+                eng.submit(p, batch_budget, priority=PRIORITY_BATCH)
+            )
+        tick = 0
+        burst_sent = False
+        while eng.sched.has_work():
+            if tick >= burst_tick and not burst_sent:
+                for p in inter_prompts:
+                    rids["interactive"].append(
+                        eng.submit(
+                            p, inter_budget,
+                            priority=PRIORITY_INTERACTIVE,
+                        )
+                    )
+                burst_sent = True
+            eng.tick()
+            tick += 1
+        m = eng.metrics()
+        streams[label] = {
+            r.rid: r.output for r in eng.sched.all_requests()
+        }
+        out[label] = {
+            "preemptions": m.preemptions,
+            "restores": m.restores,
+            "batch": m.latency_by_class.get(PRIORITY_BATCH, {}),
+            "interactive": m.latency_by_class.get(
+                PRIORITY_INTERACTIVE, {}
+            ),
+        }
+    out["tokens_match"] = streams["on"] == streams["off"]
+    out["interactive_p99_ratio"] = round(
+        out["on"]["interactive"].get("ttft_p99_ms", 0.0)
+        / max(out["off"]["interactive"].get("ttft_p99_ms", 1e-9), 1e-9),
+        3,
+    )
+    return out
+
+
 def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     base = get_smoke_config("stablelm-3b")
     if dry_run:
@@ -766,6 +878,25 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"late_ttft={par['off']['late_ttft_ms']:.1f}"
             f"->{par['on']['late_ttft_ms']:.1f}ms "
             f"match={par['tokens_match']}",
+        )
+    )
+    # preemptive scheduling on a bursty two-class trace: interactive tail
+    # latency with spill/restore preemption on vs off, identity enforced
+    pre = bench_preemption(
+        pvd_cfg, pvd_params, n_each=2 if dry_run else 3
+    )
+    report["preemption"] = pre
+    rows.append(
+        (
+            "serve_preemption",
+            0.0,
+            f"preempt={pre['on']['preemptions']} "
+            f"restore={pre['on']['restores']} "
+            f"inter_p99="
+            f"{pre['off']['interactive'].get('ttft_p99_ms', 0):.1f}"
+            f"->{pre['on']['interactive'].get('ttft_p99_ms', 0):.1f}ms "
+            f"ratio={pre['interactive_p99_ratio']:.2f} "
+            f"match={pre['tokens_match']}",
         )
     )
     # sharded paged decode over the local host mesh: token identity vs the

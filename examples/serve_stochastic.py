@@ -15,8 +15,13 @@ default) the repeat maps the resident prompt blocks through the
 content-hash index and skips its bucket prefill entirely — the summary
 line counts the hits.  ``--no-prefix-sharing`` turns the dedup off.
 
+``--priority 0`` submits the requests as the interactive class (which may
+preempt lower-priority work under pool pressure — inert here with a single
+class) and ``--deadline-ms N`` stamps a per-request SLO: a request past it
+is evicted with reason ``"deadline"``, counted in the summary line.
+
     PYTHONPATH=src python examples/serve_stochastic.py [--kv-dtype int8]
-        [--no-prefix-sharing]
+        [--no-prefix-sharing] [--priority 0] [--deadline-ms 500]
 """
 
 import argparse
@@ -38,6 +43,16 @@ def main():
     ap.add_argument(
         "--no-prefix-sharing", action="store_true",
         help="disable content-hash prompt-block sharing (COW paged pool)",
+    )
+    ap.add_argument(
+        "--priority", type=int, default=1,
+        help="priority class for every request: 0 = interactive (preempts "
+             "lower classes under pool pressure), 1 = batch (default)",
+    )
+    ap.add_argument(
+        "--deadline-ms", type=float, default=None,
+        help="per-request deadline in ms; past it the engine evicts with "
+             "reason 'deadline' (default: none)",
     )
     args = ap.parse_args()
 
@@ -69,22 +84,30 @@ def main():
                 enable_prefix_sharing=not args.no_prefix_sharing,
             ),
         )
-        rids = [eng.submit(p, n) for p, n in requests]
+        rids = [
+            eng.submit(
+                p, n, priority=args.priority, deadline_ms=args.deadline_ms
+            )
+            for p, n in requests
+        ]
         outs = eng.run()
         m = eng.metrics()
         print(f"--- {mode} (kv_cache_dtype={args.kv_dtype}) ---")
         for rid, (p, _) in zip(rids, requests):
-            print(f"  prompt={p} -> {outs[rid]}")
+            print(f"  prompt={p} -> {outs.get(rid, [])}")
         print(
             f"  {m.completed} requests, {m.total_tokens} tokens: "
-            f"{m.tokens_per_s:.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms, "
+            f"{m.tokens_per_s:.1f} tok/s, "
+            f"ttft {m.ttft_mean * 1e3:.0f}ms (p99 {m.ttft_p99 * 1e3:.0f}ms), "
             f"occupancy {m.occupancy_mean:.2f} "
             f"over {m.decode_steps} decode steps; "
             f"{m.prefills} prefills ({m.prefix_hits} prefix hits, "
             f"{m.prefix_partial_hits} partial hits, "
             f"{m.cow_forks} COW forks; "
             f"{m.prefill_tokens} prefill tokens computed, "
-            f"{m.prefill_tokens_saved} saved)"
+            f"{m.prefill_tokens_saved} saved); "
+            f"{m.preemptions} preemptions, "
+            f"evictions {m.evictions or '{}'}"
         )
 
 

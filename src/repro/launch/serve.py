@@ -61,6 +61,19 @@ def main() -> None:
     ap.add_argument("--mesh-model", type=int, default=1,
                     help="model-axis size of the serving mesh (--sharded); "
                          "remaining devices go to the data axis")
+    ap.add_argument("--priority", type=int, default=1,
+                    help="priority class for the submitted requests: 0 = "
+                         "interactive (may preempt lower classes under "
+                         "pool pressure, spilling their pages to host), "
+                         "1 = batch (default)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline in ms from submission; a "
+                         "request past it is evicted with reason "
+                         "'deadline' (default: none)")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="disable priority preemption (higher-priority "
+                         "arrivals back-pressure instead of spilling a "
+                         "lower-priority victim's KV pages to host)")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -99,15 +112,23 @@ def main() -> None:
             # passed through verbatim: ServeConfig.validate raises loudly
             # on --kv-layout dense + --prefill-chunk (paged-only knob)
             prefill_chunk=args.prefill_chunk,
+            enable_preemption=not args.no_preemption,
             mesh=mesh,
         ),
     )
     rng = jax.random.PRNGKey(7)
+    submit_kw = {}
+    if not args.static:
+        # the static reference engine has no scheduler: priority and
+        # deadline are continuous-engine concepts
+        submit_kw = dict(
+            priority=args.priority, deadline_ms=args.deadline_ms
+        )
     for i in range(args.requests):
         rng, k = jax.random.split(rng)
         n = int(jax.random.randint(k, (), 2, 9))
         prompt = jax.random.randint(k, (n,), 0, cfg.vocab).tolist()
-        eng.submit(prompt)
+        eng.submit(prompt, **submit_kw)
     t0 = time.time()
     # drain everything: the static engine's step() serves only one
     # max_batch wave, so both engines go through their full-drain APIs
@@ -117,13 +138,27 @@ def main() -> None:
     total = sum(len(o) for o in outs)
     print(
         f"served {len(outs)} requests, {total} tokens in {dt:.2f}s "
-        f"({total / max(dt, 1e-9):.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms,"
+        f"({total / max(dt, 1e-9):.1f} tok/s, ttft {m.ttft_mean * 1e3:.0f}ms"
+        f" p99 {m.ttft_p99 * 1e3:.0f}ms,"
         f" occupancy {m.occupancy_mean:.2f}, prefix hits {m.prefix_hits},"
         f" partial hits {m.prefix_partial_hits},"
         f" prefill tokens saved {m.prefill_tokens_saved},"
+        f" preemptions {m.preemptions} (restores {m.restores}),"
         f" engine={'static' if args.static else 'continuous'}, sampler="
         f"{'WTA votes' if args.wta else 'greedy'})"
     )
+    if m.evictions:
+        print("evictions:", ", ".join(
+            f"{k}={v}" for k, v in sorted(m.evictions.items())
+        ))
+    for pr, row in sorted(m.latency_by_class.items()):
+        print(
+            f"class {pr}: n={row['n']} "
+            f"ttft p50/p99 {row['ttft_p50_ms']:.0f}/"
+            f"{row['ttft_p99_ms']:.0f}ms, "
+            f"latency p50/p99 {row['latency_p50_ms']:.0f}/"
+            f"{row['latency_p99_ms']:.0f}ms"
+        )
     for o in outs:
         print("  ->", o)
 

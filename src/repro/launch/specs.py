@@ -278,7 +278,8 @@ def make_sharded_paged_entry_points(
     suffix prefill), so the engine's recompile guards hold verbatim.
 
     Returns ``{"serve_step", "suffix_prefill", "state_insert",
-    "page_copy", "shardings"}`` where ``shardings`` maps
+    "page_copy", "page_spill", "page_restore", "state_gather",
+    "shardings"}`` where ``shardings`` maps
     ``params/cache/table/slot_vec/slot_keys/replicated`` to the
     NamedShardings used — the engine places its host→device transfers
     (``jax.device_put``) with exactly these.
@@ -298,7 +299,7 @@ def make_sharded_paged_entry_points(
         make_paged_serve_step(cfg),
         donate_argnums=(1,),
         in_shardings=(params_sh, cache_sh, mat_sh, vec_sh, mat_sh, vec_sh),
-        out_shardings=(cache_sh, vec_sh),
+        out_shardings=(cache_sh, vec_sh, vec_sh),
     )
     # (params, cache, state, tokens, table_row, q0[, quant_seeds])
     prefill_in = [params_sh, cache_sh, rep, rep, rep, rep]
@@ -337,11 +338,34 @@ def make_sharded_paged_entry_points(
         in_shardings=(cache_sh, rep, rep),
         out_shardings=cache_sh,
     )
+    # spill/restore/state-gather: the preemption path.  The spill gather
+    # and the slot-state read produce REPLICATED payloads (they leave the
+    # device for a host-side store); restore donates the cache like every
+    # other admission-time mutation.
+    page_spill = jax.jit(
+        make_page_spill(cfg),
+        in_shardings=(cache_sh, rep),
+        out_shardings=rep,
+    )
+    page_restore = jax.jit(
+        make_page_restore(cfg),
+        donate_argnums=(0,),
+        in_shardings=(cache_sh, rep, rep),
+        out_shardings=cache_sh,
+    )
+    state_gather = jax.jit(
+        make_slot_state_gather(cfg),
+        in_shardings=(cache_sh, rep),
+        out_shardings=rep,
+    )
     return {
         "serve_step": serve_step,
         "suffix_prefill": suffix_prefill,
         "state_insert": state_insert,
         "page_copy": page_copy,
+        "page_spill": page_spill,
+        "page_restore": page_restore,
+        "state_gather": state_gather,
         "shardings": {
             "params": params_sh,
             "cache": cache_sh,
@@ -423,22 +447,109 @@ def make_serve_step(cfg: ModelConfig):
 
 def make_paged_serve_step(cfg: ModelConfig):
     """One decode step over a paged cache:
-    (params, cache, table(B,W), token(B,)) -> (cache, token).
+    (params, cache, table(B,W), token(B,)) -> (cache, token, ok).
 
     ``table`` is the host scheduler's block table, sliced to the current
     window of W blocks — the only width the step touches, which is where
     the O(max_len) → O(valid blocks) decode saving comes from.  Each
     distinct W is one retrace of the same jit (the engine buckets W to a
     power of two, so compiles stay logarithmic in max_len).  ``key`` /
-    ``steps`` follow the :func:`sample_tokens` contract."""
+    ``steps`` follow the :func:`sample_tokens` contract.
+
+    ``ok`` is a (B,) bool finite-logits flag per slot — the NaN/Inf guard:
+    an analog path (or an injected fault) that emits a non-finite logit
+    row flips the slot's flag to False, and the engine evicts that request
+    with reason ``"nan"`` instead of publishing a garbage token.  Computing
+    the flag inside the step costs one fused reduction over logits the
+    step already materializes — no extra device round trip."""
     if cfg.family == "encdec":
         raise ValueError("paged serving is token-LM only (no encdec)")
 
     def serve_step(params, cache, table, token, key=None, steps=None):
         cache, logits = TF.lm_decode_step(params, cache, token, cfg, table)
-        return cache, sample_tokens(cfg, logits, key, steps)
+        ok = jnp.isfinite(logits.astype(jnp.float32)).all(axis=-1)
+        return cache, sample_tokens(cfg, logits, key, steps), ok
 
     return serve_step
+
+
+def make_page_spill(cfg: ModelConfig):
+    """Gather a request's pool pages into a host-transferable payload.
+
+    (paged_cache, ids (W,) int32) → {pool leaf: (nu, n_attn, W, bs, ...)}.
+    The device half of preemption: the engine collects the victim's mapped
+    pages (padded with the trash page to a FIXED width W, so one compile
+    serves every spill), pulls the gathered payload to host memory, and
+    frees the pages — the block pool sees the capacity back immediately.
+    Reads only; the cache is NOT donated (it stays live for the surviving
+    slots).  int8 pools spill code pages and scale planes together, so a
+    restore is bit-exact at any pool dtype.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+
+    def spill(cache: dict, ids) -> dict:
+        return {
+            name: cache[name][:, :, ids]
+            for name in PAGE_POOL_LEAVES
+            if name in cache
+        }
+
+    return spill
+
+
+def make_page_restore(cfg: ModelConfig):
+    """Scatter a spilled payload back onto freshly reserved pool pages.
+
+    (paged_cache, ids (W,) int32, payload) → paged_cache.  Inverse of
+    :func:`make_page_spill`: position ``i`` of ``ids`` receives row ``i``
+    of every payload leaf.  Slots the engine does not want written (prefix
+    pages that came back as index hits, padding) point at the trash page —
+    duplicate trash ids are fine, nothing ever reads that page.  The cache
+    IS donated: restore happens at admission, when the engine owns the
+    only reference.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+
+    def restore(cache: dict, ids, payload: dict) -> dict:
+        out = dict(cache)
+        for name, rows in payload.items():
+            leaf = cache[name]
+            out[name] = leaf.at[:, :, ids].set(rows.astype(leaf.dtype))
+        return out
+
+    return restore
+
+
+def make_slot_state_gather(cfg: ModelConfig):
+    """Read one slot's dense per-slot leaves out of a live paged cache.
+
+    (paged_cache, slot int32) → state_leaves{B=1}.  Inverse of
+    :func:`make_paged_state_insert` and shaped exactly like its input, so
+    a spill→restore round trip is gather → (later) insert with no
+    reshaping in between.  Covers ``pos`` plus the recurrent/SSM state
+    leaves — everything a preempted request needs beyond its KV pages.
+    The slot index is traced; one compile for the engine's lifetime.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+
+    def gather(cache: dict, slot) -> dict:
+        # leaves WITHOUT a slot axis (the int8 pool's global quant_step
+        # counter) are engine-wide, not per-request — a spill must not
+        # capture them and a restore must not rewind them (replaying the
+        # counter would replay stochastic-rounding draws)
+        return {
+            name: jax.lax.dynamic_slice_in_dim(
+                leaf, slot, 1, axis=cache_batch_axis(cfg, name)
+            )
+            for name, leaf in cache.items()
+            if name not in PAGE_POOL_LEAVES
+            and leaf.ndim > cache_batch_axis(cfg, name)
+        }
+
+    return gather
 
 
 def make_prefill_step(cfg: ModelConfig, shape: ShapeSpec):

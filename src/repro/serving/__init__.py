@@ -4,16 +4,26 @@ from .engine import (
     ServingMetrics,
     StaticServingEngine,
 )
+from .faults import FaultInjector, POOL_HOG_OWNER
 from .scheduler import (
+    EVICT_REASONS,
+    PRIORITY_BATCH,
+    PRIORITY_INTERACTIVE,
     BlockAllocator,
     Request,
     RequestState,
     Scheduler,
     left_pad,
+    prefix_block_hashes,
 )
 
 __all__ = [
     "BlockAllocator",
+    "EVICT_REASONS",
+    "FaultInjector",
+    "POOL_HOG_OWNER",
+    "PRIORITY_BATCH",
+    "PRIORITY_INTERACTIVE",
     "ServeConfig",
     "ServingEngine",
     "ServingMetrics",
@@ -22,4 +32,5 @@ __all__ = [
     "RequestState",
     "Scheduler",
     "left_pad",
+    "prefix_block_hashes",
 ]

@@ -87,6 +87,11 @@ from repro.serving.scheduler import (
 )
 
 
+def _pctl(vals: Sequence[float], q: float) -> float:
+    """Percentile helper tolerant of empty samples (metrics views)."""
+    return float(np.percentile(np.asarray(vals), q)) if len(vals) else 0.0
+
+
 def _default_buckets(max_len: int) -> tuple[int, ...]:
     out, b = [], 8
     while b < max_len:
@@ -132,6 +137,22 @@ class ServeConfig:
     # prefix index), so smaller chunks = finer-grained prefix reuse for
     # stateful models, at more (bucket, chunk) compile pairs.
     prefill_chunk: int = 0
+    # paged layout only: when a higher-priority arrival cannot reserve
+    # blocks (or a slot), the engine preempts the lowest-priority DECODING
+    # request — its pages spill to a host-side store and the request
+    # requeues at the head of its class; restore re-admits through the
+    # normal gate (shared prefix pages come back as index hits, the
+    # decoded tail scatters back from the spilled payload) and the
+    # restored token stream is byte-identical to an un-preempted run.
+    # Uniform-priority traffic never preempts (a victim must have STRICTLY
+    # lower priority), so the default-on flag is inert for single-class
+    # workloads.
+    enable_preemption: bool = True
+    # optional repro.serving.faults.FaultInjector (paged only): fired at
+    # the start of every tick; can exhaust the pool, poison a slot's
+    # logits to NaN, storm deadlines, or kill an in-flight prefill.  The
+    # chaos harness — None (the default) costs nothing.
+    fault_injector: Optional[Any] = None
     # paged layout only: a jax.sharding.Mesh with ("data", "model") axes.
     # When set, the paged pool shards its page axis over data (capacity
     # scales with the data axis at constant per-device memory) and
@@ -208,6 +229,11 @@ class ServeConfig:
                     f"enable_prefix_sharing must be a bool, got "
                     f"{self.enable_prefix_sharing!r}"
                 )
+            if not isinstance(self.enable_preemption, bool):
+                raise ValueError(
+                    f"enable_preemption must be a bool, got "
+                    f"{self.enable_preemption!r}"
+                )
             if self.prefill_chunk < 0:
                 raise ValueError(
                     f"prefill_chunk must be >= 0, got {self.prefill_chunk}"
@@ -236,6 +262,11 @@ class ServeConfig:
             raise ValueError(
                 "prefill_chunk is a paged-layout knob; the dense layout "
                 "prefills monolithically (it is the byte-identity oracle)"
+            )
+        if self.fault_injector is not None and self.kv_layout != "paged":
+            raise ValueError(
+                "fault_injector drives the paged allocator/pipeline; the "
+                "dense layout is the fault-free byte-identity oracle"
             )
         if self.mesh is not None:
             if self.kv_layout != "paged":
@@ -270,18 +301,36 @@ class ServingMetrics:
     prefix_partial_hits: int = 0  # admissions that mapped SOME prompt blocks
     prefill_tokens: int = 0       # prefill tokens actually computed
     prefill_tokens_saved: int = 0  # prompt tokens skipped via the index
+    ttft_p50: float = 0.0         # TTFT percentiles over completed requests
+    ttft_p99: float = 0.0
+    preemptions: int = 0          # spill-to-host preemptions
+    restores: int = 0             # spilled requests re-admitted
+    # done_reason -> count over every finished request ("eos"/"length" are
+    # natural completions; "deadline"/"nan"/"preempted" are evictions)
+    evictions: dict = dataclasses.field(default_factory=dict)
+    # priority class -> {n, ttft_p50_ms, ttft_p99_ms, latency_p50_ms,
+    # latency_p99_ms} — the per-class SLO view (latency = submit → done)
+    latency_by_class: dict = dataclasses.field(default_factory=dict)
 
     @property
     def decode_step_ms(self) -> float:
         return self.decode_time * 1e3 / max(self.decode_steps, 1)
 
     def row(self) -> str:
-        return (
+        out = (
             f"tok_per_s={self.tokens_per_s:.1f} "
             f"ttft_ms={self.ttft_mean * 1e3:.1f} "
+            f"ttft_p99_ms={self.ttft_p99 * 1e3:.1f} "
             f"step_ms={self.decode_step_ms:.2f} "
             f"occupancy={self.occupancy_mean:.2f}"
         )
+        if self.preemptions or self.restores:
+            out += f" preempt={self.preemptions} restore={self.restores}"
+        if self.evictions:
+            out += " evict=" + ",".join(
+                f"{k}:{v}" for k, v in sorted(self.evictions.items())
+            )
+        return out
 
 
 class ServingEngine:
@@ -327,6 +376,9 @@ class ServingEngine:
                 self._suffix_prefill = eps["suffix_prefill"]
                 self._state_insert = eps["state_insert"]
                 self._page_copy = eps["page_copy"]
+                self._page_spill = eps["page_spill"]
+                self._page_restore = eps["page_restore"]
+                self._state_gather = eps["state_gather"]
                 self._shardings = eps["shardings"]
                 # params live replicated on the mesh — placed ONCE here,
                 # not re-transferred per call
@@ -364,6 +416,20 @@ class ServingEngine:
                 self._page_copy = jax.jit(
                     SP.make_page_copy(model_cfg), donate_argnums=(0,)
                 )
+                # preemption entry points (one compile each: page ids ride
+                # at the FIXED table width, padded with the trash page):
+                # spill gathers a victim's pages for the host-side store
+                # (no donation — the cache stays live for the survivors),
+                # restore scatters them back at re-admission, and the
+                # slot-state gather reads the victim's dense per-slot
+                # leaves (pos + recurrent/SSM states)
+                self._page_spill = jax.jit(SP.make_page_spill(model_cfg))
+                self._page_restore = jax.jit(
+                    SP.make_page_restore(model_cfg), donate_argnums=(0,)
+                )
+                self._state_gather = jax.jit(
+                    SP.make_slot_state_gather(model_cfg)
+                )
             self._sample0 = jax.jit(
                 lambda logits, key: SP.sample_tokens(
                     model_cfg, logits, key[None, :],
@@ -384,6 +450,10 @@ class ServingEngine:
             # boundary-state payloads are resident before its first chunk)
             self._jobs: dict[int, dict] = {}
             self._job_fifo: list[int] = []
+            # rid -> spill record of a preempted request (host np copies of
+            # its pool pages + per-slot leaves + decode counters); consumed
+            # by the restore branch of the gate / _admit_one
+            self._spill: dict[int, dict] = {}
             # recurrent/SSM families can only resume a partial-prefix hit
             # at a chunk boundary whose state snapshot is stashed;
             # attention-only families resume at any matched block
@@ -404,6 +474,10 @@ class ServingEngine:
         self._tokens = np.zeros((b,), np.int32)   # last emitted, per slot
         self._req_keys = np.zeros((b, 2), np.uint32)
         self._steps = np.zeros((b,), np.int32)    # tokens emitted, per slot
+        self._injector = cfg.fault_injector if self.paged else None
+        self._ticks = 0
+        self._preemptions = 0
+        self._restores = 0
         self._occ_sum = 0.0
         self._decode_steps = 0
         self._prefills = 0
@@ -440,8 +514,17 @@ class ServingEngine:
         self,
         prompt_tokens: Sequence[int],
         max_new_tokens: Optional[int] = None,
+        priority: int = 1,
+        deadline_ms: Optional[float] = None,
     ) -> int:
-        """Queue a request; returns its request id."""
+        """Queue a request; returns its request id.
+
+        ``priority`` is the scheduling class (lower = more urgent;
+        ``PRIORITY_INTERACTIVE=0`` overtakes ``PRIORITY_BATCH=1`` at
+        admission and may preempt it under pool pressure).  ``deadline_ms``
+        is a completion SLO from now: the engine's deadline pass evicts
+        the request with reason ``"deadline"`` once it expires, whatever
+        state it is in."""
         n = len(prompt_tokens)
         if n == 0:
             # an empty prompt would left-pad to an all-pad window and seed
@@ -478,7 +561,8 @@ class ServingEngine:
                     f"{self.blocks.capacity}; raise num_kv_blocks"
                 )
         req = self.sched.submit(
-            prompt_tokens, budget, now=time.perf_counter()
+            prompt_tokens, budget, now=time.perf_counter(),
+            priority=priority, deadline_ms=deadline_ms,
         )
         return req.rid
 
@@ -520,6 +604,12 @@ class ServingEngine:
         if self.mesh is None:
             return jnp.asarray(x)
         return jax.device_put(np.asarray(x), self._shardings[kind])
+
+    def _put_tree(self, tree, kind: str):
+        """Like :meth:`_put` for a pytree (spill payloads, state leaves)."""
+        if self.mesh is None:
+            return jax.tree.map(jnp.asarray, tree)
+        return jax.device_put(tree, self._shardings[kind])
 
     def _chunk_tokens(self, bucket: int) -> int:
         """The prefill chunk grid for ``bucket`` (0 → whole bucket)."""
@@ -590,6 +680,9 @@ class ServingEngine:
                 )
                 self._hash_memo[req.rid] = memo
             plan["hashes"], plan["seeds"] = memo
+        rec = self._spill.get(req.rid)
+        if rec is not None:
+            return self._gate_restore(req, plan, rec, nb_total)
         shared: list[int] = []
         if self.sharing:
             shared = self.blocks.longest_prefix_match(
@@ -610,6 +703,49 @@ class ServingEngine:
             plan["n_shared"] = len(shared)
             if not full:
                 plan["resume"] = self._resume_tokens(len(shared), bucket)
+        self._plans[req.rid] = plan
+        return True
+
+    def _gate_restore(
+        self, req: Request, plan: dict, rec: dict, nb_total: int
+    ) -> bool:
+        """Admission gate for a preempted (spilled) request.
+
+        Same atomic shape as the fresh-admission gate, with two twists.
+        First, the prefix probe is truncated to the request's PRISTINE
+        prompt blocks: once a decode step has written into an unaligned
+        boundary block (``rec["dirty"]``), that block's content diverged
+        from its chain hash — taking a pristine index hit there would
+        silently drop the decoded rows, so the spilled copy must come back
+        instead.  Second, fresh pristine prompt blocks re-register under
+        their hashes (guarded: an identical prompt may have re-registered
+        them while this request sat spilled), so a restored request is a
+        first-class sharing citizen again.
+        """
+        bucket, bs = plan["bucket"], self.cfg.kv_block_size
+        n_prompt = plan["n_prompt"]
+        n_clean = n_prompt - 1 if rec["dirty"] else n_prompt
+        shared: list[int] = []
+        if self.sharing:
+            shared = self.blocks.longest_prefix_match(
+                [h for h, _ in plan["hashes"]][:n_clean]
+            )
+        # an undirtied full match of an unaligned prompt WILL write its
+        # shared boundary block at the first decode step — same COW spare
+        # rule as a fresh full-hit admission
+        n_spare = 1 if (
+            len(shared) == n_prompt and bucket % bs != 0
+        ) else 0
+        n_new = nb_total - len(shared)
+        if not self.blocks.can_alloc(n_new + n_spare):
+            return False
+        pages = self.blocks.reserve(req.rid, n_new, shared, n_spare)
+        if self.sharing:
+            for i in range(len(shared), n_clean):
+                if self.blocks.lookup(plan["hashes"][i][0]) is None:
+                    self.blocks.register(pages[i], plan["hashes"][i][0])
+            plan["n_shared"] = len(shared)
+        plan["restore"] = True
         self._plans[req.rid] = plan
         return True
 
@@ -659,6 +795,9 @@ class ServingEngine:
             return
         plan = self._plans.pop(req.rid)
         self._hash_memo.pop(req.rid, None)
+        if plan.get("restore"):
+            self._restore_one(req, plan)
+            return
         pages = self.blocks.owned(req.rid)  # reserved by the gate
         row = np.zeros((self._max_blocks,), np.int32)
         row[: len(pages)] = pages
@@ -691,6 +830,46 @@ class ServingEngine:
             "tokens": left_pad(req.prompt, plen),
         }
         self._job_fifo.append(req.rid)
+
+    def _restore_one(self, req: Request, plan: dict) -> None:
+        """Re-bind a spilled request to its new slot, byte-exactly.
+
+        Shared prefix pages came back as index hits through the gate; the
+        rest of the request's USED pages (suffix prompt blocks, the dirty
+        boundary block, decoded tail blocks) scatter back from the spilled
+        payload — positions the request never reached point at the trash
+        page, so one fixed-width restore compile serves every shape.  The
+        per-slot leaves (``pos`` + recurrent/SSM state), last token, step
+        counter, and per-request PRNG key are restored verbatim, which is
+        what makes the remaining token stream byte-identical to an
+        un-preempted run (the key is ``fold_in(base, rid)`` — a pure
+        function of the rid — and WTA noise is a function of (key, step)).
+        No token is recorded here: the request resumes mid-stream.
+        """
+        rec = self._spill.pop(req.rid)
+        slot = req.slot
+        pages = self.blocks.owned(req.rid)
+        row = np.zeros((self._max_blocks,), np.int32)
+        row[: len(pages)] = pages
+        ids = np.zeros((self._max_blocks,), np.int32)
+        n_shared = plan["n_shared"]
+        ids[n_shared : rec["n_used"]] = row[n_shared : rec["n_used"]]
+        self._cache = self._page_restore(
+            self._cache,
+            self._put(ids, "replicated"),
+            self._put_tree(rec["pages"], "replicated"),
+        )
+        self._cache = self._state_insert(
+            self._cache,
+            self._put_tree(rec["state"], "replicated"),
+            slot,
+        )
+        self._table[slot] = row
+        self._host_pos[slot] = rec["pos"]
+        self._tokens[slot] = rec["token"]
+        self._steps[slot] = rec["steps"]
+        self.sched.start_decode(req)
+        self._restores += 1
 
     def _finish_admission(self, req: Request, tok0) -> None:
         """Shared admission tail: first token, decode start, bookkeeping."""
@@ -729,6 +908,243 @@ class ServingEngine:
             "missing boundary-state snapshot for a grid-aligned resume"
         )
         return payload[1]
+
+    # -- preemption / eviction ----------------------------------------------
+
+    def _preempt(self, req: Request) -> None:
+        """Spill a DECODING request to the host-side store and requeue it.
+
+        The victim's USED pages (``ceil(pos / block_size)`` of them, padded
+        with the trash page to the fixed table width — one spill compile
+        ever) gather to host memory together with its per-slot leaves and
+        decode counters; then its whole reservation is released — shared
+        prefix pages survive for their other owners, private pages hit the
+        free list immediately, which is the capacity the preempting
+        request is about to take.  The scheduler requeues the victim at
+        the head of its priority class.
+        """
+        slot, rid = req.slot, req.rid
+        pages = self.blocks.owned(rid)
+        pos = int(self._host_pos[slot])
+        bs = self.cfg.kv_block_size
+        bucket = self._bucket(len(req.prompt))
+        n_used = -(-pos // bs)
+        ids = np.zeros((self._max_blocks,), np.int32)
+        ids[:n_used] = pages[:n_used]
+        payload = jax.tree.map(
+            np.asarray,
+            self._page_spill(self._cache, self._put(ids, "replicated")),
+        )
+        state = jax.tree.map(
+            np.asarray,
+            self._state_gather(self._cache, slot),
+        )
+        self._spill[rid] = {
+            "bucket": bucket,
+            "n_used": n_used,
+            "pos": pos,
+            # once a decode step wrote into an unaligned boundary prompt
+            # block, its content diverged from the chain hash — the
+            # restore gate must NOT take a pristine index hit there
+            "dirty": bucket % bs != 0 and pos > bucket,
+            "pages": payload,
+            "state": state,
+            "token": int(self._tokens[slot]),
+            "steps": int(self._steps[slot]),
+        }
+        self.blocks.free(rid)
+        self._table[slot, :] = 0
+        self.sched.requeue(req)
+        self._preemptions += 1
+
+    def _preempt_pass(self) -> None:
+        """Evict lowest-priority decoders until the queue head admits.
+
+        Runs after normal admission: while the most-urgent queued request
+        outranks some DECODING request (strictly — uniform-priority
+        traffic never preempts), spill the weakest victim (lowest class,
+        then newest) and retry admission.  Each round shrinks the active
+        set by one, so the loop is bounded by ``max_batch``; it stops as
+        soon as the head stops outranking the floor — either because it
+        was admitted or because only its own class (or better) remains
+        live.
+        """
+        while True:
+            head = self.sched.peek()
+            if head is None:
+                return
+            victims = [
+                r for r in self.sched.active()
+                if r.priority > head.priority
+            ]
+            if not victims:
+                return
+            victim = max(victims, key=lambda r: (r.priority, r.rid))
+            self._preempt(victim)
+            for req in self.sched.admit(self._try_reserve_blocks):
+                self._admit_one(req)
+
+    def _evict_request(self, req: Request, reason: str, now: float) -> None:
+        """Terminally evict a request in ANY live state, atomically.
+
+        QUEUED requests cancel off the queue (dropping any spill record —
+        an expired preempted request never comes back); PREFILL requests
+        drop their pipeline job and free every reserved page
+        (:meth:`_kill_job`); DECODING requests release through the normal
+        eviction path.  Every path stamps the typed ``done_reason``.
+        """
+        if req.state is RequestState.QUEUED:
+            self.sched.cancel(req, reason, now)
+            if self.paged:
+                self._hash_memo.pop(req.rid, None)
+                self._spill.pop(req.rid, None)
+        elif req.state is RequestState.PREFILL:
+            if self.paged:
+                self._kill_job(req)
+            self.sched.evict(req, reason, now)
+            if self.paged:
+                self._table[req.done_slot, :] = 0
+        elif req.state is RequestState.DECODE:
+            self.sched.evict(req, reason, now)
+            self._release_if_done(req)
+
+    def _kill_job(self, req: Request) -> None:
+        """Drop an in-flight chunked-prefill job and free its pages.
+
+        The dead job's registered-but-not-fully-written prompt blocks are
+        deregistered BEFORE the free (their content never finished
+        landing; leaving them indexed would hand garbage to later
+        admissions).  Any such page still alive through a sharer's
+        reservation is *garbage with a believer*: jobs queued behind this
+        one mapped it at their gate assuming FIFO order would fill it —
+        each is demoted to recompute from before its first garbage block
+        (:meth:`_demote_job_for_garbage`).  Jobs AHEAD in the FIFO cannot
+        reference these pages (they were registered at this job's gate,
+        after theirs), and no DECODING request can either (completion is
+        FIFO too), so the cascade over queued jobs is exhaustive.
+        """
+        rid = req.rid
+        job = self._jobs.pop(rid)
+        self._job_fifo.remove(rid)
+        plan = job["plan"]
+        garbage: set[int] = set()
+        if self.sharing:
+            bs = self.cfg.kv_block_size
+            for i in range(plan["n_shared"], plan["n_prompt"]):
+                if job["q0"] < min((i + 1) * bs, job["bucket"]):
+                    page = int(job["row"][i])
+                    self.blocks.deregister(page)
+                    garbage.add(page)
+        self.blocks.free(rid)
+        garbage = {p for p in garbage if self.blocks.refcount(p) > 0}
+        for orid in self._job_fifo:
+            self._demote_job_for_garbage(self._jobs[orid], garbage)
+
+    def _demote_job_for_garbage(self, job: dict, garbage: set) -> None:
+        """Lower a queued job's resume point below its first garbage page.
+
+        ``garbage`` pages are mapped in ``job["row"]`` but their promised
+        content died with the killed writer.  Everything BELOW the first
+        garbage block is still valid (written, or registered by a live
+        owner); the job recomputes from there — rewriting the garbage
+        pages itself, with exactly the bits the dead writer would have
+        produced (content-derived int8 seeds keep even quantized blocks
+        bit-identical across writers).  Only the FIFO head ever advances
+        ``q0``, so a demoted job has not computed anything yet and its
+        threaded state is still unset; stateful families additionally
+        walk down the chunk grid to the deepest boundary whose state
+        snapshot is still stashed.
+        """
+        if not garbage:
+            return
+        plan = job["plan"]
+        bs = self.cfg.kv_block_size
+        frontier = min(-(-job["q0"] // bs), plan["n_prompt"])
+        bad = next(
+            (
+                i for i in range(frontier)
+                if int(job["row"][i]) in garbage
+            ),
+            None,
+        )
+        if bad is None:
+            return
+        q0 = bad * bs
+        if self._stateful:
+            grid = self._chunk_tokens(job["bucket"])
+            q0 = (q0 // grid) * grid
+            while q0 > 0 and self.blocks.payload(
+                plan["hashes"][q0 // bs - 1][0]
+            ) is None:
+                q0 -= grid
+        plan["full_hit"] = False
+        job["q0"] = q0
+        job["state"] = None
+
+    def _nan_payload(self) -> dict:
+        """A cached all-non-finite page payload for the NaN injector.
+
+        Float pool leaves (K/V or their scale planes) get a NaN row at
+        payload index 0 ONLY — an int8 pool's dequant is ``code * NaN
+        scale``, so the poison propagates at any pool dtype.  The other
+        rows stay zero: the scatter's fixed-width ids pad with the trash
+        page, and NaN-ing the trash page would non-finite EVERY slot
+        (masked attention weights are exactly 0, but 0·NaN = NaN on the
+        V side).  Shapes match the spill payload, so scattering reuses
+        the one restore compile.
+        """
+        if getattr(self, "_nan_rows", None) is None:
+            self._nan_rows = {}
+            for name in SP.PAGE_POOL_LEAVES:
+                if name in self._cache:
+                    leaf = self._cache[name]
+                    shape = list(leaf.shape)
+                    shape[2] = self._max_blocks
+                    dt = np.dtype(leaf.dtype)
+                    rows = np.zeros(shape, dt)
+                    # jnp.issubdtype, not np: bfloat16 is an ml_dtypes
+                    # extension type that numpy does not class as floating
+                    if jnp.issubdtype(dt, jnp.floating):
+                        rows[:, :, 0] = np.nan
+                    self._nan_rows[name] = rows
+        return self._nan_rows
+
+    def _poison_nan(self, req: Request) -> bool:
+        """Overwrite one of ``req``'s PRIVATE read-window pages with NaNs.
+
+        The injected analog-garbage fault: the next decode step reads the
+        poisoned block, its logits go non-finite, and the engine's ok-flag
+        guard evicts the request with reason ``"nan"``.  Only a
+        refcount-1 page may be poisoned (corrupting a shared page would
+        take innocent requests down with it); the page is deregistered
+        first, exactly as a real content divergence would be.  Returns
+        False if the request has no private page in its read window yet
+        (a fresh full-hit admission) — the injector then tries another
+        victim.
+        """
+        slot, rid = req.slot, req.rid
+        pages = self.blocks.owned(rid)
+        n_read = max(1, -(-int(self._host_pos[slot]) // self.cfg.kv_block_size))
+        target = next(
+            (
+                i for i in reversed(range(min(n_read, len(pages))))
+                if self.blocks.refcount(pages[i]) == 1
+            ),
+            None,
+        )
+        if target is None:
+            return False
+        self.blocks.deregister(pages[target])
+        # payload row 0 is the NaN row (see _nan_payload); the rest of the
+        # fixed-width vector scatters harmless zeros into the trash page
+        ids = np.zeros((self._max_blocks,), np.int32)
+        ids[0] = pages[target]
+        self._cache = self._page_restore(
+            self._cache,
+            self._put(ids, "replicated"),
+            self._put_tree(self._nan_payload(), "replicated"),
+        )
+        return True
 
     def _prefill_tick(self, emitted: list[tuple[int, int]]) -> None:
         """Advance the chunked-prefill pipeline by at most one compute
@@ -854,11 +1270,22 @@ class ServingEngine:
         """
         t_start = time.perf_counter()
         emitted: list[tuple[int, int]] = []
+        if self._injector is not None:
+            self._injector.fire(self, self._ticks)
+        self._ticks += 1
+        # deadline pass: expired requests evict in whatever state they
+        # are — queued, mid-chunked-prefill (job + pages dropped
+        # atomically), or decoding
+        expired = self.sched.expired(time.perf_counter())
+        for req in expired:
+            self._evict_request(req, "deadline", time.perf_counter())
         gate = self._try_reserve_blocks if self.paged else None
         for req in self.sched.admit(gate):
             self._admit_one(req)
             if not self.paged:
                 emitted.append((req.rid, req.output[-1]))
+        if self.paged and self.cfg.enable_preemption:
+            self._preempt_pass()
         if self.paged:
             self._prefill_tick(emitted)
         active = self.sched.active()
@@ -866,9 +1293,10 @@ class ServingEngine:
             self._cow_pass(active)
         if active:
             t_dec = time.perf_counter()
+            ok_np = None
             if self.paged:
                 w = self._window_blocks(active)
-                self._cache, nxt = self._serve_step(
+                self._cache, nxt, ok = self._serve_step(
                     self.params,
                     self._cache,
                     self._put(self._table[:, :w], "table"),
@@ -876,6 +1304,7 @@ class ServingEngine:
                     self._put(self._req_keys, "slot_keys"),
                     self._put(self._steps, "slot_vec"),
                 )
+                ok_np = np.asarray(ok)
                 self._host_pos += 1  # mirrors the step's pos+1, every slot
             else:
                 self._cache, nxt = self._serve_step(
@@ -892,6 +1321,12 @@ class ServingEngine:
             self._decode_steps += 1
             for req in active:
                 slot = req.slot
+                if ok_np is not None and not bool(ok_np[slot]):
+                    # non-finite logits (analog garbage / injected fault):
+                    # evict with a typed reason instead of publishing a
+                    # garbage token — the slot frees, serving continues
+                    self._evict_request(req, "nan", now)
+                    continue
                 t = int(nxt_np[slot])
                 self._tokens[slot] = t
                 self._steps[slot] += 1
@@ -986,6 +1421,28 @@ class ServingEngine:
             if r.state is RequestState.DONE
         ]
         ttfts = [r.ttft for r in done if r.ttft is not None]
+        evictions: dict[str, int] = {}
+        for r in done:
+            if r.done_reason:
+                evictions[r.done_reason] = (
+                    evictions.get(r.done_reason, 0) + 1
+                )
+        by_class: dict[int, dict] = {}
+        for pr in sorted({r.priority for r in done}):
+            rs = [r for r in done if r.priority == pr]
+            tt = [r.ttft for r in rs if r.ttft is not None]
+            lat = [
+                r.done_time - r.submit_time
+                for r in rs
+                if r.done_time is not None
+            ]
+            by_class[pr] = {
+                "n": len(rs),
+                "ttft_p50_ms": _pctl(tt, 50) * 1e3,
+                "ttft_p99_ms": _pctl(tt, 99) * 1e3,
+                "latency_p50_ms": _pctl(lat, 50) * 1e3,
+                "latency_p99_ms": _pctl(lat, 99) * 1e3,
+            }
         wall = self._busy_time
         return ServingMetrics(
             completed=len(done),
@@ -1003,6 +1460,12 @@ class ServingEngine:
             prefix_partial_hits=self._prefix_partial_hits,
             prefill_tokens=self._prefill_tokens,
             prefill_tokens_saved=self._prefill_tokens_saved,
+            ttft_p50=_pctl(ttfts, 50),
+            ttft_p99=_pctl(ttfts, 99),
+            preemptions=self._preemptions,
+            restores=self._restores,
+            evictions=evictions,
+            latency_by_class=by_class,
         )
 
     def compile_counts(self) -> dict[str, int]:
@@ -1022,6 +1485,9 @@ class ServingEngine:
             counts["state_insert"] = self._state_insert._cache_size()
             counts["page_copy"] = self._page_copy._cache_size()
             counts["sample0"] = self._sample0._cache_size()
+            counts["page_spill"] = self._page_spill._cache_size()
+            counts["page_restore"] = self._page_restore._cache_size()
+            counts["state_gather"] = self._state_gather._cache_size()
         else:
             counts["prefill"] = self._prefill._cache_size()
             counts["insert"] = self._insert._cache_size()

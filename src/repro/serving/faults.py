@@ -1,0 +1,132 @@
+"""Serving-engine fault injection: scheduled chaos for the paged engine.
+
+A :class:`FaultInjector` is a :class:`repro.testing.FaultSchedule` plus an
+interpreter for serving-specific fault kinds.  Attach one via
+``ServeConfig.fault_injector``; the engine calls :meth:`fire` at the start
+of every tick and the injector applies whatever events are due.  The
+contract under EVERY injected fault: the engine keeps serving, allocator
+invariants hold, and every affected request ends with a typed
+``done_reason`` (tests/test_faults.py fuzz-checks exactly this).
+
+Fault kinds:
+
+``exhaust_pool``
+    Reserve every free block under a sentinel owner — the admission gate
+    back-pressures as if live traffic held the pool.  ``release_pool``
+    hands it back.
+``nan_logits``
+    Overwrite one private read-window page of a decoding request
+    (``rid=...``, default: any poisonable active request) with
+    NaN/zeroed-int content — the paged analogue of an analog path
+    emitting garbage.  The next decode step's finite-logits flag drops
+    and the engine evicts the victim with reason ``"nan"``.
+``deadline_storm``
+    Stamp ``deadline_ms`` (default 0: already expired) onto every live
+    request — the next deadline pass evicts them all.
+``kill_prefill``
+    Terminally evict a mid-chunked-prefill request (``rid=...``, default:
+    the job FIFO head) with reason ``"preempted"`` — the job leaves the
+    pipeline and frees its pages atomically; queued sharers of its
+    never-written pages demote to recompute.
+``preempt``
+    Force a spill-preemption of a decoding request (``rid=...``, default:
+    the lowest-priority, newest active) — it requeues and later restores
+    through the normal gate.
+
+Usage::
+
+    inj = FaultInjector().at(3, "exhaust_pool").at(6, "release_pool")
+    engine = ServingEngine(params, mcfg, ServeConfig(fault_injector=inj))
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+from repro.testing import FaultSchedule
+
+# sentinel BlockAllocator owner for the pool-exhaustion fault; negative so
+# it can never collide with a request id
+POOL_HOG_OWNER = -1
+
+
+class FaultInjector(FaultSchedule):
+    """Tick-scheduled fault interpreter for :class:`ServingEngine`."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._hogging = False
+        # (tick, kind, rid-or-None) log of faults actually APPLIED —
+        # distinct from ``fired`` (scheduled events that came due): a
+        # nan_logits event with no poisonable victim fires but applies
+        # nothing
+        self.applied: list[tuple[int, str, Optional[int]]] = []
+
+    def fire(self, engine: Any, tick: int) -> None:
+        for ev in self.pop(tick):
+            getattr(self, f"_do_{ev.kind}")(engine, tick, **ev.kwargs)
+
+    # -- fault kinds --------------------------------------------------------
+
+    def _do_exhaust_pool(self, engine, tick: int) -> None:
+        n = engine.blocks.available
+        if self._hogging or n == 0:
+            return
+        engine.blocks.reserve(POOL_HOG_OWNER, n)
+        self._hogging = True
+        self.applied.append((tick, "exhaust_pool", None))
+
+    def _do_release_pool(self, engine, tick: int) -> None:
+        if not self._hogging:
+            return
+        engine.blocks.free(POOL_HOG_OWNER)
+        self._hogging = False
+        self.applied.append((tick, "release_pool", None))
+
+    def _do_nan_logits(self, engine, tick: int, rid: Optional[int] = None) -> None:
+        victims = (
+            [engine.sched.request(rid)] if rid is not None
+            else engine.sched.active()
+        )
+        for req in victims:
+            if req.slot is not None and engine._poison_nan(req):
+                self.applied.append((tick, "nan_logits", req.rid))
+                return
+
+    def _do_deadline_storm(
+        self, engine, tick: int, deadline_ms: float = 0.0
+    ) -> None:
+        now = time.perf_counter()
+        for req in engine.sched.all_requests():
+            if req.done_time is None:
+                # already-elapsed lifetime counts against the new SLO, so
+                # deadline_ms=0 expires everything at the next pass
+                req.deadline_ms = (
+                    (now - req.submit_time) * 1e3 + float(deadline_ms)
+                )
+                self.applied.append((tick, "deadline_storm", req.rid))
+
+    def _do_kill_prefill(
+        self, engine, tick: int, rid: Optional[int] = None
+    ) -> None:
+        if rid is None:
+            if not engine._job_fifo:
+                return
+            rid = engine._job_fifo[0]
+        req = engine.sched.request(rid)
+        engine._evict_request(req, "preempted", time.perf_counter())
+        self.applied.append((tick, "kill_prefill", rid))
+
+    def _do_preempt(self, engine, tick: int, rid: Optional[int] = None) -> None:
+        if rid is not None:
+            victims = [engine.sched.request(rid)]
+        else:
+            victims = sorted(
+                engine.sched.active(),
+                key=lambda r: (r.priority, r.rid),
+                reverse=True,
+            )
+        if victims and victims[0].slot is not None:
+            engine._preempt(victims[0])
+            self.applied.append((tick, "preempt", victims[0].rid))

@@ -5,14 +5,21 @@ owns the device state (decode cache, token buffer, per-slot PRNG keys); this
 module owns *which request lives in which slot and when*:
 
     QUEUED ──admit──▶ PREFILL ──start_decode──▶ DECODE ──evict──▶ DONE
-       ▲  FIFO, into the                           │ EOS hit or
-       └─ lowest free slot                         │ max_new_tokens
-          (mid-flight refill)                      ▼ frees the slot
+       ▲  priority-ordered,                        │ EOS hit, budget,
+       └─ into the lowest free slot                │ deadline, NaN, or
+          (mid-flight refill;                      ▼ preemption kill
+          requeue() puts a preempted                 frees the slot
+          request back at its class head)
 
-Admission is strictly FIFO over the submit order; a freed slot is refilled
-from the queue head on the next ``admit()`` call, while the other slots keep
-decoding — that mid-flight refill is what lifts slot occupancy over static
-batching on mixed-length traces.
+Admission is priority-ordered (lower ``priority`` wins; rid breaks ties, so
+traffic of a single class is strictly FIFO over submit order); a freed slot
+is refilled from the queue head on the next ``admit()`` call, while the
+other slots keep decoding — that mid-flight refill is what lifts slot
+occupancy over static batching on mixed-length traces.  A preempted request
+leaves its slot via :meth:`requeue` (back to QUEUED, same rid — so it heads
+its class) and a queued request can be killed without ever owning a slot
+via :meth:`cancel`; :meth:`expired` is the deadline view the engine's
+deadline pass evicts from.
 """
 
 from __future__ import annotations
@@ -29,6 +36,18 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     DONE = "done"
+
+
+# Priority classes: LOWER values are MORE urgent.  Interactive traffic
+# (chat turns, short completions) overtakes batch jobs at admission and may
+# preempt them when the block pool is exhausted.
+PRIORITY_INTERACTIVE = 0
+PRIORITY_BATCH = 1
+
+# Every terminal ``done_reason`` the scheduler/engine can stamp.  "eos" and
+# "length" are natural completions; the rest are evictions: a missed
+# deadline, a non-finite logit row, or an injected/administrative kill.
+EVICT_REASONS = ("eos", "length", "deadline", "nan", "preempted")
 
 
 def left_pad(prompt: Sequence[int], length: int, pad: int = 0) -> list[int]:
@@ -61,6 +80,14 @@ class Request:
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
+    # scheduling class: lower is more urgent (PRIORITY_INTERACTIVE beats
+    # PRIORITY_BATCH at admission and may preempt it under pool pressure)
+    priority: int = PRIORITY_BATCH
+    # wall-clock completion SLO in milliseconds from submit_time; None
+    # disables the deadline pass for this request
+    deadline_ms: Optional[float] = None
+    # how many times this request was preempted (spilled + requeued)
+    preemptions: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -352,29 +379,47 @@ class Scheduler:
     # -- submission / admission --------------------------------------------
 
     def submit(
-        self, prompt: Sequence[int], max_new_tokens: int, now: float = 0.0
+        self,
+        prompt: Sequence[int],
+        max_new_tokens: int,
+        now: float = 0.0,
+        priority: int = PRIORITY_BATCH,
+        deadline_ms: Optional[float] = None,
     ) -> Request:
         req = Request(
             rid=self._next_rid,
             prompt=list(prompt),
             max_new_tokens=int(max_new_tokens),
             submit_time=now,
+            priority=int(priority),
+            deadline_ms=None if deadline_ms is None else float(deadline_ms),
         )
         self._next_rid += 1
         self._requests[req.rid] = req
         self._queue.append(req)
         return req
 
+    def peek(self) -> Optional[Request]:
+        """The request :meth:`admit` would try next (priority head)."""
+        if not self._queue:
+            return None
+        return min(self._queue, key=lambda r: (r.priority, r.rid))
+
     def admit(
         self, gate: Optional[Callable[[Request], bool]] = None
     ) -> list[Request]:
-        """Move queued requests into free slots (FIFO, lowest slot first).
+        """Move queued requests into free slots (priority order, lowest
+        slot first).
 
-        ``gate``, when given, is asked per queue-head request whether it can
-        be admitted right now (the paged engine's block-pool back-pressure).
-        A gated-out head STOPS admission — skipping ahead would break FIFO
-        and could starve large requests behind a stream of small ones.  The
-        request simply stays QUEUED for a later ``admit()``.
+        The queue head is the most-urgent queued request — lowest
+        ``priority``, rid breaking ties, so single-class traffic is
+        strictly FIFO and a requeued (preempted) request resumes at the
+        head of its class.  ``gate``, when given, is asked per queue-head
+        request whether it can be admitted right now (the paged engine's
+        block-pool back-pressure).  A gated-out head STOPS admission —
+        skipping ahead would break the ordering and could starve large
+        requests behind a stream of small ones.  The request simply stays
+        QUEUED for a later ``admit()``.
 
         Returns the newly admitted requests, now in PREFILL state; the
         engine must prefill each and call :meth:`start_decode`.
@@ -385,13 +430,14 @@ class Scheduler:
                 break
             if self._slots[slot] is not None:
                 continue
-            if gate is not None and not gate(self._queue[0]):
+            head = min(self._queue, key=lambda r: (r.priority, r.rid))
+            if gate is not None and not gate(head):
                 break
-            req = self._queue.popleft()
-            req.state = RequestState.PREFILL
-            req.slot = slot
-            self._slots[slot] = req
-            admitted.append(req)
+            self._queue.remove(head)
+            head.state = RequestState.PREFILL
+            head.slot = slot
+            self._slots[slot] = head
+            admitted.append(head)
         return admitted
 
     def start_decode(self, req: Request) -> None:
@@ -433,6 +479,43 @@ class Scheduler:
         # stays available as done_slot.
         req.done_slot = req.slot
         req.slot = None
+
+    def requeue(self, req: Request) -> None:
+        """Preempt a slotted request back to QUEUED (slot freed, output and
+        timing kept).
+
+        The rid is unchanged, so the priority queue puts the request back
+        at the head of its class — a preempted request is never overtaken
+        by later arrivals of the same priority.  The engine is responsible
+        for spilling/freeing the request's device state before calling
+        this.
+        """
+        assert req.slot is not None, "only a slotted request can be requeued"
+        assert req.state in (RequestState.PREFILL, RequestState.DECODE)
+        self._slots[req.slot] = None
+        req.slot = None
+        req.state = RequestState.QUEUED
+        req.preemptions += 1
+        self._queue.append(req)
+
+    def cancel(self, req: Request, reason: str, now: float = 0.0) -> None:
+        """Kill a QUEUED request that never got (or no longer holds) a slot."""
+        assert req.state is RequestState.QUEUED, req.state
+        self._queue.remove(req)
+        req.state = RequestState.DONE
+        req.done_reason = reason
+        req.done_time = now
+
+    def expired(self, now: float) -> list[Request]:
+        """Live requests whose deadline has passed, in rid order."""
+        out = [
+            r
+            for r in self._requests.values()
+            if r.state is not RequestState.DONE
+            and r.deadline_ms is not None
+            and (now - r.submit_time) * 1e3 > r.deadline_ms
+        ]
+        return sorted(out, key=lambda r: r.rid)
 
     # -- views --------------------------------------------------------------
 

@@ -1,0 +1,23 @@
+"""Shared test/chaos utilities usable from production code paths.
+
+Fault injection lives here so the training loop and the serving engine
+drive ONE mechanism instead of two ad-hoc ones: the primitives are pure
+host logic with no JAX imports, cheap enough to stay compiled into
+production builds (an un-armed injector is a dict lookup per tick).
+"""
+
+from .faults import (
+    FaultEvent,
+    FaultSchedule,
+    InjectedFault,
+    StepFaultInjector,
+    fault_step_from_env,
+)
+
+__all__ = [
+    "FaultEvent",
+    "FaultSchedule",
+    "InjectedFault",
+    "StepFaultInjector",
+    "fault_step_from_env",
+]

@@ -23,12 +23,10 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import os
 import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import (
     CheckpointManager,
@@ -36,6 +34,11 @@ from repro.checkpoint import (
     load_checkpoint,
 )
 from repro.models.config import ModelConfig
+from repro.testing import (
+    InjectedFault,
+    StepFaultInjector,
+    fault_step_from_env,
+)
 from .step import TrainConfig, TrainState, init_train_state, make_train_step
 
 log = logging.getLogger("repro.train")
@@ -71,8 +74,8 @@ class StragglerMonitor:
         return slow
 
 
-class _InjectedFault(RuntimeError):
-    pass
+# backward-compat alias: tests and callers catch the shared exception type
+_InjectedFault = InjectedFault
 
 
 def run(
@@ -91,10 +94,9 @@ def run(
     monitor = StragglerMonitor(loop_cfg.straggler_factor)
     stats = {"losses": [], "restarts": 0, "stragglers": 0}
 
-    fault_step = loop_cfg.fault_inject_step
-    if fault_step is None and os.environ.get("FAULT_INJECT_STEP"):
-        fault_step = int(os.environ["FAULT_INJECT_STEP"])
-    fault_armed = fault_step is not None
+    injector = StepFaultInjector(
+        fault_step_from_env(loop_cfg.fault_inject_step)
+    )
 
     restarts = 0
     while True:
@@ -119,9 +121,7 @@ def run(
                 step = int(state.step)
                 batch = batch_fn(step)
                 t0 = time.time()
-                if fault_armed and step == fault_step:
-                    fault_armed = False  # fire exactly once
-                    raise _InjectedFault(f"injected fault at step {step}")
+                injector.check(step)  # raises InjectedFault exactly once
                 state, metrics = step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.time() - t0

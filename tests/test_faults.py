@@ -1,0 +1,263 @@
+"""Fault-injection suite: the shared step-fault helper (train + serving),
+the serving FaultInjector's typed fault kinds, and the chaos fuzz — random
+fault schedules over random traffic with allocator invariants re-checked
+after EVERY engine tick.  The contract under every injected fault: the
+engine keeps serving, the pool's safety invariants hold, and every
+affected request ends with a typed ``done_reason``."""
+
+import dataclasses
+import random
+
+import jax
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.configs import get_smoke_config
+from repro.models import get_model_fns
+from repro.serving import (
+    EVICT_REASONS,
+    PRIORITY_BATCH,
+    PRIORITY_INTERACTIVE,
+    FaultInjector,
+    POOL_HOG_OWNER,
+    RequestState,
+    ServeConfig,
+    ServingEngine,
+)
+from repro.testing import (
+    FaultSchedule,
+    InjectedFault,
+    StepFaultInjector,
+    fault_step_from_env,
+)
+from test_prefix_sharing import check_invariants
+
+given = hypothesis.given
+settings = hypothesis.settings
+
+
+# ---------------------------------------------------------------------------
+# Shared step-fault helper (repro.testing) — host logic, no model
+# ---------------------------------------------------------------------------
+
+
+def test_step_fault_injector_fires_exactly_once():
+    inj = StepFaultInjector(3)
+    assert inj.armed
+    for step in (0, 1, 2):
+        inj.check(step)
+    with pytest.raises(InjectedFault, match="step 3"):
+        inj.check(3)
+    assert not inj.armed
+    inj.check(3)  # a restarted loop re-runs the step without re-raising
+
+
+def test_step_fault_injector_disarmed_by_default():
+    inj = StepFaultInjector(None)
+    assert not inj.armed
+    for step in range(5):
+        inj.check(step)
+
+
+def test_fault_step_from_env(monkeypatch):
+    monkeypatch.delenv("FAULT_INJECT_STEP", raising=False)
+    assert fault_step_from_env(None) is None
+    assert fault_step_from_env(7) == 7
+    monkeypatch.setenv("FAULT_INJECT_STEP", "12")
+    # explicit argument wins over the environment
+    assert fault_step_from_env(7) == 7
+    assert fault_step_from_env(None) == 12
+
+
+def test_fault_schedule_pop_moves_to_fired():
+    s = FaultSchedule().at(2, "a").at(2, "b", x=1).at(5, "c")
+    assert bool(s) and s.pending == 3
+    assert s.pop(0) == []
+    evs = s.pop(2)
+    assert [e.kind for e in evs] == ["a", "b"]
+    assert evs[1].kwargs == {"x": 1}
+    assert [e.kind for e in s.fired] == ["a", "b"]
+    assert s.pending == 1
+    s.pop(5)
+    assert not s
+
+
+def test_train_loop_uses_shared_injector():
+    """The train loop's fault path now routes through repro.testing — the
+    backward-compat alias must stay catchable as the shared type."""
+    from repro.train.loop import _InjectedFault
+
+    assert _InjectedFault is InjectedFault
+
+
+# ---------------------------------------------------------------------------
+# Serving FaultInjector: typed fault kinds (smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("stablelm-3b")
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(smoke, injector, **kw):
+    cfg, params = smoke
+    base = dict(
+        max_batch=2, max_new_tokens=6, max_len=64, kv_block_size=8,
+        prefill_buckets=(16,),
+    )
+    base.update(kw)
+    sc = ServeConfig(fault_injector=injector, **base)
+    return ServingEngine(params, cfg, sc)
+
+
+def test_exhaust_pool_backpressures_then_recovers(smoke):
+    """With the pool held by the hog, nothing admits; releasing it lets
+    the queued request through and it completes normally."""
+    inj = FaultInjector().at(0, "exhaust_pool").at(3, "release_pool")
+    eng = _engine(smoke, inj)
+    rid = eng.submit(list(range(1, 10)), 6)
+    eng.tick()
+    req = eng.sched.request(rid)
+    assert req.state is RequestState.QUEUED  # gate back-pressured
+    assert eng.blocks.available == 0
+    eng.run()
+    assert req.done_reason == "length" and len(req.output) == 6
+    assert ("exhaust_pool" in {k for _, k, _ in inj.applied})
+
+
+def test_nan_logits_evicts_with_typed_reason(smoke):
+    """The NaN guard: a poisoned read-window page makes the next decode
+    step's logits non-finite and the engine evicts the victim with reason
+    ``"nan"`` — the other slot keeps decoding to completion."""
+    inj = FaultInjector().at(5, "nan_logits")
+    eng = _engine(smoke, inj)
+    ra = eng.submit(list(range(1, 10)), 20, priority=PRIORITY_BATCH)
+    rb = eng.submit(list(range(40, 50)), 20)
+    eng.run()
+    victim = next(
+        r for r in eng.sched.all_requests() if r.done_reason == "nan"
+    )
+    survivor = next(r for r in eng.sched.all_requests() if r is not victim)
+    assert survivor.done_reason == "length"
+    assert len(survivor.output) == 20
+    assert eng.metrics().evictions["nan"] == 1
+    assert eng.blocks.available == eng.blocks.capacity
+    assert inj.applied[-1][1] == "nan_logits"
+
+
+def test_deadline_storm_reaps_everything(smoke):
+    inj = FaultInjector().at(2, "deadline_storm")
+    eng = _engine(smoke, inj)
+    rids = [
+        eng.submit(list(range(1 + i, 10 + i)), 30) for i in range(3)
+    ]
+    eng.run()
+    for rid in rids:
+        assert eng.sched.request(rid).done_reason == "deadline"
+    assert eng.metrics().evictions["deadline"] == 3
+    assert eng.blocks.available == eng.blocks.capacity
+
+
+def test_kill_prefill_frees_pages_and_sharers_recover(smoke):
+    """Killing the FIFO-head prefill job mid-chunk drops its pipeline
+    entry atomically; a queued sharer of its never-written pages demotes
+    to recompute and still produces the solo-run token stream."""
+    cfg, params = smoke
+    prompt = list(range(1, 25))
+
+    inj = FaultInjector().at(1, "kill_prefill")
+    eng = _engine(smoke, inj, prefill_buckets=(32,), prefill_chunk=8,
+                  max_new_tokens=4)
+    ra = eng.submit(prompt, 4)
+    rb = eng.submit(prompt, 4)
+    eng.run()
+    killed = eng.sched.request(ra)
+    surv = eng.sched.request(rb)
+    assert killed.done_reason == "preempted" and killed.output == []
+    assert surv.done_reason == "length"
+    assert eng.blocks.available == eng.blocks.capacity
+
+    ref = _engine(smoke, None, prefill_buckets=(32,), prefill_chunk=8,
+                  max_new_tokens=4)
+    rc = ref.submit(prompt, 4)
+    out = ref.run()
+    assert surv.output == out[rc]
+
+
+def test_every_eviction_reason_is_typed(smoke):
+    """All reasons the engine can stamp are in the EVICT_REASONS registry
+    (metrics consumers key on it)."""
+    assert set(EVICT_REASONS) >= {
+        "eos", "length", "deadline", "nan", "preempted"
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chaos fuzz: random fault schedules over random traffic
+# ---------------------------------------------------------------------------
+
+_FAULT_KINDS = (
+    "exhaust_pool", "release_pool", "nan_logits", "deadline_storm",
+    "kill_prefill", "preempt",
+)
+
+
+def _chaos_trace(smoke, seed: int) -> None:
+    rng = random.Random(seed)
+    inj = FaultInjector()
+    for _ in range(rng.randint(2, 6)):
+        inj.at(rng.randint(0, 20), rng.choice(_FAULT_KINDS))
+    # a released pool hog at the end so the drain below can finish
+    inj.at(21, "release_pool")
+    eng = _engine(
+        smoke, inj,
+        prefill_buckets=(16, 32),
+        prefill_chunk=rng.choice((0, 8)),
+        num_kv_blocks=rng.choice((0, 9)),
+        max_new_tokens=8,
+    )
+    rids = []
+    for tick in range(24):
+        if rng.random() < 0.5 and len(rids) < 6:
+            n = rng.randint(1, 20)
+            rids.append(
+                eng.submit(
+                    list(range(1, n + 1)), rng.randint(1, 8),
+                    priority=rng.choice(
+                        (PRIORITY_INTERACTIVE, PRIORITY_BATCH)
+                    ),
+                    deadline_ms=rng.choice((None, 10_000.0)),
+                )
+            )
+        eng.tick()
+        check_invariants(eng.blocks)
+        # the hog keeps its reservation between exhaust/release events;
+        # every OTHER owner must be a live request or a pipeline job
+        live = {
+            r.rid
+            for r in eng.sched.all_requests()
+            if r.state is not RequestState.DONE
+        }
+        for owner in eng.blocks._owned:
+            assert owner == POOL_HOG_OWNER or owner in live
+    # drain: the engine must still be serviceable after the storm
+    n = 0
+    while eng.sched.has_work() and n < 400:
+        eng.tick()
+        check_invariants(eng.blocks)
+        n += 1
+    assert not eng.sched.has_work(), "engine wedged after fault storm"
+    for rid in rids:
+        req = eng.sched.request(rid)
+        assert req.state is RequestState.DONE
+        assert req.done_reason in EVICT_REASONS, req.done_reason
+    assert eng.blocks.available == eng.blocks.capacity
+
+
+@settings(deadline=None, max_examples=3)
+@given(seed=st.integers(0, 10_000))
+def test_chaos_fuzz_invariants_every_tick(smoke, seed):
+    _chaos_trace(smoke, seed)

@@ -248,6 +248,10 @@ def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
     a = BlockAllocator(n_blocks)
     next_owner = 0
     next_hash = 0
+    # spilled: owner -> ordered (hash-or-None) list, the allocator-level
+    # shadow of the engine's host-side spill store ("preempt" pushes,
+    # "restore" pops and re-admits through reserve + re-register)
+    spilled: list[list] = []
     # synthetic chains: hash -> page history, so "match"/"suffix_reserve"
     # can build plausible (and implausible) probe sequences
     for _ in range(n_ops):
@@ -255,6 +259,7 @@ def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
             [
                 "reserve", "reserve", "register", "fork", "free",
                 "deregister", "match", "suffix_reserve", "reserve_dup",
+                "preempt", "restore",
             ]
         )
         try:
@@ -347,6 +352,38 @@ def _fuzz_trace(seed: int, n_blocks: int, n_ops: int) -> None:
                 pages = list(a.registered_pages())
                 if pages:
                     a.deregister(rng.choice(pages))
+            elif op == "preempt":
+                # the engine's spill shape: remember which hash each of
+                # the owner's pages carried (None for unregistered decode
+                # tail pages), then release everything at once — shared
+                # pages survive via their other holders
+                owners = list(a._owned)
+                if owners:
+                    owner = rng.choice(owners)
+                    rec = [a._page_hash.get(p) for p in a.owned(owner)]
+                    a.free(owner)
+                    spilled.append(rec)
+            elif op == "restore":
+                # the engine's restore gate: probe the remembered chain,
+                # map whatever prefix is still resident, take fresh pages
+                # for the rest, and re-register hashes that went dead
+                # with the spill (guarded by lookup, exactly like
+                # _gate_restore — a hash may have been re-registered by
+                # another chain in the meantime)
+                if spilled:
+                    rec = spilled.pop(rng.randrange(len(spilled)))
+                    probe = [h for h in rec if h is not None]
+                    shared = a.longest_prefix_match(probe)
+                    n_new = len(rec) - len(shared)
+                    if a.can_alloc(n_new):
+                        pages = a.reserve(next_owner, n_new, shared)
+                        assert pages[: len(shared)] == shared
+                        for p, h in zip(
+                            pages[len(shared):], rec[len(shared):]
+                        ):
+                            if h is not None and a.lookup(h) is None:
+                                a.register(p, h)
+                        next_owner += 1
         finally:
             check_invariants(a)
     # drain: releasing every owner must hand the whole pool back

@@ -16,6 +16,8 @@ from repro.configs import get_smoke_config
 from repro.launch import specs as SP
 from repro.models import get_model_fns
 from repro.serving import (
+    PRIORITY_BATCH,
+    PRIORITY_INTERACTIVE,
     BlockAllocator,
     RequestState,
     Scheduler,
@@ -1245,3 +1247,230 @@ def test_sharded_recompile_guard(smoke):
         eng.submit(p, b)
     eng.run()
     assert eng.compile_counts() == counts, "steady-state trace recompiled"
+
+
+# ---------------------------------------------------------------------------
+# Preemption, priorities, deadlines & KV spill/restore
+# ---------------------------------------------------------------------------
+
+
+def test_priority_admission_order():
+    """Interactive (priority 0) jumps the queue ahead of earlier batch
+    submissions; within a class, FIFO by rid."""
+    s = Scheduler(n_slots=1)
+    b0 = s.submit([1], 2, priority=PRIORITY_BATCH)
+    b1 = s.submit([2], 2, priority=PRIORITY_BATCH)
+    i0 = s.submit([3], 2, priority=PRIORITY_INTERACTIVE)
+    assert s.peek() is i0
+    (req,) = s.admit()
+    assert req is i0
+    s.start_decode(req)
+    s.evict(req, "length")
+    (nxt,) = s.admit()
+    assert nxt is b0 and s.peek() is b1
+
+
+def test_requeue_roundtrip():
+    """requeue frees the slot, returns the request to QUEUED, and bumps
+    the preemption counter; the next admit re-seats it."""
+    s = Scheduler(n_slots=1)
+    a = s.submit([1, 2], 4)
+    (req,) = s.admit()
+    s.start_decode(req)
+    s.record_token(req, 7, eos_token=-1)
+    s.requeue(req)
+    assert a.state is RequestState.QUEUED
+    assert a.slot is None
+    assert a.preemptions == 1
+    assert a.output == [7]  # decoded tokens survive the round trip
+    (req2,) = s.admit()
+    assert req2 is a and a.slot == 0
+
+
+def test_cancel_and_expired():
+    s = Scheduler(n_slots=1)
+    a = s.submit([1], 4, now=0.0, deadline_ms=50.0)
+    b = s.submit([2], 4, now=0.0)  # no deadline: never expires
+    assert s.expired(now=0.040) == []
+    assert s.expired(now=0.060) == [a]
+    s.cancel(a, "deadline", now=0.060)
+    assert a.state is RequestState.DONE and a.done_reason == "deadline"
+    assert s.expired(now=99.0) == []  # DONE requests never re-expire
+    (req,) = s.admit()
+    assert req is b
+
+
+def _preempt_fixture(arch, injector=None, **kw):
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    sc = ServeConfig(
+        max_batch=2, max_new_tokens=10, max_len=64, kv_block_size=8,
+        prefill_buckets=(16,), fault_injector=injector, **kw,
+    )
+    return cfg, params, ServingEngine(params, cfg, sc)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_preempt_restore_byte_identity(arch):
+    """The spill/restore acceptance contract: a request preempted
+    mid-decode (pages spilled to host, slot freed, later restored through
+    the normal admission gate) must emit a token stream BYTE-identical to
+    an un-preempted run — attention-only and hybrid recurrent families."""
+    from repro.serving import FaultInjector
+
+    inj = FaultInjector().at(4, "preempt").at(8, "preempt")
+    cfg, params, eng = _preempt_fixture(arch, injector=inj)
+    prompts = [list(range(1, 10)), list(range(2, 14))]
+    rids = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    m = eng.metrics()
+    assert m.preemptions == 2 and m.restores == 2
+    assert inj.applied and all(k == "preempt" for _, k, _ in inj.applied)
+
+    _, _, ref = _preempt_fixture(arch)
+    ref_rids = [ref.submit(p, 10) for p in prompts]
+    ref_out = ref.run()
+    for r, rr in zip(rids, ref_rids):
+        assert out[r] == ref_out[rr], arch
+
+
+def test_preempt_restore_compile_counts():
+    """Spill, restore, and slot-state gather are one compile each — page
+    ids are fixed-width (trash-padded), so every preemption depth reuses
+    the same trace; a repeat preemption compiles nothing new."""
+    from repro.serving import FaultInjector
+
+    inj = FaultInjector().at(3, "preempt").at(7, "preempt")
+    _, _, eng = _preempt_fixture("stablelm-3b", injector=inj)
+    for p in ([1, 2, 3, 4], list(range(2, 14))):
+        eng.submit(p, 10)
+    eng.run()
+    counts = eng.compile_counts()
+    assert counts["page_spill"] == 1
+    assert counts["page_restore"] == 1
+    assert counts["state_gather"] == 1
+    assert counts["serve_step"] <= 4
+
+
+def test_higher_priority_arrival_preempts_lowest(smoke):
+    """A tight pool running a batch request back-pressures an interactive
+    arrival; with preemption on, the batch victim spills, the interactive
+    request takes the pool, and the victim restores and STILL finishes
+    byte-identically."""
+    cfg, params = smoke
+
+    def run(enable):
+        sc = ServeConfig(
+            max_batch=1, max_new_tokens=6, max_len=64, kv_block_size=8,
+            prefill_buckets=(16,), num_kv_blocks=7,
+            enable_preemption=enable,
+        )
+        eng = ServingEngine(params, cfg, sc)
+        rb = eng.submit(list(range(1, 10)), 6, priority=PRIORITY_BATCH)
+        for _ in range(3):
+            eng.tick()
+        ri = eng.submit(
+            list(range(3, 12)), 6, priority=PRIORITY_INTERACTIVE
+        )
+        n = 0
+        while eng.sched.has_work() and n < 300:
+            eng.tick()
+            n += 1
+        return eng, rb, ri
+
+    eng_on, rb, ri = run(True)
+    m = eng_on.metrics()
+    assert m.preemptions >= 1 and m.restores >= 1
+    b_on = eng_on.sched.request(rb)
+    assert b_on.preemptions >= 1
+    # interactive finished BEFORE the preempted batch request
+    i_done = eng_on.sched.request(ri).done_time
+    assert i_done is not None and i_done < b_on.done_time
+
+    eng_off, rb2, _ = run(False)
+    assert eng_off.metrics().preemptions == 0
+    # the preempted run's batch stream matches the unpreempted one
+    assert b_on.output == eng_off.sched.request(rb2).output
+
+
+def test_uniform_priority_never_preempts(smoke):
+    """A victim must have STRICTLY lower priority than the arrival —
+    single-class traffic under pool pressure back-pressures (PR-3
+    behavior) instead of thrashing."""
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=2, max_new_tokens=6, max_len=64, kv_block_size=8,
+        prefill_buckets=(16,), num_kv_blocks=7,
+    )
+    eng = ServingEngine(params, cfg, sc)
+    for i in range(3):
+        eng.submit(list(range(1 + i, 10 + i)), 6)
+    eng.run()
+    assert eng.metrics().preemptions == 0
+    assert eng.metrics().completed == 3
+
+
+def test_deadline_eviction_mid_stream(smoke):
+    """A request whose deadline lapses mid-decode is evicted with reason
+    ``"deadline"`` and its pool pages are reclaimed."""
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=1, max_new_tokens=200, max_len=256, kv_block_size=8,
+        prefill_buckets=(16,),
+    )
+    eng = ServingEngine(params, cfg, sc)
+    rid = eng.submit(list(range(1, 10)), 200, deadline_ms=1e-3)
+    eng.run()
+    req = eng.sched.request(rid)
+    assert req.done_reason == "deadline"
+    assert eng.blocks.available == eng.blocks.capacity
+    assert eng.metrics().evictions.get("deadline") == 1
+
+
+def test_queued_deadline_eviction_without_slot(smoke):
+    """Expiry must also reap QUEUED requests that never got a slot."""
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=1, max_new_tokens=4, max_len=64, kv_block_size=8,
+        prefill_buckets=(16,),
+    )
+    eng = ServingEngine(params, cfg, sc)
+    r0 = eng.submit(list(range(1, 10)), 4)
+    r1 = eng.submit(list(range(2, 12)), 4, deadline_ms=1e-3)
+    eng.run()
+    assert eng.sched.request(r0).done_reason == "length"
+    assert eng.sched.request(r1).done_reason == "deadline"
+    assert len(eng.sched.request(r1).output) == 0
+
+
+def test_metrics_latency_by_class(smoke):
+    """Per-priority-class TTFT/latency percentiles and the eviction-reason
+    counters surface in metrics() and row()."""
+    cfg, params = smoke
+    sc = ServeConfig(
+        max_batch=2, max_new_tokens=4, max_len=64, kv_block_size=8,
+        prefill_buckets=(16,),
+    )
+    eng = ServingEngine(params, cfg, sc)
+    eng.submit(list(range(1, 10)), 4, priority=PRIORITY_INTERACTIVE)
+    eng.submit(list(range(2, 12)), 4, priority=PRIORITY_BATCH)
+    eng.run()
+    m = eng.metrics()
+    assert set(m.latency_by_class) == {PRIORITY_INTERACTIVE, PRIORITY_BATCH}
+    for cls in m.latency_by_class.values():
+        assert cls["n"] == 1
+        assert 0 < cls["ttft_p50_ms"] <= cls["ttft_p99_ms"]
+        assert 0 < cls["latency_p50_ms"] <= cls["latency_p99_ms"]
+    assert m.ttft_p50 <= m.ttft_p99
+    assert "ttft_p99_ms=" in m.row()
+    # done-reason counts: both requests spent their budget normally
+    assert m.evictions == {"length": 2}
+
+
+def test_preemption_rejected_on_dense(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(
+            params, cfg,
+            ServeConfig(kv_layout="dense", fault_injector=object()),
+        )

@@ -246,8 +246,9 @@ def test_suffix_prefill_start_and_pages_are_traced():
 
 @pytest.mark.parametrize("wta", [False, True])
 def test_paged_serve_step_shape_contract(wta):
-    """(params, cache, table(B,W), token(B,)) -> (cache, token): output
-    cache specs must equal the input's (donation + no recompile)."""
+    """(params, cache, table(B,W), token(B,)) -> (cache, token, ok):
+    output cache specs must equal the input's (donation + no recompile);
+    ok is the per-slot finite-logits flag the engine's NaN guard reads."""
     cfg = dataclasses.replace(get_smoke_config("stablelm-3b"), wta_head=wta)
     ps = SP.params_specs(cfg)
     cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
@@ -259,10 +260,14 @@ def test_paged_serve_step_shape_contract(wta):
             jax.ShapeDtypeStruct((B, 2), jnp.uint32),
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ]
-    out_cache, out_tok = jax.eval_shape(SP.make_paged_serve_step(cfg), *args)
+    out_cache, out_tok, out_ok = jax.eval_shape(
+        SP.make_paged_serve_step(cfg), *args
+    )
     assert _tree_specs(out_cache) == _tree_specs(cs)
     assert out_tok.shape == (B,)
     assert out_tok.dtype == jnp.int32
+    assert out_ok.shape == (B,)
+    assert out_ok.dtype == jnp.bool_
 
 
 def test_paged_serve_step_rejects_encdec():
@@ -333,9 +338,55 @@ def test_int8_paged_serve_step_shape_contract(wta):
             jax.ShapeDtypeStruct((B, 2), jnp.uint32),
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ]
-    out_cache, out_tok = jax.eval_shape(SP.make_paged_serve_step(cfg), *args)
+    out_cache, out_tok, out_ok = jax.eval_shape(
+        SP.make_paged_serve_step(cfg), *args
+    )
     assert _tree_specs(out_cache) == _tree_specs(cs)
     assert out_tok.shape == (B,)
+    assert out_ok.shape == (B,) and out_ok.dtype == jnp.bool_
+
+
+def test_page_spill_restore_shape_contract():
+    """spill: (cache, ids(W,)) -> {pool leaf: rows}; restore scatters the
+    payload back and must return cache specs equal to the input's
+    (donation); gather: (cache, slot) -> the exact init_prefill_state
+    pytree, so state_insert reuses its one compile on restore."""
+    cfg = get_smoke_config("recurrentgemma-2b")
+    cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    ids = jax.ShapeDtypeStruct((3,), jnp.int32)
+    payload = jax.eval_shape(SP.make_page_spill(cfg), cs, ids)
+    assert set(payload) == {k for k in SP.PAGE_POOL_LEAVES if k in cs}
+    for name, rows in payload.items():
+        want = list(cs[name].shape)
+        want[2] = 3
+        assert rows.shape == tuple(want), (name, rows.shape)
+    out = jax.eval_shape(SP.make_page_restore(cfg), cs, ids, payload)
+    assert _tree_specs(out) == _tree_specs(cs)
+    state = jax.eval_shape(
+        SP.make_slot_state_gather(cfg), cs, jax.ShapeDtypeStruct((), jnp.int32)
+    )
+    ref = jax.eval_shape(lambda: SP.init_prefill_state(cfg))
+    assert _tree_specs(state) == _tree_specs(ref)
+
+
+def test_int8_spill_payload_excludes_global_quant_step():
+    """The int8 pool's stochastic-rounding step counter is a GLOBAL
+    scalar, not per-slot state — the slot gather must skip it (restoring
+    it would replay other slots' rounding draws)."""
+    cfg = dataclasses.replace(
+        get_smoke_config("stablelm-3b"), kv_cache_dtype="int8"
+    )
+    cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
+    assert "quant_step" in cs
+    state = jax.eval_shape(
+        SP.make_slot_state_gather(cfg), cs, jax.ShapeDtypeStruct((), jnp.int32)
+    )
+    assert "quant_step" not in state
+    # but the scale planes DO spill with the pages
+    payload = jax.eval_shape(
+        SP.make_page_spill(cfg), cs, jax.ShapeDtypeStruct((2,), jnp.int32)
+    )
+    assert "k_scale_pages" in payload and "v_scale_pages" in payload
 
 
 def test_int8_suffix_prefill_quantizes_into_covered_pages():
