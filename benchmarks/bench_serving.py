@@ -32,7 +32,11 @@ and mean slot occupancy.  The headline system-level claims:
   identity vs the single-device engine and admission capacity scaling
   with the data axis at constant per-device pool memory (run under
   XLA_FLAGS=--xla_force_host_platform_device_count=N for a real
-  multi-device mesh; degrades to a 1x1 mesh identity check otherwise).
+  multi-device mesh; degrades to a 1x1 mesh identity check otherwise);
+* self-speculative decoding (draft-k fused decode + one-dispatch verify)
+  vs plain decode on the same trace: acceptance rate, tokens per verify
+  round, and steady-state tokens/s — byte-identity AND a tokens/s floor
+  (ratio >= 1.0) are enforced by validate_report.
 
 Results (tokens/s, TTFT, decode-step ms, occupancy for every engine) are
 also written to a JSON file for CI artifact tracking.
@@ -75,6 +79,7 @@ REPORT_SCHEMA = {
     "partial_prefix": dict,
     "sharded_decode": dict,
     "preemption": dict,
+    "speculative_decode": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -103,6 +108,10 @@ _SHARDED_KEYS = {
 _PREEMPTION_KEYS = {
     "n_batch", "n_interactive", "burst_tick", "on", "off",
     "tokens_match", "interactive_p99_ratio",
+}
+_SPECULATIVE_KEYS = {
+    "speculate_k", "n_requests", "plain", "spec", "acceptance",
+    "tokens_per_round", "tokens_per_s_ratio", "tokens_match",
 }
 
 
@@ -188,6 +197,26 @@ def validate_report(report: dict) -> None:
             "preemption on "
             f"(on={pre['on']['interactive']['ttft_p99_ms']}ms, "
             f"off={pre['off']['interactive']['ttft_p99_ms']}ms)"
+        )
+    spec = report["speculative_decode"]
+    missing = _SPECULATIVE_KEYS - set(spec)
+    if missing:
+        raise ValueError(
+            f"speculative_decode missing keys {sorted(missing)}"
+        )
+    # the output-distribution contract: speculation must never change what
+    # a greedy request generates, only how fast — CI fails on divergence
+    if spec["tokens_match"] is not True:
+        raise ValueError(
+            "speculative_decode: speculative-on vs plain decode diverged"
+        )
+    # the point of speculating: per-token cost amortizes over the draft
+    # run, so steady-state tokens/s must be no worse than plain decode
+    if spec["tokens_per_s_ratio"] < 1.0:
+        raise ValueError(
+            "speculative_decode: tokens/s ratio "
+            f"{spec['tokens_per_s_ratio']} < 1.0 — speculation lost to "
+            "plain decode on the serving trace"
         )
 
 
@@ -730,6 +759,84 @@ def bench_preemption(cfg, params, n_each: int = 3) -> dict:
     return out
 
 
+def bench_speculative(
+    cfg, params, n_req: int = 10, k: int = 4, passes: int = 3
+) -> dict:
+    """Self-speculative decoding vs plain decode on the same mixed trace.
+
+    Every decoding slot drafts ``k`` tokens per tick with the fused decode
+    step and verifies the run in one read-only pass — ONE device dispatch
+    and one host sync per round instead of per token, so per-tick host
+    overhead amortizes over the accepted run.  Two claims are ENFORCED by
+    ``validate_report``:
+
+    * ``tokens_match`` — greedy streams are byte-identical speculative-on
+      vs plain (speculation changes latency, never output);
+    * ``tokens_per_s_ratio >= 1.0`` — steady-state throughput must not
+      lose to plain decode (warm-up pass first, then best-of-``passes``
+      re-drives of the same trace per engine, plain/spec interleaved so
+      transient host noise hits both; the max filters scheduler jitter,
+      same spirit as the paged/int8 sections' second-pass deltas).
+
+    Speculation's win is host-side: the draft run does the SAME model
+    math as k plain steps, so tokens/s only improves by amortizing the
+    per-tick host work + dispatch + sync over the accepted run.  Measure
+    it on a dispatch-bound config (the smoke model) — on a compute-bound
+    model the ratio pins to ~1.0 by construction.
+
+    Acceptance < 1.0 on a greedy trace is budget truncation, not
+    mismatch: drafts past a request's remaining budget are discarded at
+    its "length" eviction but still count as drafted.
+    """
+    serve = dict(
+        max_batch=3, max_new_tokens=16, max_len=128,
+        kv_layout="paged", kv_block_size=8,
+    )
+    trace = make_trace(
+        seed=4, n_req=n_req, mean_gap_ticks=1.0,
+        prompt_len_range=(2, 12), new_tokens_range=(8, 17),
+        vocab=cfg.vocab,
+    )
+    out: dict = {"speculate_k": k, "n_requests": n_req, "passes": passes}
+    streams = {}
+    engines = {}
+    for label, kk in (("plain", 0), ("spec", k)):
+        eng = ServingEngine(
+            params, cfg, ServeConfig(**serve, speculate_k=kk)
+        )
+        drive_continuous(eng, trace)  # warm-up: compiles buckets + windows
+        engines[label] = eng
+    # measured passes INTERLEAVED plain/spec so transient machine noise
+    # (another process, a frequency shift) hits both engines, not just
+    # whichever happened to run second — the ratio is what's enforced
+    best: dict = {}
+    for _ in range(passes):
+        for label, eng in engines.items():
+            m0 = eng.metrics()
+            drive_continuous(eng, trace)  # steady-state re-drive
+            d = _steady_delta(m0, eng.metrics())
+            if (
+                label not in best
+                or d["tokens_per_s"] > best[label]["tokens_per_s"]
+            ):
+                best[label] = d
+    for label, eng in engines.items():
+        streams[label] = [r.output for r in eng.sched.all_requests()]
+        out[label] = best[label]
+        if label == "spec":
+            m = eng.metrics()
+            out["acceptance"] = round(m.spec_acceptance, 3)
+            out["tokens_per_round"] = round(m.spec_tokens_per_round, 2)
+            out[label]["spec_rounds"] = m.spec_rounds
+    out["tokens_per_s_ratio"] = round(
+        out["spec"]["tokens_per_s"]
+        / max(out["plain"]["tokens_per_s"], 1e-9),
+        2,
+    )
+    out["tokens_match"] = streams["plain"] == streams["spec"]
+    return out
+
+
 def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     base = get_smoke_config("stablelm-3b")
     if dry_run:
@@ -897,6 +1004,31 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"->{pre['on']['interactive'].get('ttft_p99_ms', 0):.1f}ms "
             f"ratio={pre['interactive_p99_ratio']:.2f} "
             f"match={pre['tokens_match']}",
+        )
+    )
+    # self-speculative decoding: draft-k + one-dispatch verify vs plain
+    # decode on the same trace, byte-identity + tokens/s floor enforced.
+    # Run on the dispatch-bound smoke config: the draft run repeats the
+    # same model math as plain steps, so the measurable win is per-tick
+    # host/dispatch amortization — on the compute-bound 4-layer model the
+    # ratio pins to ~1.0 and the floor check would only measure noise
+    spec_params = params if cfg is base else get_model_fns(base).init(
+        jax.random.PRNGKey(0), base
+    )
+    # full-length trace even under --dry-run: the enforced ratio needs
+    # enough steady-state tokens that scheduler jitter can't flip it
+    spd = bench_speculative(base, spec_params, n_req=10)
+    report["speculative_decode"] = spd
+    rows.append(
+        (
+            "serve_speculative_decode",
+            0.0,
+            f"k={spd['speculate_k']} acc={spd['acceptance']:.2f} "
+            f"tok_per_round={spd['tokens_per_round']:.2f} "
+            f"tok_s={spd['plain']['tokens_per_s']:.1f}"
+            f"->{spd['spec']['tokens_per_s']:.1f} "
+            f"ratio={spd['tokens_per_s_ratio']:.2f}x "
+            f"match={spd['tokens_match']}",
         )
     )
     # sharded paged decode over the local host mesh: token identity vs the

@@ -20,8 +20,14 @@ preempt lower-priority work under pool pressure — inert here with a single
 class) and ``--deadline-ms N`` stamps a per-request SLO: a request past it
 is evicted with reason ``"deadline"``, counted in the summary line.
 
+``--speculate-k K`` turns on self-speculative decoding: every tick each
+decoding slot drafts K tokens with the fused decode step and verifies the
+run in one read-only pass — greedy output is byte-identical to plain
+decode, and the summary line reports the acceptance rate.
+
     PYTHONPATH=src python examples/serve_stochastic.py [--kv-dtype int8]
         [--no-prefix-sharing] [--priority 0] [--deadline-ms 500]
+        [--speculate-k 4]
 """
 
 import argparse
@@ -54,6 +60,12 @@ def main():
         help="per-request deadline in ms; past it the engine evicts with "
              "reason 'deadline' (default: none)",
     )
+    ap.add_argument(
+        "--speculate-k", type=int, default=0,
+        help="self-speculative decoding: draft K tokens per tick, verify "
+             "in one read-only pass, roll back at the first mismatch "
+             "(0 = off; greedy output is byte-identical either way)",
+    )
     args = ap.parse_args()
 
     base = get_smoke_config("stablelm-3b")
@@ -82,6 +94,7 @@ def main():
                 # original is still decoding
                 kv_block_size=8,
                 enable_prefix_sharing=not args.no_prefix_sharing,
+                speculate_k=args.speculate_k,
             ),
         )
         rids = [
@@ -109,6 +122,12 @@ def main():
             f"{m.preemptions} preemptions, "
             f"evictions {m.evictions or '{}'}"
         )
+        if m.spec_rounds:
+            print(
+                f"  speculative: {m.spec_rounds} rounds, acceptance "
+                f"{m.spec_acceptance:.2f}, "
+                f"{m.spec_tokens_per_round:.2f} tokens/round"
+            )
 
 
 if __name__ == "__main__":

@@ -74,6 +74,17 @@ def main() -> None:
                     help="disable priority preemption (higher-priority "
                          "arrivals back-pressure instead of spilling a "
                          "lower-priority victim's KV pages to host)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="self-speculative decoding: draft up to K tokens "
+                         "per tick with the fused decode step, verify the "
+                         "run in one read-only pass, roll back at the "
+                         "first mismatch (paged layout; 0 = off; greedy "
+                         "streams are byte-identical to plain decode)")
+    ap.add_argument("--spill-budget-bytes", type=int, default=None,
+                    help="cap on host bytes held by preemption spill "
+                         "records; oldest records are dropped at the cap "
+                         "and their victims recompute from the prompt on "
+                         "restore (default: unbounded)")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -113,6 +124,8 @@ def main() -> None:
             # on --kv-layout dense + --prefill-chunk (paged-only knob)
             prefill_chunk=args.prefill_chunk,
             enable_preemption=not args.no_preemption,
+            speculate_k=args.speculate_k,
+            spill_budget_bytes=args.spill_budget_bytes,
             mesh=mesh,
         ),
     )
@@ -151,6 +164,14 @@ def main() -> None:
         print("evictions:", ", ".join(
             f"{k}={v}" for k, v in sorted(m.evictions.items())
         ))
+    if m.spec_rounds:
+        print(
+            f"speculative: {m.spec_rounds} rounds, "
+            f"{m.spec_drafted} drafted / {m.spec_accepted} accepted "
+            f"(acceptance {m.spec_acceptance:.2f}, "
+            f"{m.spec_tokens_per_round:.2f} tokens/round); "
+            f"spill drops {m.spill_drops}"
+        )
     for pr, row in sorted(m.latency_by_class.items()):
         print(
             f"class {pr}: n={row['n']} "

@@ -145,10 +145,16 @@ def make_paged_suffix_prefill(cfg: ModelConfig):
     running for the OTHER slots (the engine threads ``state`` host-side
     and writes it at the slot once, on completion).
 
-    Compile discipline: ``bucket`` is the only static argument (the
-    attention window slice), so compiles are one per (bucket, chunk
-    shape) pair; page ids, the start position, and the int8 rounding
-    seeds are all traced.  int8 pools quantize each chunk block under its
+    With ``all_logits=True`` (static, default off) the logits output is
+    ``(1, c, V)`` — one next-token row per chunk position, the
+    multi-token-logits variant that makes a k-token chunk a one-call
+    verifier over k decode positions (the cross-path oracle the
+    speculative-decoding tests pin against the decode-cell verifier).
+
+    Compile discipline: ``bucket`` is the only routinely-varying static
+    argument (the attention window slice), so compiles are one per
+    (bucket, chunk shape) pair; page ids, the start position, and the
+    int8 rounding seeds are all traced.  int8 pools quantize each chunk block under its
     content-derived seed (chain hash → uint32, folded with the unit and
     sublayer index inside) — the canonical-seed contract that keeps
     shared int8 blocks bit-identical across writers.
@@ -158,12 +164,12 @@ def make_paged_suffix_prefill(cfg: ModelConfig):
 
     def suffix_chunk(
         params, cache: dict, state: dict, tokens, table_row, q0,
-        quant_seeds=None, *, bucket: int,
+        quant_seeds=None, *, bucket: int, all_logits: bool = False,
     ):
         pool = {n: cache[n] for n in PAGE_POOL_LEAVES if n in cache}
         new_pool, new_state, logits = TF.lm_prefill_chunk(
             params, tokens, cfg, pool, state, table_row, q0, bucket,
-            quant_seeds,
+            quant_seeds, all_logits=all_logits,
         )
         out = dict(cache)
         out.update(new_pool)
@@ -178,6 +184,144 @@ def make_paged_suffix_prefill(cfg: ModelConfig):
 PAGE_POOL_LEAVES = (
     "k_pages", "v_pages", "k_scale_pages", "v_scale_pages"
 )
+
+
+def _spec_state_leaves(cache: dict) -> dict:
+    """The per-slot leaves a speculative round snapshots / rolls back:
+    everything except the shared page pool and the engine-wide int8
+    ``quant_step`` counter (rewinding that would replay rounding draws)."""
+    return {
+        n: v for n, v in cache.items()
+        if n not in PAGE_POOL_LEAVES and n != "quant_step"
+    }
+
+
+def make_paged_spec_round(cfg: ModelConfig, k: int):
+    """One fused draft-k → verify-k speculative round over a paged cache.
+
+    (params, cache, table (B, W), token (B,), keys (B, 2), steps (B,)) →
+    (cache, dtoks (B, k), doks (B, k), vtoks (B, k), voks (B, k),
+    vstates {state leaf: (k, ...)}).
+
+    Draft phase: a ``lax.scan`` of ``k`` chained batched decode steps —
+    each scan cell IS :func:`TF.lm_decode_step` + :func:`sample_tokens`
+    with the slot's own ``(key, steps + j)``, so the drafted chain is
+    bit-identical to ``k`` plain engine ticks (the greedy byte-identity
+    contract holds by construction, not by tolerance).  Drafted K/V lands
+    in the slots' reserved pages as it would under plain decode; the int8
+    pool's ``quant_step`` advances one per draft step, exactly like the
+    plain path.
+
+    Verify phase: a read-only re-decode of the whole drafted run in the
+    SAME dispatch — every (slot, step) pair verified in parallel as ONE
+    ``k·B``-row batched decode call (the multi-token-logits pass).  Row
+    ``(j, s)`` consumes input ``j`` of ``[token, dtoks[:-1]]`` for slot
+    ``s`` at absolute position ``q0_s + j`` with ``kv_write=False``:
+    identical per-row math attending the pages the draft just wrote
+    (per-row decode logits are batch-size-invariant bitwise — the same
+    property the batch-composition-invariance contract pins), resampled
+    with the same ``(key, steps + j)`` the draft used.  In a fault-free
+    run ``vtoks == dtoks`` bitwise and every draft accepts; when a draft
+    diverged (noisy analog drafter, injected fault), the first mismatch
+    index is simultaneously the rejection point AND the corrected
+    resample.  ``vstates[leaf][j]`` — the per-slot state after consuming
+    input ``j``, emitted by the draft scan (the verifier consumes the
+    drafts themselves, so draft and verify states coincide bitwise on
+    every row, matched or not) — is the rollback target for
+    :func:`make_spec_rollback`.
+
+    The wall-clock shape is the point: ``k`` sequential unit evals
+    (draft, irreducibly autoregressive) plus ONE parallel verify eval
+    per round, against ``k`` sequential evals plus ``k`` full host
+    round-trips for the plain path — per-tick host overhead amortizes
+    over the accepted run.
+
+    ``doks``/``voks`` are the per-step finite-logits flags (the NaN guard
+    at draft depth): the engine truncates a slot's usable drafts at the
+    first non-finite draft step.  One compile per (window W, k) pair —
+    same power-of-two window bucketing as the plain serve step.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+    if k < 1:
+        raise ValueError(f"speculate_k must be >= 1, got {k}")
+
+    def spec_round(params, cache, table, token, keys, steps):
+        snap = _spec_state_leaves(cache)
+
+        def draft(carry, j):
+            cch, tok = carry
+            cch, logits = TF.lm_decode_step(params, cch, tok, cfg, table)
+            nxt = sample_tokens(cfg, logits, keys, steps + j)
+            ok = jnp.isfinite(logits.astype(jnp.float32)).all(axis=-1)
+            return (cch, nxt), (nxt, ok, _spec_state_leaves(cch))
+
+        (cache, _), (dtoks, doks, vstates) = jax.lax.scan(
+            draft, (cache, token), jnp.arange(k, dtype=_i32)
+        )
+
+        # expanded-batch verify view: row (j, s) = slot s about to consume
+        # input j, so its state is S_j (pre-draft snapshot for j=0, the
+        # draft scan's post-step state otherwise)
+        view = {n: cache[n] for n in cache if n not in vstates}
+        for name, st in vstates.items():
+            ax = cache_batch_axis(cfg, name)
+            pre = jnp.concatenate([snap[name][None], st[:-1]], axis=0)
+            arr = jnp.moveaxis(pre, 0, ax)  # (..., k, B, ...)
+            view[name] = arr.reshape(
+                arr.shape[:ax] + (-1,) + arr.shape[ax + 2:]
+            )
+        inputs = jnp.concatenate([token[None], dtoks[:-1]], axis=0)  # (k, B)
+        xkeys = jnp.tile(keys, (k, 1))
+        xsteps = (
+            jnp.tile(steps, (k,))
+            + jnp.repeat(jnp.arange(k, dtype=steps.dtype), steps.shape[0])
+        )
+        _, logits = TF.lm_decode_step(
+            params, view, inputs.reshape(-1), cfg,
+            jnp.tile(table, (k, 1)), kv_write=False,
+        )
+        vtoks = sample_tokens(cfg, logits, xkeys, xsteps).reshape(inputs.shape)
+        voks = (
+            jnp.isfinite(logits.astype(jnp.float32))
+            .all(axis=-1).reshape(inputs.shape)
+        )
+        return cache, dtoks.T, doks.T, vtoks.T, voks.T, vstates
+
+    return spec_round
+
+
+def make_spec_rollback(cfg: ModelConfig):
+    """Roll ONE slot back to the post-acceptance state of a rejected round.
+
+    (paged_cache, vstates {leaf: (k, ...)}, idx int32, slot int32) →
+    paged_cache.  ``vstates[leaf][idx]`` is the round's per-slot state
+    after consuming the last accepted input (the verify inputs ARE the
+    drafts, so the draft scan's post-step states are bitwise the states a
+    plain engine would hold at that point; ``pos`` included, so the
+    slot's position rewinds with its recurrent/SSM state in one shot).  Drafted
+    K/V beyond the rollback position stays in the pages as dead rows:
+    positions ≥ ``pos`` are masked to exact-zero attention weight and the
+    rows are overwritten verbatim when decode reaches them again.  Both
+    ``idx`` and ``slot`` are traced — ONE compile per engine lifetime
+    (shapes are fixed by ``k``).
+    """
+    if cfg.family == "encdec":
+        raise ValueError("paged serving is token-LM only (no encdec)")
+
+    def rollback(cache: dict, vstates: dict, idx, slot) -> dict:
+        out = dict(cache)
+        for name, st in vstates.items():
+            leaf = cache[name]
+            ax = cache_batch_axis(cfg, name)
+            row = jax.lax.dynamic_index_in_dim(st, idx, axis=0, keepdims=False)
+            row = jax.lax.dynamic_slice_in_dim(row, slot, 1, axis=ax)
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, row.astype(leaf.dtype), slot, axis=ax
+            )
+        return out
+
+    return rollback
 
 
 def make_paged_state_insert(cfg: ModelConfig):
@@ -242,7 +386,8 @@ def paged_cache_shardings(
 
 
 def make_sharded_paged_entry_points(
-    cfg: ModelConfig, mesh, *, batch: int, n_pages: int, block_size: int
+    cfg: ModelConfig, mesh, *, batch: int, n_pages: int, block_size: int,
+    speculate_k: int = 0,
 ) -> dict:
     """The paged serving entry points, jitted mesh-aware.
 
@@ -282,7 +427,13 @@ def make_sharded_paged_entry_points(
     "shardings"}`` where ``shardings`` maps
     ``params/cache/table/slot_vec/slot_keys/replicated`` to the
     NamedShardings used — the engine places its host→device transfers
-    (``jax.device_put``) with exactly these.
+    (``jax.device_put``) with exactly these.  With ``speculate_k > 0``
+    the dict also carries ``spec_round`` / ``spec_rollback``
+    (:func:`make_paged_spec_round` / :func:`make_spec_rollback`): the
+    round's per-slot inputs shard like the serve step's, the stacked
+    per-step verifier states shard like their cache leaves with a
+    replicated leading step axis, and the rollback donates the cache like
+    every other admission-time mutation.
     """
     from jax.sharding import NamedSharding, PartitionSpec
     from repro.launch import sharding as SH
@@ -358,7 +509,7 @@ def make_sharded_paged_entry_points(
         in_shardings=(cache_sh, rep),
         out_shardings=rep,
     )
-    return {
+    out = {
         "serve_step": serve_step,
         "suffix_prefill": suffix_prefill,
         "state_insert": state_insert,
@@ -375,6 +526,30 @@ def make_sharded_paged_entry_points(
             "replicated": rep,
         },
     }
+    if speculate_k:
+        sds = paged_decode_cache_specs(cfg, batch, n_pages, block_size)
+        # stacked per-step verifier states: cache-leaf sharding with a
+        # replicated leading step axis
+        stacked_sh = {
+            n: NamedSharding(
+                mesh, PartitionSpec(None, *tuple(cache_sh[n].spec))
+            )
+            for n in sds
+            if n not in PAGE_POOL_LEAVES and n != "quant_step"
+        }
+        out["spec_round"] = jax.jit(
+            make_paged_spec_round(cfg, speculate_k),
+            donate_argnums=(1,),
+            in_shardings=(params_sh, cache_sh, mat_sh, vec_sh, mat_sh, vec_sh),
+            out_shardings=(cache_sh, mat_sh, mat_sh, mat_sh, mat_sh, stacked_sh),
+        )
+        out["spec_rollback"] = jax.jit(
+            make_spec_rollback(cfg),
+            donate_argnums=(0,),
+            in_shardings=(cache_sh, stacked_sh, rep, rep),
+            out_shardings=cache_sh,
+        )
+    return out
 
 
 def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):

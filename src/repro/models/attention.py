@@ -575,6 +575,7 @@ def paged_decode_self_attention(
     k_scale_pages: Optional[jax.Array] = None,  # (P, bs, Hkv) int8 pools
     v_scale_pages: Optional[jax.Array] = None,
     quant_seed: Optional[jax.Array] = None,     # uint32 scalar, int8 pools
+    write: bool = True,
 ):
     """One-token attention against a paged (block-table) KV cache.
 
@@ -602,7 +603,15 @@ def paged_decode_self_attention(
     if use_rope:
         q = apply_rope(q, pos[:, None], cfg.rope_theta)
         k = apply_rope(k, pos[:, None], cfg.rope_theta)
-    if int8_pool:
+    if not write:
+        # speculative-verify re-read: the draft step already wrote this
+        # position's K/V (bit-identical rows — same inputs, same seed
+        # trajectory), so the verifier attends the pages as they are.
+        # Skipping the write keeps the pool untouched (int8 pools would
+        # otherwise re-quantize under a different quant_step and change
+        # bits) and lets the caller drop the pool from its scan carry.
+        pass
+    elif int8_pool:
         from repro.kernels import ops as KOPS
 
         k8, ks, v8, vs = KOPS.quantize_kv_pair_int8(k, v, quant_seed)

@@ -362,6 +362,14 @@ def init_paged_decode_cache(
     return cache
 
 
+# shared-pool cache leaves (block-table addressed); everything else in a
+# paged cache is dense per-slot state.  launch.specs re-exports this as
+# PAGE_POOL_LEAVES — keep the two in sync.
+PAGE_POOL_LEAVES = (
+    "k_pages", "v_pages", "k_scale_pages", "v_scale_pages"
+)
+
+
 def _unit_decode(
     x: jax.Array,         # (B,1,D)
     up: dict,
@@ -371,10 +379,20 @@ def _unit_decode(
     table: Optional[jax.Array] = None,  # (B, W) block table (paged cache)
     uidx: jax.Array | int = 0,          # unit index (seeds int8 rounding)
     quant_base: Optional[jax.Array] = None,  # engine-wide decode counter
+    kv_write: bool = True,
 ) -> tuple[jax.Array, dict]:
-    new_cache = dict(ucache)
+    # kv_write=False is the speculative-verify cell: identical math, but
+    # the K/V pool is read-only (the draft steps already wrote these
+    # positions) and the pool leaves are dropped from the returned cache
+    # so a scan over verify cells never carries or re-stacks the pool.
     paged = "k_pages" in ucache
     int8_pool = "k_scale_pages" in ucache
+    if kv_write:
+        new_cache = dict(ucache)
+    else:
+        new_cache = {
+            k: v for k, v in ucache.items() if k not in PAGE_POOL_LEAVES
+        }
     i_attn = i_rec = i_ssm = 0
     for i, kind in enumerate(cfg.layer_pattern):
         sub = up[f"l{i}"]
@@ -383,7 +401,12 @@ def _unit_decode(
             # the norm/FFN tail below is shared so the layouts cannot drift
             if paged:
                 scale_kw = {}
-                if int8_pool:
+                if not kv_write and int8_pool:
+                    scale_kw = dict(
+                        k_scale_pages=ucache["k_scale_pages"][i_attn],
+                        v_scale_pages=ucache["v_scale_pages"][i_attn],
+                    )
+                elif int8_pool:
                     # per-(decode step, unit, sublayer) counter-PRNG seed:
                     # quant_base ticks monotonically per lm_decode_step, so
                     # every cache write draws fresh unbiased rounding noise
@@ -411,22 +434,24 @@ def _unit_decode(
                     pos,
                     cfg,
                     kind=kind,
+                    write=kv_write,
                     **scale_kw,
                 )
                 a, kp, vp = res[:3]
-                new_cache["k_pages"] = (
-                    new_cache["k_pages"].at[i_attn].set(kp)
-                )
-                new_cache["v_pages"] = (
-                    new_cache["v_pages"].at[i_attn].set(vp)
-                )
-                if int8_pool:
-                    new_cache["k_scale_pages"] = (
-                        new_cache["k_scale_pages"].at[i_attn].set(res[3])
+                if kv_write:
+                    new_cache["k_pages"] = (
+                        new_cache["k_pages"].at[i_attn].set(kp)
                     )
-                    new_cache["v_scale_pages"] = (
-                        new_cache["v_scale_pages"].at[i_attn].set(res[4])
+                    new_cache["v_pages"] = (
+                        new_cache["v_pages"].at[i_attn].set(vp)
                     )
+                    if int8_pool:
+                        new_cache["k_scale_pages"] = (
+                            new_cache["k_scale_pages"].at[i_attn].set(res[3])
+                        )
+                        new_cache["v_scale_pages"] = (
+                            new_cache["v_scale_pages"].at[i_attn].set(res[4])
+                        )
             else:
                 int8 = cfg.kv_cache_dtype == "int8"
                 res = ATT.decode_self_attention(
@@ -498,12 +523,18 @@ def lm_decode_step(
     token: jax.Array,  # (B,) int32 — last emitted token
     cfg: ModelConfig,
     table: Optional[jax.Array] = None,  # (B, W) block table (paged cache)
+    kv_write: bool = True,
 ) -> tuple[dict, jax.Array]:
     """One decode step; returns (new cache, logits (B,V)).
 
     With a paged cache (``k_pages`` leaves + a block ``table``) attention
     reads/writes go through the block pool; the recurrence is otherwise
-    identical to the dense path."""
+    identical to the dense path.
+
+    ``kv_write=False`` is the speculative-verify mode: byte-for-byte the
+    same math, but attention treats the pool as read-only (the draft
+    already wrote these rows) and the returned cache carries only the
+    dense per-slot leaves — no pool leaves, no ``quant_step`` tick."""
     pos = cache["pos"]
     qstep = cache.get("quant_step")  # int8 paged pools only
     x = embed(params["embed"], token[:, None], cfg)
@@ -511,7 +542,9 @@ def lm_decode_step(
     def body(carry, xs):
         h = carry
         up, uc, uidx = xs
-        h, uc_new = _unit_decode(h, up, uc, pos, cfg, table, uidx, qstep)
+        h, uc_new = _unit_decode(
+            h, up, uc, pos, cfg, table, uidx, qstep, kv_write
+        )
         return h, uc_new
 
     layer_cache = {
@@ -534,7 +567,7 @@ def lm_decode_step(
     logits = logits_out(params["embed"], params.get("head"), x, cfg)
     new_cache = dict(new_layer_cache)
     new_cache["pos"] = pos + 1
-    if qstep is not None:
+    if qstep is not None and kv_write:
         new_cache["quant_step"] = qstep + 1
     return new_cache, logits[:, 0, :]
 
@@ -560,6 +593,7 @@ def lm_prefill_chunk(
     q0: jax.Array,         # () int32 absolute position of the chunk start
     bucket: int,           # static padded prompt length
     quant_seeds: Optional[jax.Array] = None,  # (nbc,) uint32, int8 pools
+    all_logits: bool = False,
 ) -> tuple[dict, dict, jax.Array]:
     """One chunk of a resumable paged prefill.
 
@@ -576,7 +610,11 @@ def lm_prefill_chunk(
 
     Returns (pool', state', last-token logits (1, V)); ``state'`` is the
     boundary snapshot the engine stashes in the prefix index so a later
-    partial-prefix hit can resume exactly here.
+    partial-prefix hit can resume exactly here.  With ``all_logits`` the
+    logits output is (1, c, V) — every chunk row, not just the last: the
+    multi-token-logits variant that lets a k-token chunk act as a
+    one-call verifier/oracle over k decode positions (row ``i`` is the
+    next-token distribution after absolute position ``q0 + i``).
     """
     b, c = tokens.shape
     x = embed(params["embed"], tokens, cfg)
@@ -672,10 +710,11 @@ def lm_prefill_chunk(
         unroll=True if cfg.cost_exact else 1,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = logits_out(params["embed"], params.get("head"), x[:, -1:, :], cfg)
+    rows = x if all_logits else x[:, -1:, :]
+    logits = logits_out(params["embed"], params.get("head"), rows, cfg)
     new_state = dict(new_layer_state)
     new_state["pos"] = jnp.full((b,), q0 + c, jnp.int32)
-    return new_pool, new_state, logits[:, 0, :]
+    return new_pool, new_state, logits if all_logits else logits[:, 0, :]
 
 
 def lm_prefill(

@@ -164,6 +164,27 @@ class ServeConfig:
     # replicate (divisibility guards).  A 1×1 mesh is byte-identical to
     # mesh=None (tests/test_serving.py pins it).
     mesh: Optional[Any] = None
+    # paged layout only: self-speculative decoding depth.  k > 0 turns
+    # each decode tick into ONE fused draft-k → verify-k device round:
+    # every decoding slot drafts k chained tokens (the analog/int8 decode
+    # step, K/V written into its reserved pages), then the whole drafted
+    # run is re-decoded read-only from the pre-draft state snapshot and
+    # accepted up to the first verifier disagreement — which also IS the
+    # corrected resample.  Greedy (and per-slot-keyed WTA) streams are
+    # byte-identical to speculate_k=0; the win is k tokens per host
+    # round-trip instead of one.  A rejected tail rolls pos + recurrent
+    # state back through the verifier's per-step states; drafted K/V
+    # beyond the rollback point is masked dead rows, overwritten later.
+    speculate_k: int = 0
+    # paged layout only: bytes cap on the host-side preemption spill
+    # store (None = unbounded, the PR-7 behavior).  At the cap the OLDEST
+    # records drop first (insertion order — records are only touched
+    # again when popped for restore); a dropped record's request
+    # re-admits through the normal fresh gate and recomputes its prompt,
+    # then teacher-forces its already-published tokens back through the
+    # ordinary decode path (deterministic per (key, step), so the
+    # recomputed stream is the published one — nothing re-publishes).
+    spill_budget_bytes: Optional[int] = None
 
     def buckets(self) -> tuple[int, ...]:
         if not self.prefill_buckets:
@@ -280,6 +301,36 @@ class ServeConfig:
                     f"serving mesh needs ('data', 'model') axes, got "
                     f"{sorted(names)}"
                 )
+        if self.speculate_k < 0:
+            raise ValueError(
+                f"speculate_k must be >= 0, got {self.speculate_k}"
+            )
+        if self.speculate_k:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "speculate_k > 0 drafts through the paged block pool; "
+                    "the dense layout is the plain-decode byte-identity "
+                    "oracle and cannot speculate"
+                )
+            if self.speculate_k >= self.max_new_tokens:
+                # a draft run at least as long as the whole decode budget
+                # can never amortize anything — it would overrun the
+                # budget on round one and discard most of its work
+                raise ValueError(
+                    f"speculate_k={self.speculate_k} must be < the decode "
+                    f"budget max_new_tokens={self.max_new_tokens}"
+                )
+        if self.spill_budget_bytes is not None:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "spill_budget_bytes bounds the paged preemption spill "
+                    "store; the dense layout never spills"
+                )
+            if self.spill_budget_bytes < 0:
+                raise ValueError(
+                    f"spill_budget_bytes must be >= 0, got "
+                    f"{self.spill_budget_bytes}"
+                )
 
 
 @dataclasses.dataclass
@@ -305,6 +356,12 @@ class ServingMetrics:
     ttft_p99: float = 0.0
     preemptions: int = 0          # spill-to-host preemptions
     restores: int = 0             # spilled requests re-admitted
+    spill_drops: int = 0          # spill records dropped by the bytes budget
+    spec_rounds: int = 0          # fused draft+verify rounds dispatched
+    spec_drafted: int = 0         # draft tokens considered by acceptance
+    spec_accepted: int = 0        # drafted tokens accepted verbatim
+    spec_acceptance: float = 0.0  # accepted / drafted
+    spec_tokens_per_round: float = 0.0  # tokens emitted per verify call
     # done_reason -> count over every finished request ("eos"/"length" are
     # natural completions; "deadline"/"nan"/"preempted" are evictions)
     evictions: dict = dataclasses.field(default_factory=dict)
@@ -326,6 +383,13 @@ class ServingMetrics:
         )
         if self.preemptions or self.restores:
             out += f" preempt={self.preemptions} restore={self.restores}"
+        if self.spill_drops:
+            out += f" spill_drops={self.spill_drops}"
+        if self.spec_rounds:
+            out += (
+                f" spec_acc={self.spec_acceptance:.2f} "
+                f"spec_tok_per_round={self.spec_tokens_per_round:.1f}"
+            )
         if self.evictions:
             out += " evict=" + ",".join(
                 f"{k}:{v}" for k, v in sorted(self.evictions.items())
@@ -347,6 +411,7 @@ class ServingEngine:
         self.int8 = self.paged and model_cfg.kv_cache_dtype == "int8"
         self.sharing = self.paged and cfg.enable_prefix_sharing
         self.mesh = cfg.mesh if self.paged else None
+        self.spec_k = cfg.speculate_k if self.paged else 0
         self.params = params
         self.mcfg = model_cfg
         self.cfg = cfg
@@ -371,6 +436,7 @@ class ServingEngine:
                     model_cfg, self.mesh, batch=b,
                     n_pages=cfg.pool_blocks(model_cfg.kv_cache_dtype),
                     block_size=cfg.kv_block_size,
+                    speculate_k=self.spec_k,
                 )
                 self._serve_step = eps["serve_step"]
                 self._suffix_prefill = eps["suffix_prefill"]
@@ -379,6 +445,9 @@ class ServingEngine:
                 self._page_spill = eps["page_spill"]
                 self._page_restore = eps["page_restore"]
                 self._state_gather = eps["state_gather"]
+                if self.spec_k:
+                    self._spec_round = eps["spec_round"]
+                    self._spec_rollback = eps["spec_rollback"]
                 self._shardings = eps["shardings"]
                 # params live replicated on the mesh — placed ONCE here,
                 # not re-transferred per call
@@ -430,6 +499,20 @@ class ServingEngine:
                 self._state_gather = jax.jit(
                     SP.make_slot_state_gather(model_cfg)
                 )
+                if self.spec_k:
+                    # speculative entry points: the fused draft+verify
+                    # round (one compile per (window, k) pair — same
+                    # power-of-two window bucketing as serve_step) and
+                    # the single-slot rollback (idx + slot traced, ONE
+                    # compile for the engine's lifetime)
+                    self._spec_round = jax.jit(
+                        SP.make_paged_spec_round(model_cfg, self.spec_k),
+                        donate_argnums=(1,),
+                    )
+                    self._spec_rollback = jax.jit(
+                        SP.make_spec_rollback(model_cfg),
+                        donate_argnums=(0,),
+                    )
             self._sample0 = jax.jit(
                 lambda logits, key: SP.sample_tokens(
                     model_cfg, logits, key[None, :],
@@ -452,8 +535,11 @@ class ServingEngine:
             self._job_fifo: list[int] = []
             # rid -> spill record of a preempted request (host np copies of
             # its pool pages + per-slot leaves + decode counters); consumed
-            # by the restore branch of the gate / _admit_one
+            # by the restore branch of the gate / _admit_one.  Insertion
+            # order doubles as the drop order under
+            # ``cfg.spill_budget_bytes`` (oldest first — see _store_spill)
             self._spill: dict[int, dict] = {}
+            self._spill_bytes = 0
             # recurrent/SSM families can only resume a partial-prefix hit
             # at a chunk boundary whose state snapshot is stashed;
             # attention-only families resume at any matched block
@@ -475,9 +561,19 @@ class ServingEngine:
         self._req_keys = np.zeros((b, 2), np.uint32)
         self._steps = np.zeros((b,), np.int32)    # tokens emitted, per slot
         self._injector = cfg.fault_injector if self.paged else None
+        # rid -> already-published tokens a recompute-restored request must
+        # teacher-force through decode instead of re-recording (set when a
+        # spill record is dropped by the bytes budget; always empty for
+        # the dense layout)
+        self._replay: dict[int, list[int]] = {}
         self._ticks = 0
         self._preemptions = 0
         self._restores = 0
+        self._spill_drops = 0
+        self._spec_rounds = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._spec_emitted = 0
         self._occ_sum = 0.0
         self._decode_steps = 0
         self._prefills = 0
@@ -846,7 +942,7 @@ class ServingEngine:
         function of the rid — and WTA noise is a function of (key, step)).
         No token is recorded here: the request resumes mid-stream.
         """
-        rec = self._spill.pop(req.rid)
+        rec = self._pop_spill(req.rid)
         slot = req.slot
         pages = self.blocks.owned(req.rid)
         row = np.zeros((self._max_blocks,), np.int32)
@@ -875,6 +971,18 @@ class ServingEngine:
         """Shared admission tail: first token, decode start, bookkeeping."""
         slot = req.slot
         self.sched.start_decode(req)
+        rep = self._replay.get(req.rid)
+        if rep:
+            # recompute-restore of a dropped spill record: the first
+            # `len(rep)` tokens were already published before the
+            # preemption — seed decode with the recorded first token
+            # (bitwise what `tok0` just resampled) and teacher-force the
+            # rest through the ordinary ticks; nothing re-records
+            self._tokens[slot] = rep.pop(0)
+            if not rep:
+                del self._replay[req.rid]
+            self._steps[slot] = 1
+            return
         t0 = int(tok0[0])  # blocks on the prefill — TTFT stamps after it
         self._tokens[slot] = t0
         self._steps[slot] = 1
@@ -911,6 +1019,54 @@ class ServingEngine:
 
     # -- preemption / eviction ----------------------------------------------
 
+    @staticmethod
+    def _spill_nbytes(rec: dict) -> int:
+        """Host bytes a spill record pins: its page payload + state leaves
+        (the np arrays — counters and ints are noise).  The bytes-based KV
+        cost framing: a record's weight is what its K/V actually costs at
+        the pool dtype, so int8 records charge half the budget of bf16
+        ones for the same token count."""
+        return int(sum(
+            leaf.nbytes
+            for leaf in jax.tree.leaves((rec["pages"], rec["state"]))
+        ))
+
+    def _pop_spill(self, rid: int) -> Optional[dict]:
+        """Remove a spill record (restore / cancel), keeping the bytes
+        accounting exact.  Returns the record, or None if it was never
+        stored — or already dropped by the budget."""
+        rec = self._spill.pop(rid, None)
+        if rec is not None:
+            self._spill_bytes -= self._spill_nbytes(rec)
+        return rec
+
+    def _store_spill(self, rid: int, rec: dict) -> None:
+        """Insert a spill record, then enforce ``spill_budget_bytes``.
+
+        Over the cap, the OLDEST records drop first (dict insertion order
+        — a record is only ever touched again when popped for restore, so
+        age IS recency).  The just-inserted record is eligible too: a
+        single record larger than the whole budget drops immediately.  A
+        dropped record's request stays queued and re-admits through the
+        normal fresh gate — full grid-aligned prompt recompute through
+        the chunked prefill (prefix hits still apply) — and its
+        already-published tokens move to ``_replay``: decode teacher-
+        forces them back, re-deriving the decoded tail's K/V bit-for-bit
+        without re-publishing anything (greedy/WTA sampling is a pure
+        function of (key, step), so the recomputed tokens ARE the
+        published ones).
+        """
+        self._spill[rid] = rec
+        self._spill_bytes += self._spill_nbytes(rec)
+        budget = self.cfg.spill_budget_bytes
+        if budget is None:
+            return
+        while self._spill and self._spill_bytes > budget:
+            old_rid = next(iter(self._spill))
+            old = self._pop_spill(old_rid)
+            self._replay[old_rid] = list(old["replay"])
+            self._spill_drops += 1
+
     def _preempt(self, req: Request) -> None:
         """Spill a DECODING request to the host-side store and requeue it.
 
@@ -939,7 +1095,7 @@ class ServingEngine:
             np.asarray,
             self._state_gather(self._cache, slot),
         )
-        self._spill[rid] = {
+        self._store_spill(rid, {
             "bucket": bucket,
             "n_used": n_used,
             "pos": pos,
@@ -951,7 +1107,11 @@ class ServingEngine:
             "state": state,
             "token": int(self._tokens[slot]),
             "steps": int(self._steps[slot]),
-        }
+            # published so far — the replay list if this record is later
+            # dropped by the bytes budget (frozen: a queued request
+            # publishes nothing until it decodes again)
+            "replay": list(req.output),
+        })
         self.blocks.free(rid)
         self._table[slot, :] = 0
         self.sched.requeue(req)
@@ -997,7 +1157,8 @@ class ServingEngine:
             self.sched.cancel(req, reason, now)
             if self.paged:
                 self._hash_memo.pop(req.rid, None)
-                self._spill.pop(req.rid, None)
+                self._pop_spill(req.rid)
+                self._replay.pop(req.rid, None)
         elif req.state is RequestState.PREFILL:
             if self.paged:
                 self._kill_job(req)
@@ -1289,10 +1450,21 @@ class ServingEngine:
         if self.paged:
             self._prefill_tick(emitted)
         active = self.sched.active()
+        # speculate only when every draft write stays inside max_len —
+        # near-capacity tails fall back to plain single-token ticks, so
+        # an overrun can never clamp into a slot's live final block
+        spec_now = (
+            bool(active) and self.spec_k > 0 and self._spec_viable(active)
+        )
         if active and self.sharing:
-            self._cow_pass(active)
+            self._cow_pass(active, self.spec_k if spec_now else 1)
         if active:
             t_dec = time.perf_counter()
+            if spec_now:
+                self._spec_tick(active, emitted)
+                self._decode_time += time.perf_counter() - t_dec
+                self._busy_time += time.perf_counter() - t_start
+                return emitted
             ok_np = None
             if self.paged:
                 w = self._window_blocks(active)
@@ -1328,6 +1500,16 @@ class ServingEngine:
                     self._evict_request(req, "nan", now)
                     continue
                 t = int(nxt_np[slot])
+                rep = self._replay.get(req.rid)
+                if rep is not None:
+                    # teacher-force the next already-published token (the
+                    # sampled one is bitwise the same in a fault-free
+                    # run); nothing re-records or re-publishes
+                    self._tokens[slot] = rep.pop(0)
+                    if not rep:
+                        del self._replay[req.rid]
+                    self._steps[slot] += 1
+                    continue
                 self._tokens[slot] = t
                 self._steps[slot] += 1
                 self._total_tokens += 1
@@ -1337,11 +1519,138 @@ class ServingEngine:
         self._busy_time += time.perf_counter() - t_start
         return emitted
 
-    def _cow_pass(self, active: list[Request]) -> None:
+    def _spec_viable(self, active: list[Request]) -> bool:
+        """True when a k-deep draft run cannot write past ``max_len`` for
+        any decoding slot (overruns past a slot's RESERVATION are fine —
+        they land in the trash page — but a write past the table width
+        would clamp into the slot's own last block)."""
+        lim = self.cfg.max_len - self.spec_k
+        return all(int(self._host_pos[r.slot]) <= lim for r in active)
+
+    def _spec_tick(self, active: list[Request], emitted: list) -> None:
+        """One fused self-speculative round for every decoding slot.
+
+        Device side: ONE dispatch drafts k chained tokens per slot (the
+        plain decode cell, K/V into the reserved pages, identical int8
+        ``quant_step`` trajectory) and re-decodes the run read-only from
+        the pre-draft snapshot (see :func:`SP.make_paged_spec_round`).
+        Host side: per slot, accept drafts until the verifier's resample
+        disagrees — the disagreeing resample is itself the corrected
+        token, exactly what the plain engine would have emitted, so
+        greedy and per-slot-keyed WTA streams stay byte-identical to
+        ``speculate_k=0``.  A rejected (or short) round rolls the slot
+        back through the verifier's per-step states; drafted K/V beyond
+        the rollback position is masked dead rows.  The NaN guard moves
+        to draft depth: a non-finite draft step truncates the usable run
+        and, if everything before it accepted, evicts with reason
+        ``"nan"`` exactly like a plain tick would have.
+        """
+        k = self.spec_k
+        w = self._window_blocks(active, k)
+        pre_pos = self._host_pos.copy()
+        pre_steps = self._steps.copy()
+        self._cache, dtoks, doks, vtoks, _voks, vstates = self._spec_round(
+            self.params,
+            self._cache,
+            self._put(self._table[:, :w], "table"),
+            self._put(self._tokens, "slot_vec"),
+            self._put(self._req_keys, "slot_keys"),
+            self._put(self._steps, "slot_vec"),
+        )
+        d_np = np.asarray(dtoks)   # device sync — decode_time is honest
+        dok_np = np.asarray(doks)
+        v_np = np.asarray(vtoks)
+        self._host_pos += k  # mirrors the draft scan's k pos bumps
+        now = time.perf_counter()
+        self._occ_sum += len(active) / self.cfg.max_batch
+        self._decode_steps += 1
+        self._spec_rounds += 1
+        for req in active:
+            slot = req.slot
+            # usable drafts stop at the first non-finite draft step
+            m = k
+            for j in range(k):
+                if not bool(dok_np[slot, j]):
+                    m = j
+                    break
+            if m == 0:
+                self._evict_request(req, "nan", now)
+                continue
+            self._spec_drafted += m
+            req.spec_drafted += m
+            req.spec_high = max(req.spec_high, int(pre_pos[slot]) + m - 1)
+            e = 0              # tokens consumed from this round
+            done = False
+            rollback_at = None  # verify-state index to roll back to
+            for i in range(m):
+                t_d = int(d_np[slot, i])
+                rep = self._replay.get(req.rid)
+                if rep is not None:
+                    # teacher-forced replay of already-published tokens:
+                    # consumed without re-recording.  A forced token that
+                    # disagrees with its draft (possible only under
+                    # injected faults) truncates the round right there —
+                    # the verifier state after consuming the inputs so
+                    # far is still published-stream-exact
+                    forced = rep.pop(0)
+                    if not rep:
+                        del self._replay[req.rid]
+                    self._tokens[slot] = forced
+                    e += 1
+                    if forced != t_d:
+                        rollback_at = i
+                        break
+                    continue
+                t = int(v_np[slot, i])  # == draft when accepted
+                self._tokens[slot] = t
+                e += 1
+                accepted = t == t_d
+                if accepted:
+                    self._spec_accepted += 1
+                    req.spec_accepted += 1
+                self._total_tokens += 1
+                done = self.sched.record_token(
+                    req, t, self.cfg.eos_token, now
+                )
+                emitted.append((req.rid, t))
+                if done:
+                    break
+                if not accepted:
+                    rollback_at = i
+                    break
+            self._spec_emitted += e
+            if done:
+                self._release_if_done(req)
+                continue
+            if rollback_at is not None:
+                # rejected tail: rewind pos + recurrent/SSM state to the
+                # verifier's recomputed state after the last consumed
+                # input — bitwise the plain engine's state at that point
+                self._cache = self._spec_rollback(
+                    self._cache,
+                    vstates,
+                    self._put(np.int32(rollback_at), "replicated"),
+                    self._put(np.int32(slot), "replicated"),
+                )
+                self._host_pos[slot] = int(pre_pos[slot]) + e
+            elif m < k:
+                # every usable draft accepted and the NEXT draft step went
+                # non-finite from exactly this state — the plain engine's
+                # next tick would have hit the same logits
+                self._evict_request(req, "nan", now)
+                continue
+            self._steps[slot] = int(pre_steps[slot]) + e
+
+    def _cow_pass(self, active: list[Request], span: int = 1) -> None:
         """Resolve copy-on-write state BEFORE the batched decode step.
 
         Each active slot is about to write its K/V row into block
-        ``pos // block_size`` of its table.  If that page is still shared
+        ``pos // block_size`` of its table — or, for a speculative round,
+        into every block the k-deep draft run touches
+        (``span`` > 1; only the FIRST can be shared, since decode-budget
+        blocks past the prompt boundary are always freshly reserved, so
+        the one-spare-per-request COW invariant holds unchanged).  If a
+        write-span page is still shared
         (refcount > 1) the writer forks: its reserved spare page gets a
         device-side copy of the pristine content and the table row is
         repointed, so the write lands privately while the other owners
@@ -1358,32 +1667,36 @@ class ServingEngine:
         """
         bs = self.cfg.kv_block_size
         for req in active:
-            wb = int(self._host_pos[req.slot]) // bs
-            if wb >= self._max_blocks:
-                continue
-            page = int(self._table[req.slot, wb])
-            if page < self.blocks.n_reserved:
-                continue  # trash row of an already-evicted slot
-            if (
-                self.blocks.refcount(page) > 1
-                and self.blocks.spare_count(req.rid) > 0
-            ):
-                _, new = self.blocks.cow_fork(req.rid, wb)
-                self._cache = self._page_copy(self._cache, page, new)
-                self._table[req.slot, wb] = new
-                self._cow_forks += 1
-            else:
-                self.blocks.deregister(page)  # no-op if never registered
+            p = int(self._host_pos[req.slot])
+            last = min((p + span - 1) // bs, self._max_blocks - 1)
+            for wb in range(p // bs, last + 1):
+                page = int(self._table[req.slot, wb])
+                if page < self.blocks.n_reserved:
+                    continue  # trash row of an already-evicted slot
+                if (
+                    self.blocks.refcount(page) > 1
+                    and self.blocks.spare_count(req.rid) > 0
+                ):
+                    _, new = self.blocks.cow_fork(req.rid, wb)
+                    self._cache = self._page_copy(self._cache, page, new)
+                    self._table[req.slot, wb] = new
+                    self._cow_forks += 1
+                else:
+                    self.blocks.deregister(page)  # no-op if unregistered
 
-    def _window_blocks(self, active: list[Request]) -> int:
+    def _window_blocks(self, active: list[Request], span: int = 1) -> int:
         """Decode window width in blocks for this tick.
 
         The smallest power-of-two block count covering every active slot's
-        current position — power-of-two bucketing keeps the number of
-        distinct (table-width) step compiles logarithmic in max_len while
-        the window still tracks the *occupied* prefix, not max_len."""
+        current position (plus the ``span`` positions a speculative round
+        writes) — power-of-two bucketing keeps the number of distinct
+        (table-width) step compiles logarithmic in max_len while the
+        window still tracks the *occupied* prefix, not max_len."""
         bs = self.cfg.kv_block_size
-        need = max(int(self._host_pos[r.slot]) // bs + 1 for r in active)
+        need = max(
+            (int(self._host_pos[r.slot]) + span - 1) // bs + 1
+            for r in active
+        )
         w = 1
         while w < need:
             w *= 2
@@ -1464,6 +1777,16 @@ class ServingEngine:
             ttft_p99=_pctl(ttfts, 99),
             preemptions=self._preemptions,
             restores=self._restores,
+            spill_drops=self._spill_drops,
+            spec_rounds=self._spec_rounds,
+            spec_drafted=self._spec_drafted,
+            spec_accepted=self._spec_accepted,
+            spec_acceptance=(
+                self._spec_accepted / max(self._spec_drafted, 1)
+            ),
+            spec_tokens_per_round=(
+                self._spec_emitted / max(self._spec_rounds, 1)
+            ),
             evictions=evictions,
             latency_by_class=by_class,
         )
@@ -1488,6 +1811,11 @@ class ServingEngine:
             counts["page_spill"] = self._page_spill._cache_size()
             counts["page_restore"] = self._page_restore._cache_size()
             counts["state_gather"] = self._state_gather._cache_size()
+            if self.spec_k:
+                counts["spec_round"] = self._spec_round._cache_size()
+                counts["spec_rollback"] = (
+                    self._spec_rollback._cache_size()
+                )
         else:
             counts["prefill"] = self._prefill._cache_size()
             counts["insert"] = self._insert._cache_size()

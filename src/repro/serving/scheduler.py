@@ -88,6 +88,16 @@ class Request:
     deadline_ms: Optional[float] = None
     # how many times this request was preempted (spilled + requeued)
     preemptions: int = 0
+    # self-speculative decoding state (paged engine, speculate_k > 0):
+    # draft tokens this request's slot put through acceptance, how many
+    # were accepted verbatim, and the dirty high-water mark — the highest
+    # absolute position a draft run has WRITTEN K/V into, which may run
+    # ahead of ``pos`` after a rejection (those rows are masked dead
+    # weight until decode reaches them again); always within the
+    # request's block reservation plus the trash page
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_high: int = 0
 
     @property
     def ttft(self) -> Optional[float]:

@@ -218,6 +218,9 @@ def _chaos_trace(smoke, seed: int) -> None:
         prefill_chunk=rng.choice((0, 8)),
         num_kv_blocks=rng.choice((0, 9)),
         max_new_tokens=8,
+        # speculative rounds must survive the same storm: draft-depth NaN
+        # guard, preempting a speculating slot, rollback under pressure
+        speculate_k=rng.choice((0, 2, 3)),
     )
     rids = []
     for tick in range(24):

@@ -1474,3 +1474,256 @@ def test_preemption_rejected_on_dense(smoke):
             params, cfg,
             ServeConfig(kv_layout="dense", fault_injector=object()),
         )
+
+# ---------------------------------------------------------------------------
+# Self-speculative decoding (draft-k + fused verify through the paged pool)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_spec_greedy_byte_identity(arch):
+    """The speculative acceptance contract: greedy decode over the mixed
+    trace must be byte-identical speculate_k=4 vs plain — speculation
+    changes latency, never output — for pure-attention and hybrid
+    (attention + recurrent state) families."""
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    _, out_plain = _run_layout(params, cfg, "paged")
+    eng, out_spec = _run_layout(params, cfg, "paged", {"speculate_k": 4})
+    assert out_plain == out_spec
+    m = eng.metrics()
+    assert m.spec_rounds > 0 and m.spec_drafted > 0
+    # greedy drafts verify against themselves: every non-truncated draft
+    # accepts, so the only losses are budget/EOS truncation mid-round
+    assert m.spec_accepted <= m.spec_drafted
+    assert m.spec_acceptance > 0.5
+
+
+def test_spec_wta_byte_identity(smoke):
+    """WTA stochastic sampling is a pure function of (slot key, step), so
+    the draft run resamples the SAME votes the plain engine would have —
+    stochastic streams stay byte-identical under speculation too."""
+    cfg, params = smoke
+    wcfg = dataclasses.replace(cfg, wta_head=True)
+    _, out_plain = _run_layout(params, wcfg, "paged")
+    _, out_spec = _run_layout(params, wcfg, "paged", {"speculate_k": 3})
+    assert out_plain == out_spec
+
+
+def test_spec_forced_rejection_mid_run(smoke):
+    """Tamper with the REPORTED draft tokens (host side, after the device
+    round) so the engine sees a mismatch and takes the rollback path: the
+    verifier consumed the true drafts, its resample IS the plain-engine
+    token, so the published stream must stay byte-identical while
+    spec_rollback compiles exactly once and acceptance drops."""
+    cfg, params = smoke
+    _, out_plain = _run_layout(params, cfg, "paged")
+
+    sc = ServeConfig(
+        max_batch=3, max_new_tokens=8, max_len=64, kv_block_size=8,
+        kv_layout="paged", speculate_k=4,
+    )
+    eng = ServingEngine(params, cfg, sc)
+    orig = eng._spec_round
+    calls = {"n": 0}
+
+    def tampered(*a, **kw):
+        cache, d, dok, v, vok, vs = orig(*a, **kw)
+        calls["n"] += 1
+        if calls["n"] % 2 == 0:  # every other round rejects at step 1
+            d = np.asarray(d).copy()
+            d[:, 1] ^= 1
+        return cache, d, dok, v, vok, vs
+
+    eng._spec_round = tampered
+    for p, b in zip(MIXED_PROMPTS, MIXED_BUDGETS):
+        eng.submit(p, b)
+    out_spec = eng.run()
+    eng._spec_round = orig  # compile_counts reads the jitted entry point
+    assert out_plain == out_spec
+    m = eng.metrics()
+    assert calls["n"] >= 2
+    assert m.spec_accepted < m.spec_drafted  # rejections really happened
+    assert eng.compile_counts()["spec_rollback"] == 1
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_spec_preempt_restore_byte_identity(arch):
+    """Preempting a SPECULATING slot (pages spilled between rounds, slot
+    freed, restored through the admission gate) must not perturb the
+    stream: rollback state, pos, and the drafted-KV dead rows all travel
+    through spill/restore correctly."""
+    from repro.serving import FaultInjector
+
+    # speculation emits up to k tokens per TICK, so the trace drains in
+    # far fewer ticks than the plain preempt test — inject early, and a
+    # late event that finds nothing left to spill is fine (>= 1 applied)
+    inj = FaultInjector().at(1, "preempt").at(3, "preempt")
+    cfg, params, eng = _preempt_fixture(arch, injector=inj, speculate_k=3)
+    prompts = [list(range(1, 10)), list(range(2, 14))]
+    rids = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    m = eng.metrics()
+    assert m.preemptions >= 1 and m.restores == m.preemptions
+    assert m.spec_rounds > 0
+
+    _, _, ref = _preempt_fixture(arch)  # plain, unpreempted oracle
+    ref_rids = [ref.submit(p, 10) for p in prompts]
+    ref_out = ref.run()
+    for r, rr in zip(rids, ref_rids):
+        assert out[r] == ref_out[rr], arch
+
+
+def test_spec_sharded_1x1_mesh_byte_identity(smoke):
+    """The mesh-aware speculative entry points (spec_round/spec_rollback
+    from make_sharded_paged_entry_points) produce the same stream as the
+    unsharded jits on a degenerate 1x1 mesh."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg, params = smoke
+    _, base = _run_layout(params, cfg, "paged", {"speculate_k": 4})
+    _, shard = _run_layout(
+        params, cfg, "paged",
+        {"speculate_k": 4, "mesh": make_host_mesh(model=1, data=1)},
+    )
+    assert base == shard
+
+
+def test_spec_recompile_guard(smoke):
+    """One spec_round compile per decode-window width (the same
+    power-of-two bucketing as serve_step), zero rollback compiles on a
+    fault-free greedy trace, and a second identical trace through the
+    same engine compiles nothing new."""
+    cfg, params = smoke
+    eng, _ = _run_layout(params, cfg, "paged", {"speculate_k": 4})
+    counts = eng.compile_counts()
+    assert 1 <= counts["spec_round"] <= 4
+    assert counts["spec_rollback"] == 0  # greedy drafts never reject
+    for p, b in zip(MIXED_PROMPTS, MIXED_BUDGETS):
+        eng.submit(p, b)
+    eng.run()
+    assert eng.compile_counts() == counts, "steady-state trace recompiled"
+
+
+def test_spec_validation_is_loud(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="speculate_k"):
+        ServingEngine(params, cfg, ServeConfig(speculate_k=-1))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(
+            params, cfg,
+            ServeConfig(kv_layout="dense", speculate_k=2),
+        )
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        ServingEngine(
+            params, cfg,
+            ServeConfig(speculate_k=8, max_new_tokens=8),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Spill-store bytes budget (LRU drop + recompute-from-prompt restore)
+# ---------------------------------------------------------------------------
+
+
+def test_spill_budget_validation_is_loud(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="spill_budget_bytes"):
+        ServingEngine(params, cfg, ServeConfig(spill_budget_bytes=-1))
+    with pytest.raises(ValueError, match="dense"):
+        ServingEngine(
+            params, cfg,
+            ServeConfig(kv_layout="dense", spill_budget_bytes=1 << 20),
+        )
+
+
+def test_spill_budget_drop_recomputes_byte_identical(smoke):
+    """A zero budget drops EVERY spill record at insertion: the preempted
+    victim restores through the fresh-admission gate (full prompt
+    recompute + teacher-forced replay of its published tokens) and still
+    finishes byte-identical to an unpreempted run."""
+    from repro.serving import FaultInjector
+
+    cfg, params = smoke
+    inj = FaultInjector().at(4, "preempt").at(8, "preempt")
+    _, _, eng = _preempt_fixture(
+        "stablelm-3b", injector=inj, spill_budget_bytes=0
+    )
+    prompts = [list(range(1, 10)), list(range(2, 14))]
+    rids = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    m = eng.metrics()
+    assert m.preemptions == 2 and m.spill_drops == 2
+    assert eng._spill == {} and eng._spill_bytes == 0
+
+    _, _, ref = _preempt_fixture("stablelm-3b")
+    ref_rids = [ref.submit(p, 10) for p in prompts]
+    ref_out = ref.run()
+    for r, rr in zip(rids, ref_rids):
+        assert out[r] == ref_out[rr]
+
+
+def test_spill_budget_keeps_newest_drops_oldest(smoke):
+    """With a budget sized for ONE record, a tick that spills two victims
+    keeps only the newer one: the second insertion drops the first
+    (oldest — dict insertion order).  The kept victim restores from its
+    host pages (counted in ``restores``); the dropped one re-admits
+    through the fresh gate and replays — both streams stay byte-identical
+    to an unpreempted run."""
+    from repro.serving import FaultInjector
+
+    cfg, params = smoke
+    # size the budget by spying on the store at insertion time — a
+    # spilled victim restores through the admission gate later in the
+    # SAME tick (its slot and blocks are free again by then), so the
+    # store is empty whenever tick() returns and can't be probed from
+    # outside
+    probe = FaultInjector().at(3, "preempt")
+    _, _, peng = _preempt_fixture("stablelm-3b", injector=probe)
+    sizes: list[int] = []
+    orig = peng._store_spill
+
+    def spy(rid, rec):
+        orig(rid, rec)
+        sizes.append(peng._spill_bytes)
+
+    peng._store_spill = spy
+    peng.submit(list(range(1, 10)), 10)
+    for _ in range(4):
+        peng.tick()
+    assert sizes, "probe engine never spilled"
+    one = sizes[0]
+
+    # spill records are fixed-width (trash-padded page-id vectors), so
+    # both victims cost exactly `one`; preempting both in one tick puts
+    # the store over budget before either can restore
+    inj = FaultInjector().at(3, "preempt").at(3, "preempt")
+    _, _, eng = _preempt_fixture(
+        "stablelm-3b", injector=inj, spill_budget_bytes=one
+    )
+    prompts = [list(range(1, 10)), list(range(2, 14))]
+    rids = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    m = eng.metrics()
+    assert m.preemptions == 2 and m.spill_drops == 1
+    assert m.restores == 1  # only the kept (newest) record page-restores
+    assert eng.blocks.available == eng.blocks.capacity
+
+    _, _, ref = _preempt_fixture("stablelm-3b")
+    ref_rids = [ref.submit(p, 10) for p in prompts]
+    ref_out = ref.run()
+    for r, rr in zip(rids, ref_rids):
+        assert out[r] == ref_out[rr]
+
+
+def test_spill_budget_unbounded_never_drops(smoke):
+    from repro.serving import FaultInjector
+
+    cfg, params = smoke
+    inj = FaultInjector().at(4, "preempt").at(8, "preempt")
+    _, _, eng = _preempt_fixture("stablelm-3b", injector=inj)
+    for p in ([1, 2, 3, 4], list(range(2, 14))):
+        eng.submit(p, 10)
+    eng.run()
+    m = eng.metrics()
+    assert m.preemptions == 2 and m.spill_drops == 0

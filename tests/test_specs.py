@@ -586,3 +586,129 @@ def test_sample_tokens_greedy_and_legacy_key():
     toks3 = SP.sample_tokens(wcfg, logits, jax.random.PRNGKey(1))
     assert toks3.shape == (B,)
     assert toks3.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Speculative round / rollback (draft-k + expanded-batch verify)
+# ---------------------------------------------------------------------------
+
+SPEC_K = 3
+
+
+def _spec_fixture(arch="stablelm-3b"):
+    """A B=3 paged cache with slot 0 prefilled (pages [1, 2], 8-token
+    prompt) and slots 1-2 parked on the trash page."""
+    from repro.models import get_model_fns
+
+    cfg = get_smoke_config(arch)
+    params = get_model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    nb, ps = 3, 8
+    cache = SP.init_paged_decode_cache(cfg, nb, ps, BS)
+    prefill = jax.jit(
+        SP.make_paged_suffix_prefill(cfg), static_argnames=("bucket",)
+    )
+    prompt = [5, 3, 7, 2, 9, 4, 6, 8]
+    cache, st, _ = prefill(
+        params, cache, SP.init_prefill_state(cfg),
+        jnp.asarray([prompt], jnp.int32),
+        jnp.asarray([1], jnp.int32), jnp.int32(0), bucket=8,
+    )
+    cache = jax.jit(SP.make_paged_state_insert(cfg))(cache, st, jnp.int32(0))
+    table = jnp.asarray([[1, 2], [0, 0], [0, 0]], jnp.int32)
+    token = jnp.asarray([7, 0, 0], jnp.int32)
+    keys = jnp.zeros((nb, 2), jnp.uint32)
+    steps = jnp.zeros((nb,), jnp.int32)
+    return cfg, params, cache, table, token, keys, steps
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "recurrentgemma-2b"])
+def test_spec_round_matches_plain_chain(arch):
+    """Contract of the fused round: drafts are bitwise the k chained
+    plain decode steps, the greedy verify resamples the drafts exactly
+    (fault-free rounds accept everything), vstates carries the per-step
+    states, and the returned cache equals the plain chain's end state."""
+    from repro.models import transformer as TF
+
+    cfg, params, cache, table, token, keys, steps = _spec_fixture(arch)
+    rnd = jax.jit(SP.make_paged_spec_round(cfg, SPEC_K))
+    out_cache, d, dok, v, vok, vs = rnd(
+        params, cache, table, token, keys, steps
+    )
+    assert d.shape == v.shape == dok.shape == vok.shape == (3, SPEC_K)
+    for leaf in vs.values():
+        assert leaf.shape[0] == SPEC_K
+    assert np.asarray(dok).all() and np.asarray(vok).all()
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(d))
+
+    step = jax.jit(
+        lambda p, c, t: TF.lm_decode_step(p, c, t, cfg, table)
+    )
+    c, t = cache, token
+    for j in range(SPEC_K):
+        c, logits = step(params, c, t)
+        t = SP.sample_tokens(cfg, logits, keys, steps + j)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(d[:, j]))
+        # vstates[j] = the state AFTER consuming input j — bitwise the
+        # plain chain's state (pos included)
+        np.testing.assert_array_equal(
+            np.asarray(vs["pos"][j]), np.asarray(c["pos"])
+        )
+    for name in c:
+        np.testing.assert_array_equal(
+            np.asarray(out_cache[name]), np.asarray(c[name]), err_msg=name
+        )
+
+
+def test_spec_rollback_rewinds_one_slot():
+    cfg, params, cache, table, token, keys, steps = _spec_fixture()
+    pre_pos = np.asarray(cache["pos"]).copy()
+    rnd = jax.jit(SP.make_paged_spec_round(cfg, SPEC_K))
+    out_cache, *_, vs = rnd(params, cache, table, token, keys, steps)
+    rb = jax.jit(SP.make_spec_rollback(cfg))
+    back = rb(out_cache, vs, jnp.int32(1), jnp.int32(0))
+    pos = np.asarray(back["pos"])
+    assert pos[0] == pre_pos[0] + 2  # idx 1 = consumed inputs 0 and 1
+    np.testing.assert_array_equal(pos[1:], np.asarray(out_cache["pos"])[1:])
+    # idx and slot are traced: every (idx, slot) pair reuses one trace
+    back = rb(back, vs, jnp.int32(0), jnp.int32(2))
+    assert rb._cache_size() == 1
+
+
+def test_decode_step_kv_write_false_is_read_only():
+    """The verify cell: run the writing step once (the 'draft' — it lands
+    the token's K/V row in the pool), then re-decode the same position
+    read-only from the written pool + the pre-step dense state.  Logits
+    must match bitwise and the returned cache must carry only dense
+    per-slot leaves (no pool pages, no quant_step tick)."""
+    from repro.models import transformer as TF
+
+    cfg, params, cache, table, token, keys, steps = _spec_fixture()
+    wr = jax.jit(lambda p, c, t: TF.lm_decode_step(p, c, t, cfg, table))
+    ro = jax.jit(
+        lambda p, c, t: TF.lm_decode_step(
+            p, c, t, cfg, table, kv_write=False
+        )
+    )
+    c_wr, lg_wr = wr(params, cache, token)
+    # written pool + pre-step dense state = a verify row for this position
+    replay = dict(c_wr)
+    for name in SP._spec_state_leaves(cache):
+        replay[name] = cache[name]
+    c_ro, lg_ro = ro(params, replay, token)
+    np.testing.assert_array_equal(np.asarray(lg_wr), np.asarray(lg_ro))
+    pool = set(SP.PAGE_POOL_LEAVES) | {"quant_step"}
+    assert set(c_ro) == set(replay) - (pool & set(replay))
+    np.testing.assert_array_equal(
+        np.asarray(c_ro["pos"]), np.asarray(c_wr["pos"])
+    )
+
+
+def test_spec_factories_reject_bad_args():
+    cfg = get_smoke_config("stablelm-3b")
+    with pytest.raises(ValueError, match="speculate_k"):
+        SP.make_paged_spec_round(cfg, 0)
+    encdec = get_smoke_config("whisper-small")
+    with pytest.raises(ValueError, match="token-LM"):
+        SP.make_paged_spec_round(encdec, 2)
+    with pytest.raises(ValueError, match="token-LM"):
+        SP.make_spec_rollback(encdec)
