@@ -56,6 +56,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import cost_model as CM
 from repro.models import get_model_fns
 from repro.serving import (
     PRIORITY_BATCH,
@@ -80,6 +81,7 @@ REPORT_SCHEMA = {
     "sharded_decode": dict,
     "preemption": dict,
     "speculative_decode": dict,
+    "energy_per_token": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -112,6 +114,11 @@ _PREEMPTION_KEYS = {
 _SPECULATIVE_KEYS = {
     "speculate_k", "n_requests", "plain", "spec", "acceptance",
     "tokens_per_round", "tokens_per_s_ratio", "tokens_match",
+}
+_ENERGY_KEYS = {
+    "n_requests", "wta_trials", "kv_cache_dtype", "accounting",
+    "raca_energy_pj_per_token", "adc1b_energy_pj_per_token",
+    "raca_tops_per_w", "adc1b_tops_per_w", "speculative",
 }
 
 
@@ -217,6 +224,85 @@ def validate_report(report: dict) -> None:
             "speculative_decode: tokens/s ratio "
             f"{spec['tokens_per_s_ratio']} < 1.0 — speculation lost to "
             "plain decode on the serving trace"
+        )
+    en = report["energy_per_token"]
+    missing = _ENERGY_KEYS - set(en)
+    if missing:
+        raise ValueError(
+            f"energy_per_token missing keys {sorted(missing)}"
+        )
+    acc = en["accounting"]
+    # EXACT count reconciliation from the artifact alone: the accounted
+    # event totals must equal tokens-computed x per-token shape counts
+    # (plus sampling and KV-write terms) as integers — the accounting's
+    # invariance contract, enforced on every committed report
+    tc = acc["tokens_computed"]
+    if tc["prefill"] + tc["decode"] + tc["draft"] != tc["total"]:
+        raise ValueError(
+            f"energy_per_token: tokens_computed does not sum: {tc}"
+        )
+    expected = (
+        CM.AnalogOpCounts.from_dict(acc["per_token_counts"])
+        .scaled(tc["total"])
+        + CM.AnalogOpCounts.from_dict(acc["per_sample_counts"])
+        .scaled(acc["sample_events"])
+        + CM.AnalogOpCounts.from_dict(acc["per_kv_token_counts"])
+        .scaled(acc["kv_written_tokens"])
+    )
+    if expected.as_dict() != acc["counts"]:
+        raise ValueError(
+            "energy_per_token: event counts do not reconcile against "
+            f"tokens computed — expected {expected.as_dict()}, "
+            f"reported {acc['counts']}"
+        )
+    # pricing reconciliation: re-price the reconciled counts with the
+    # Table I cost model and match the reported energies
+    prices = CM.price_counts(expected)
+    for scheme in ("raca", "adc1b"):
+        gross = acc[scheme]["energy_pj_gross"]
+        want = prices[f"{scheme}_energy_pj"]
+        if abs(gross - want) > 1e-6 * max(want, 1.0):
+            raise ValueError(
+                f"energy_per_token: {scheme} gross energy {gross} != "
+                f"re-priced {want}"
+            )
+        per = acc[scheme]["energy_pj_per_token"]
+        want_per = gross / max(acc["tokens_published"], 1)
+        if abs(per - want_per) > 1e-6 * max(want_per, 1.0):
+            raise ValueError(
+                f"energy_per_token: {scheme} per-token energy {per} != "
+                f"gross/published {want_per}"
+            )
+        if abs(en[f"{scheme}_energy_pj_per_token"] - per) > 1e-9 * max(
+            per, 1.0
+        ):
+            raise ValueError(
+                f"energy_per_token: top-level {scheme} per-token copy "
+                "diverged from the accounting section"
+            )
+    # the paper's point, on served traffic: ADC-free RACA readout must
+    # price BELOW the 1-bit-ADC scheme for the same event stream
+    if not (
+        en["raca_energy_pj_per_token"] < en["adc1b_energy_pj_per_token"]
+    ):
+        raise ValueError(
+            "energy_per_token: RACA pricing "
+            f"({en['raca_energy_pj_per_token']} pJ/tok) is not below "
+            f"1-bit-ADC ({en['adc1b_energy_pj_per_token']} pJ/tok)"
+        )
+    spe = en["speculative"]
+    if spe["tokens_match"] is not True:
+        raise ValueError(
+            "energy_per_token: speculative vs plain published streams "
+            "diverged — the energy comparison is not like-for-like"
+        )
+    # rejected drafts burn energy without publishing: per published
+    # token, speculation can only cost MORE energy than plain decode
+    if spe["overhead_ratio"] < 1.0:
+        raise ValueError(
+            "energy_per_token: speculative per-published-token energy "
+            f"ratio {spe['overhead_ratio']} < 1.0 — drafted work is "
+            "being under-accounted"
         )
 
 
@@ -837,6 +923,84 @@ def bench_speculative(
     return out
 
 
+def bench_energy_per_token(cfg, params, n_req: int = 8) -> dict:
+    """Energy-per-token accounting on the standard mixed trace.
+
+    Drives the full analog-event surface at once — int8 KV pool
+    (stochastic-rounding events) + WTA sampling head (comparator votes
+    per emitted token) — through the Sim device backend, then prices the
+    event stream under both readout schemes of the paper's Table I:
+    RACA (ADC-free comparator readout) vs the 1-bit-ADC baseline.  The
+    committed numbers are deterministic: counts are exact invariants of
+    (tokens computed x model shape), reconciled integer-exactly by
+    ``validate_report``, and the pricing is a pure function of the
+    counts — no timing anywhere in this section.
+
+    A speculative ride-along re-runs the trace greedily, plain vs
+    ``speculate_k=2``: the published streams are byte-identical, but the
+    speculative engine forwards every drafted AND verify position, so
+    its gross energy is strictly higher — ``overhead_ratio`` reports the
+    per-published-token cost of rejected drafts (>= 1.0 is enforced:
+    drafted work must never be under-accounted).
+    """
+    mcfg = dataclasses.replace(
+        cfg, kv_cache_dtype="int8", wta_head=True,
+        analog=dataclasses.replace(cfg.analog, wta_trials=8),
+    )
+    serve = dict(
+        max_batch=4, max_new_tokens=12, max_len=128,
+        kv_layout="paged", kv_block_size=16,
+    )
+    trace = make_trace(
+        seed=5, n_req=n_req, mean_gap_ticks=1.0,
+        prompt_len_range=(2, 12), new_tokens_range=(4, 13),
+        vocab=cfg.vocab,
+    )
+    eng = ServingEngine(params, mcfg, ServeConfig(**serve))
+    drive_continuous(eng, trace)
+    a = eng.metrics().analog
+    out: dict = {
+        "n_requests": n_req,
+        "wta_trials": mcfg.analog.wta_trials,
+        "kv_cache_dtype": mcfg.kv_cache_dtype,
+        "accounting": a,
+        "raca_energy_pj_per_token": a["raca"]["energy_pj_per_token"],
+        "adc1b_energy_pj_per_token": a["adc1b"]["energy_pj_per_token"],
+        "raca_tops_per_w": round(a["raca"]["tops_per_w_effective"], 4),
+        "adc1b_tops_per_w": round(a["adc1b"]["tops_per_w_effective"], 4),
+    }
+
+    # speculative ride-along: identical greedy streams, honest gross cost
+    gcfg = dataclasses.replace(cfg, wta_head=False)
+    spec = {"speculate_k": 2}
+    streams = {}
+    for label, kk in (("plain", 0), ("spec", spec["speculate_k"])):
+        e = ServingEngine(
+            params, gcfg, ServeConfig(**serve, speculate_k=kk)
+        )
+        drive_continuous(e, trace)
+        streams[label] = {
+            r.rid: r.output for r in e.sched.all_requests()
+        }
+        sa = e.metrics().analog
+        spec[label] = {
+            "tokens_published": sa["tokens_published"],
+            "tokens_computed": sa["tokens_computed"],
+            "raca_energy_pj_gross": sa["raca"]["energy_pj_gross"],
+            "raca_energy_pj_per_published_token": (
+                sa["raca"]["energy_pj_per_token"]
+            ),
+        }
+    spec["tokens_match"] = streams["plain"] == streams["spec"]
+    spec["overhead_ratio"] = round(
+        spec["spec"]["raca_energy_pj_per_published_token"]
+        / max(spec["plain"]["raca_energy_pj_per_published_token"], 1e-9),
+        3,
+    )
+    out["speculative"] = spec
+    return out
+
+
 def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     base = get_smoke_config("stablelm-3b")
     if dry_run:
@@ -1029,6 +1193,24 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"->{spd['spec']['tokens_per_s']:.1f} "
             f"ratio={spd['tokens_per_s_ratio']:.2f}x "
             f"match={spd['tokens_match']}",
+        )
+    )
+    # energy-per-token accounting under Table I pricing (RACA vs 1b-ADC),
+    # count reconciliation + the RACA-cheaper inequality enforced by
+    # validate_report on the committed artifact
+    ept = bench_energy_per_token(
+        pvd_cfg, pvd_params, n_req=4 if dry_run else 8
+    )
+    report["energy_per_token"] = ept
+    rows.append(
+        (
+            "serve_energy_per_token",
+            ept["raca_energy_pj_per_token"],
+            f"raca={ept['raca_energy_pj_per_token']:.0f}pJ/tok "
+            f"adc1b={ept['adc1b_energy_pj_per_token']:.0f}pJ/tok "
+            f"raca_tops_w={ept['raca_tops_per_w']:.2f} "
+            f"spec_overhead={ept['speculative']['overhead_ratio']:.2f}x "
+            f"match={ept['speculative']['tokens_match']}",
         )
     )
     # sharded paged decode over the local host mesh: token identity vs the

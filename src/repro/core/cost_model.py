@@ -67,9 +67,11 @@ def _conv_counts(layers: Sequence[int]) -> dict:
 #             for a clocked comparator + TIA at 32 nm) ✓
 #
 # Area [mm^2]:  A1 = A_common + A_act + A_dac + A_adc = 8.51
-#   with (DAC+ADC) = 81%  =>  6.893;  split ADC 5.500 over 4730/8 shared
-#   units => a_adc = 9.306e-3;  DAC 1.393 over 1584 => a_dac = 8.794e-4
-#   A_common = 1.317, A_act = 0.300  =>  A1 = 8.510 ✓
+#   with (DAC+ADC) = 81%  =>  6.893;  split ADC 5.500 over the
+#   ceil(4730/8) = 592 shared units the layout actually instantiates (a
+#   fractional ADC cannot be placed; cost_adc1b ceils the same way)
+#   => a_adc = 5.500/592 = 9.2905e-3;  DAC 1.393 over 1584 => a_dac =
+#   8.794e-4;  A_common = 1.317, A_act = 0.300  =>  A1 = 8.510 ✓
 #   RACA: A2 = A_common + 784·a_dac + 810·a_cmp = 5.24
 #          => a_cmp = 3.992e-3 (no column muxing — cheap enough to be fully
 #             parallel, which is what enables the single-cycle WTA race) ✓
@@ -82,7 +84,10 @@ E_CMP = 9.944         # pJ per comparator decision (incl. TIA)
 E_COMMON_REF = 1.860e5  # pJ, arrays+buffers+routing for the reference FCNN
 E_ACT_REF = 0.576e5     # pJ, digital activation logic for the reference FCNN
 
-A_ADC = 9.306e-3      # mm^2 per shared 1-bit ADC unit
+# mm^2 per shared 1-bit ADC unit — calibrated over the ceil'd unit count
+# (592 for the reference FCNN) so the calibration and cost_adc1b use the
+# SAME discretization and table1() lands exactly on PAPER_TABLE1
+A_ADC = 5.500 / 592
 A_DAC = 8.794e-4      # mm^2 per DAC
 A_CMP = 3.992e-3      # mm^2 per comparator+TIA
 A_COMMON_REF = 1.317  # mm^2 arrays+digital for the reference FCNN
@@ -171,3 +176,215 @@ PAPER_TABLE1 = {
     "area_change_pct": -38.43,
     "efficiency_change_pct": +142.37,
 }
+
+
+# ---------------------------------------------------------------------------
+# Served-traffic accounting: per-token analog event counts for the LM zoo.
+#
+# The FCNN model above prices a whole inference pass; the serving engine
+# needs the same Table I constants applied to the *event counts one decoded
+# (or prefilled, or drafted) token drives through the crossbar fabric*.
+# Counts are a pure function of the ModelConfig's weight-matmul shapes —
+# NOT of batch composition, arrival order, or sharding — which is what
+# makes `total counts == tokens_computed x per-token counts` an exact,
+# test-pinnable invariant (tests/test_energy_accounting.py).
+#
+# Conventions (documented in docs/serving.md §"Energy accounting"):
+#   * Only WEIGHT matmuls count as crossbar work: ReRAM arrays hold
+#     weights, so attention's position-dependent score/value products
+#     (activation x activation) run in the digital/peripheral domain and
+#     are covered by the MAC-scaled common term, like buffers and routing.
+#   * tile_reads: physical column reads — ceil(K / ARRAY_ROWS) tiles per
+#     logical column, N columns per (K, N) matmul.
+#   * comparator_decisions: RACA's readout, T stochastic trials per
+#     logical output column; WTA sampling adds wta_trials x vocab per
+#     sampled token.
+#   * dac_conversions: RACA drives DACs only at the input stage (T trials
+#     re-drive d_model lines per token); the ADC1B mirror instead pays
+#     bit-serial DACs at EVERY layer input plus 1-bit ADC reads of every
+#     physical column x INPUT_BITS — exactly the cost_adc1b / cost_raca
+#     split above, restated per token.
+#   * stoch_round_events: int8 KV-cache writes; each element rounded is
+#     one comparator-style decision (the paper's conductance-programming
+#     primitive), priced at E_CMP under BOTH schemes — quantized cache
+#     writes are not part of the readout-scheme comparison.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogOpCounts:
+    """Exact analog event counts (integers; addition and scaling close)."""
+
+    macs: int = 0
+    tile_reads: int = 0
+    comparator_decisions: int = 0
+    dac_conversions: int = 0
+    adc1b_dac_conversions: int = 0
+    adc1b_adc_conversions: int = 0
+    stoch_round_events: int = 0
+    wta_samples: int = 0
+
+    def __add__(self, other: "AnalogOpCounts") -> "AnalogOpCounts":
+        return AnalogOpCounts(
+            **{
+                f.name: getattr(self, f.name) + getattr(other, f.name)
+                for f in dataclasses.fields(self)
+            }
+        )
+
+    def scaled(self, n: int) -> "AnalogOpCounts":
+        """Counts for ``n`` identical events (n == 0 is the zero element)."""
+        return AnalogOpCounts(
+            **{
+                f.name: getattr(self, f.name) * n
+                for f in dataclasses.fields(self)
+            }
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AnalogOpCounts":
+        """Rebuild from a JSON round-trip (validate_report reconciliation)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in names})
+
+
+def _mlp_matmuls(cfg) -> list:
+    d, f = cfg.d_model, cfg.d_ff
+    mm = [(d, f), (f, d)]
+    if cfg.mlp in ("swiglu", "geglu"):
+        mm.append((d, f))  # w_gate
+    return mm
+
+
+def _ffn_matmuls(cfg) -> list:
+    if cfg.family == "moe_lm":
+        # router + the top-k experts a decoded token actually dispatches to
+        return [(cfg.d_model, cfg.n_experts)] + (
+            _mlp_matmuls(cfg) * max(cfg.moe_topk, 1)
+        )
+    return _mlp_matmuls(cfg)
+
+
+def per_token_weight_matmuls(cfg) -> tuple:
+    """(K, N) of every weight matmul one token's forward pass drives.
+
+    Enumerates the parameter tensors each layer kind applies per position
+    (models/transformer.py block structure: attention kinds carry an FFN,
+    "rec" carries RG-LRU + FFN, "ssm" is the Mamba mixer alone) plus the
+    LM head — the logits matmul runs for every computed token, tied
+    embeddings included."""
+    d, hd = cfg.d_model, cfg.head_dim
+    unit: list = []
+    for kind in cfg.layer_pattern:
+        if kind == "rec":
+            w = cfg.lru_width or d
+            unit += [(d, w), (d, w), (w, w), (w, w), (w, d)]
+            unit += _ffn_matmuls(cfg)
+        elif kind == "ssm":
+            unit += [
+                (d, 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_nheads),
+                (cfg.d_inner, d),
+            ]
+        elif kind in ("global", "local", "attn"):
+            unit += [
+                (d, cfg.n_heads * hd),
+                (d, cfg.n_kv_heads * hd),
+                (d, cfg.n_kv_heads * hd),
+                (cfg.n_heads * hd, d),
+            ]
+            unit += _ffn_matmuls(cfg)
+        else:
+            raise ValueError(
+                f"unknown layer kind {kind!r} in layer_pattern — the "
+                "analog accounting cannot price a layer it cannot "
+                "enumerate"
+            )
+    return tuple(unit * cfg.n_units) + ((d, cfg.vocab),)
+
+
+def per_token_analog_counts(cfg) -> AnalogOpCounts:
+    """Analog events ONE computed token drives (prefill == decode == draft:
+    every computed position runs the same weight matmuls)."""
+    macs = tile_reads = cmp_dec = a_dac = a_adc = 0
+    for k, n in per_token_weight_matmuls(cfg):
+        tiles = math.ceil(k / ARRAY_ROWS)
+        macs += k * n
+        tile_reads += tiles * n
+        cmp_dec += RACA_TRIALS * n
+        a_dac += k * INPUT_BITS
+        a_adc += tiles * n * INPUT_BITS
+    return AnalogOpCounts(
+        macs=macs,
+        tile_reads=tile_reads,
+        comparator_decisions=cmp_dec,
+        # RACA: input-stage DACs only, re-driven once per decision trial
+        dac_conversions=RACA_TRIALS * cfg.d_model,
+        adc1b_dac_conversions=a_dac,
+        adc1b_adc_conversions=a_adc,
+    )
+
+
+def per_sample_analog_counts(cfg) -> AnalogOpCounts:
+    """Events one TOKEN-SAMPLING decision adds on top of the forward pass.
+
+    The WTA stochastic-SoftMax head races wta_trials comparator banks over
+    the vocab columns; greedy argmax is digital and adds nothing."""
+    if not getattr(cfg, "wta_head", False):
+        return AnalogOpCounts()
+    return AnalogOpCounts(
+        comparator_decisions=cfg.analog.wta_trials * cfg.vocab,
+        wta_samples=1,
+    )
+
+
+def per_kv_token_round_events(cfg) -> AnalogOpCounts:
+    """Stochastic-rounding events one KV-WRITTEN token adds (int8 pools).
+
+    K and V rows of every attention layer are rounded element-wise onto
+    the int8 grid; read-only passes (speculative verify) write nothing."""
+    if getattr(cfg, "kv_cache_dtype", "same") != "int8":
+        return AnalogOpCounts()
+    n_attn = cfg.n_units * sum(
+        1 for k in cfg.layer_pattern if k not in ("rec", "ssm")
+    )
+    return AnalogOpCounts(
+        stoch_round_events=2 * n_attn * cfg.n_kv_heads * cfg.head_dim
+    )
+
+
+def price_counts(counts: AnalogOpCounts) -> dict:
+    """Price an event tally under both readout schemes, in pJ.
+
+    The MAC-scaled common term (arrays, buffers, routing — covering the
+    digital attention/softmax peripherals too) is shared; the schemes then
+    differ exactly as in cost_adc1b / cost_raca: ADC1B pays activation
+    logic + every-layer bit-serial DACs + per-physical-column 1-bit ADC
+    reads, RACA pays input-stage DACs + one comparator decision per trial
+    per logical column.  Stochastic KV rounding prices identically in
+    both (it is cache-write hardware, not readout)."""
+    s = counts.macs / _REF_COUNTS["macs"]
+    common = E_COMMON_REF * s
+    round_pj = counts.stoch_round_events * E_CMP
+    raca = (
+        common
+        + counts.dac_conversions * E_DAC
+        + counts.comparator_decisions * E_CMP
+        + round_pj
+    )
+    adc1b = (
+        common
+        + E_ACT_REF * s
+        + counts.adc1b_dac_conversions * E_DAC
+        + counts.adc1b_adc_conversions * E_ADC
+        + round_pj
+    )
+    return {"raca_energy_pj": raca, "adc1b_energy_pj": adc1b}
+
+
+def effective_tops_per_w(counts: AnalogOpCounts, energy_pj: float) -> float:
+    """Executed TOPS/W: 2 ops per MAC over the priced energy (1 op/pJ ==
+    1 TOPS/W), the workload-measured counterpart of Table I's column."""
+    return 2.0 * counts.macs / max(energy_pj, 1e-30)

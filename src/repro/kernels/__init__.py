@@ -8,6 +8,9 @@ paged_attention — serving decode: block-table gather + online-softmax over
                   a paged KV cache (scalar-prefetched table drives the DMA)
 
 Validated bit-exactly against the pure-jnp oracles in ref.py (shared
-counter-based PRNG, see prng.py).  ops.py holds the public jit'd wrappers.
-EXAMPLE.md documents the layout convention.
+counter-based PRNG, see prng.py).  ops.py holds the public jit'd wrappers,
+which dispatch through the pluggable device backend in backend.py (Sim by
+default — today's Pallas/jnp math plus analog-event accounting; the seam
+for hardware-in-the-loop Phys backends later).  EXAMPLE.md documents the
+layout convention.
 """

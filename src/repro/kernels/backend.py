@@ -1,0 +1,219 @@
+"""Pluggable device-backend seam behind the analog kernels.
+
+The public wrappers in :mod:`repro.kernels.ops` no longer call their
+implementations directly — they dispatch through the process-wide active
+:class:`DeviceBackend`.  The split mirrors daffodil-lib's
+``Daffodil_Base`` / ``Sim`` / ``Phys`` layering:
+
+* :class:`SimBackend` (the default) routes every kernel to today's
+  Pallas/jnp math unchanged — same compiled artifacts, same bits — and
+  carries **pure accounting**: host-side tallies of the analog events a
+  served workload drives (crossbar MAC tile-reads, comparator decisions,
+  input-DAC conversions, stochastic-rounding events), priced by the
+  calibrated Table I constants in :mod:`repro.core.cost_model`.
+* A future ``PhysBackend`` would override the compute methods with
+  hardware-in-the-loop calls (chip driver, FPGA harness) while inheriting
+  the same accounting surface — the seam is the point of this module.
+
+Two usage planes, deliberately separate:
+
+1. **Compute dispatch** (trace-time, inside ``jit``): ``ops.crossbar_mac``
+   etc. call ``get_backend().crossbar_mac(...)``.  Swapping the process
+   backend with :func:`set_backend` swaps the math everywhere at the next
+   trace.
+2. **Event accounting** (host-side): events cannot be counted inside a
+   traced computation, and the counts must not depend on compiled-shape
+   padding — so the serving engine owns a private backend instance per
+   engine (``ServeConfig.device_backend`` names it) and notes analytical
+   multiplicities per entry-point call (see
+   ``launch/specs.analog_call_profile``).  Counts are therefore exact
+   invariants: ``totals == tokens_computed x per-token shape counts``,
+   pinned by tests/test_energy_accounting.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core import cost_model as CM
+
+
+class DeviceBackend:
+    """Base: accounting surface (shared) + abstract compute dispatch."""
+
+    name = "base"
+
+    def __init__(self, model_cfg: Optional[Any] = None):
+        self.model_cfg = model_cfg
+        if model_cfg is not None:
+            self._per_tok = CM.per_token_analog_counts(model_cfg)
+            self._per_sample = CM.per_sample_analog_counts(model_cfg)
+            self._per_kv_tok = CM.per_kv_token_round_events(model_cfg)
+        else:
+            zero = CM.AnalogOpCounts()
+            self._per_tok = self._per_sample = self._per_kv_tok = zero
+        self.reset()
+
+    # -- accounting (host-side, engine-driven) ------------------------------
+
+    def reset(self) -> None:
+        self._counts = CM.AnalogOpCounts()
+        self._tokens = {"prefill": 0, "decode": 0, "draft": 0}
+        self._sample_events = 0
+        self._kv_written_tokens = 0
+
+    def note_call(self, profile: dict) -> None:
+        """Record one device entry-point invocation.
+
+        ``profile`` is ``launch/specs.analog_call_profile(...)`` output:
+        token-forward multiplicities per kind, sampling events, and
+        KV-writing tokens.  Counts accumulate as exact integer multiples
+        of the per-token/per-sample/per-KV-token shape counts."""
+        fwd = 0
+        for kind in ("prefill", "decode", "draft"):
+            n = profile[kind]
+            self._tokens[kind] += n
+            fwd += n
+        self._sample_events += profile["samples"]
+        self._kv_written_tokens += profile["kv_tokens"]
+        self._counts = (
+            self._counts
+            + self._per_tok.scaled(fwd)
+            + self._per_sample.scaled(profile["samples"])
+            + self._per_kv_tok.scaled(profile["kv_tokens"])
+        )
+
+    def events(self) -> CM.AnalogOpCounts:
+        return self._counts
+
+    def tokens_computed(self) -> dict:
+        out = dict(self._tokens)
+        out["total"] = sum(self._tokens.values())
+        return out
+
+    def snapshot(self, published_tokens: int = 0) -> dict:
+        """Full accounting report: tallies, per-event shape counts (so a
+        validator can re-derive the totals from the artifact alone), and
+        Table I pricing under both readout schemes."""
+        c = self._counts
+        prices = CM.price_counts(c)
+        denom = max(published_tokens, 1)
+
+        def scheme(energy_pj: float) -> dict:
+            return {
+                "energy_pj_gross": energy_pj,
+                "energy_pj_per_token": energy_pj / denom,
+                "tops_per_w_effective": CM.effective_tops_per_w(
+                    c, energy_pj
+                ),
+            }
+
+        return {
+            "backend": self.name,
+            "tokens_computed": self.tokens_computed(),
+            "tokens_published": published_tokens,
+            "sample_events": self._sample_events,
+            "kv_written_tokens": self._kv_written_tokens,
+            "counts": c.as_dict(),
+            "per_token_counts": self._per_tok.as_dict(),
+            "per_sample_counts": self._per_sample.as_dict(),
+            "per_kv_token_counts": self._per_kv_tok.as_dict(),
+            "raca": scheme(prices["raca_energy_pj"]),
+            "adc1b": scheme(prices["adc1b_energy_pj"]),
+        }
+
+    # -- compute dispatch (trace-time) --------------------------------------
+
+    def crossbar_mac(self, x, w, key, cfg, binarize=True):
+        raise NotImplementedError
+
+    def wta_counts(self, z, key, *, n_trials, vth0, sigma_z):
+        raise NotImplementedError
+
+    def stoch_round(self, x, key, *, step, lo, hi):
+        raise NotImplementedError
+
+    def stoch_round_serving(self, x, seed, *, step, lo, hi):
+        raise NotImplementedError
+
+    def paged_attention(self, q, k_pages, v_pages, table, pos, **kw):
+        raise NotImplementedError
+
+    def paged_prefill_attention(self, q, k_pages, v_pages, table, q0, **kw):
+        raise NotImplementedError
+
+
+class SimBackend(DeviceBackend):
+    """Default backend: today's Pallas/jnp math, accounting only.
+
+    Compute methods delegate to the ``*_sim`` implementations in ops.py
+    (imported lazily — ops imports this module at load).  The math is
+    bit-identical to the pre-seam wrappers; the recompile-guard and
+    byte-identity suites run through this path."""
+
+    name = "sim"
+
+    def crossbar_mac(self, x, w, key, cfg, binarize=True):
+        from repro.kernels import ops
+
+        return ops.crossbar_mac_sim(x, w, key, cfg, binarize)
+
+    def wta_counts(self, z, key, *, n_trials, vth0, sigma_z):
+        from repro.kernels import ops
+
+        return ops.wta_counts_sim(
+            z, key, n_trials=n_trials, vth0=vth0, sigma_z=sigma_z
+        )
+
+    def stoch_round(self, x, key, *, step, lo, hi):
+        from repro.kernels import ops
+
+        return ops.stoch_round_sim(x, key, step=step, lo=lo, hi=hi)
+
+    def stoch_round_serving(self, x, seed, *, step, lo, hi):
+        from repro.kernels import ops
+
+        return ops.stoch_round_serving_sim(x, seed, step=step, lo=lo, hi=hi)
+
+    def paged_attention(self, q, k_pages, v_pages, table, pos, **kw):
+        from repro.kernels import ops
+
+        return ops.paged_attention_sim(q, k_pages, v_pages, table, pos, **kw)
+
+    def paged_prefill_attention(self, q, k_pages, v_pages, table, q0, **kw):
+        from repro.kernels import ops
+
+        return ops.paged_prefill_attention_sim(
+            q, k_pages, v_pages, table, q0, **kw
+        )
+
+
+BACKENDS = {"sim": SimBackend}
+
+_ACTIVE: DeviceBackend = SimBackend()
+
+
+def make_backend(name: str, model_cfg: Optional[Any] = None) -> DeviceBackend:
+    """Instantiate a registered backend (loud on unknown names)."""
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown device backend {name!r}; registered: "
+            f"{sorted(BACKENDS)}"
+        )
+    return BACKENDS[name](model_cfg)
+
+
+def get_backend() -> DeviceBackend:
+    """The process-wide backend ops.py routes kernel calls through."""
+    return _ACTIVE
+
+
+def set_backend(backend: DeviceBackend) -> DeviceBackend:
+    """Install a backend process-wide; returns the previous one.
+
+    Affects the NEXT trace of any jitted caller — already-compiled
+    artifacts keep the math they were traced with."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = backend
+    return prev

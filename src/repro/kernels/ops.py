@@ -4,8 +4,14 @@ Responsibilities:
   * shape padding to MXU-aligned blocks (and un-padding),
   * jax PRNG key → kernel seed derivation,
   * straight-through / QAT gradients via custom_vjp,
-  * backend dispatch: compiled Pallas on TPU, `pltpu.InterpretParams`
-    emulation on CPU (tests), pure-jnp oracle where a caller asks for it.
+  * backend dispatch, two layers deep:
+      - the PUBLIC entry points (crossbar_mac, wta_counts, stoch_round*,
+        paged_attention*) route through the active device backend
+        (`repro.kernels.backend` — Sim by default, the seam for
+        hardware-in-the-loop later);
+      - the Sim implementations (`*_sim` below) then pick compiled Pallas
+        on TPU, `pltpu.InterpretParams` emulation on CPU (tests), or the
+        pure-jnp oracle where a caller asks for it.
 
 All wrappers accept arbitrary leading batch dims on ``x``.
 """
@@ -18,6 +24,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from . import backend as _backend
 from . import crossbar_mac as _cb
 from . import prng, ref
 from . import stoch_round as _sr
@@ -180,7 +187,21 @@ def crossbar_mac(
     cfg: Any,
     binarize: bool = True,
 ) -> jax.Array:
-    """Fused RACA matmul.  x: (..., K) f32, w: (K, N) f32 → (..., N) f32."""
+    """Fused RACA matmul.  x: (..., K) f32, w: (K, N) f32 → (..., N) f32.
+
+    Dispatches through the active device backend (Sim routes to
+    :func:`crossbar_mac_sim`, i.e. today's Pallas/interpret math)."""
+    return _backend.get_backend().crossbar_mac(x, w, key, cfg, binarize)
+
+
+def crossbar_mac_sim(
+    x: jax.Array,
+    w: jax.Array,
+    key: jax.Array,
+    cfg: Any,
+    binarize: bool = True,
+) -> jax.Array:
+    """Sim-backend implementation (the pre-seam wrapper, bit-identical)."""
     lead = x.shape[:-1]
     x2d = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
     y = _crossbar_mac_core(
@@ -249,7 +270,22 @@ def wta_counts(
     """Winner counts over T WTA trials.  z: (..., C) → counts (..., C).
 
     Inference-path readout: gradients are stopped (the training surrogate is
-    softmax cross-entropy on the pre-activations, as in the paper)."""
+    softmax cross-entropy on the pre-activations, as in the paper).
+    Dispatches through the active device backend."""
+    return _backend.get_backend().wta_counts(
+        z, key, n_trials=n_trials, vth0=vth0, sigma_z=sigma_z
+    )
+
+
+def wta_counts_sim(
+    z: jax.Array,
+    key: jax.Array,
+    *,
+    n_trials: int,
+    vth0: float,
+    sigma_z: float,
+) -> jax.Array:
+    """Sim-backend implementation (the pre-seam wrapper, bit-identical)."""
     lead = z.shape[:-1]
     c = z.shape[-1]
     z2d = z.reshape((-1, c)).astype(jnp.float32)
@@ -306,6 +342,28 @@ def paged_attention(
     k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
     v_scale: jax.Array | None = None,
 ) -> jax.Array:
+    """Block-table decode attention, dispatched through the active device
+    backend (Sim routes to :func:`paged_attention_sim`)."""
+    return _backend.get_backend().paged_attention(
+        q, k_pages, v_pages, table, pos,
+        kind=kind, local_window=local_window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale,
+    )
+
+
+def paged_attention_sim(
+    q: jax.Array,        # (B, H, Dh)
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
+    v_pages: jax.Array,
+    table: jax.Array,    # (B, W) int32
+    pos: jax.Array,      # (B,) int32
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
     """Block-table decode attention: compiled Pallas kernel on TPU, the
     pure-jnp oracle elsewhere.
 
@@ -336,6 +394,29 @@ def paged_attention(
 
 
 def paged_prefill_attention(
+    q: jax.Array,        # (S, H, Dh) — one request's suffix-chunk queries
+    k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
+    v_pages: jax.Array,
+    table: jax.Array,    # (W,) int32 — the request's block-table row
+    q0: jax.Array,       # () int32 absolute position of the first query
+    *,
+    kind: str = "global",
+    local_window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jax.Array | None = None,  # (P, bs, Hkv) f32 for int8 pools
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Prefix-aware chunked-prefill attention, dispatched through the
+    active device backend (Sim routes to
+    :func:`paged_prefill_attention_sim`)."""
+    return _backend.get_backend().paged_prefill_attention(
+        q, k_pages, v_pages, table, q0,
+        kind=kind, local_window=local_window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale,
+    )
+
+
+def paged_prefill_attention_sim(
     q: jax.Array,        # (S, H, Dh) — one request's suffix-chunk queries
     k_pages: jax.Array,  # (P, bs, Hkv, Dh) — cache dtype or int8 codes
     v_pages: jax.Array,
@@ -406,7 +487,15 @@ _stoch_round_core.defvjp(_sr_fwd, _sr_bwd)
 def stoch_round(
     x: jax.Array, key: jax.Array, *, step: float, lo: float, hi: float
 ) -> jax.Array:
-    """Unbiased stochastic rounding onto {lo + k·step}; STE gradient."""
+    """Unbiased stochastic rounding onto {lo + k·step}; STE gradient.
+    Dispatches through the active device backend."""
+    return _backend.get_backend().stoch_round(x, key, step=step, lo=lo, hi=hi)
+
+
+def stoch_round_sim(
+    x: jax.Array, key: jax.Array, *, step: float, lo: float, hi: float
+) -> jax.Array:
+    """Sim-backend implementation (the pre-seam wrapper, bit-identical)."""
     shape = x.shape
     x2d = x.reshape((-1, shape[-1])).astype(jnp.float32)
     y = _stoch_round_core(x2d, _seed_from_key(key), step, lo, hi)
@@ -426,6 +515,16 @@ def stoch_round_reference(
 
 
 def stoch_round_serving(
+    x: jax.Array, seed: jax.Array, *, step: float, lo: float, hi: float
+) -> jax.Array:
+    """Serving-hot-path stochastic rounding, dispatched through the active
+    device backend (Sim routes to :func:`stoch_round_serving_sim`)."""
+    return _backend.get_backend().stoch_round_serving(
+        x, seed, step=step, lo=lo, hi=hi
+    )
+
+
+def stoch_round_serving_sim(
     x: jax.Array, seed: jax.Array, *, step: float, lo: float, hi: float
 ) -> jax.Array:
     """Stochastic rounding for the serving hot path, seeded by a raw

@@ -107,7 +107,14 @@ def roofline_terms(record: dict) -> dict:
     t_c = flops_pd / PEAK_FLOPS
     t_m = bytes_pd / HBM_BW
     t_x = coll_pd / ICI_BW
-    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    # key= compares times ONLY: bare tuple max would fall through to the
+    # label strings on tied times ("memory" > "compute" alphabetically).
+    # With key=, max keeps the FIRST maximal entry, so ties resolve in
+    # listed order: compute, then memory, then collective.
+    dom = max(
+        (t_c, "compute"), (t_m, "memory"), (t_x, "collective"),
+        key=lambda t: t[0],
+    )[1]
     mf = record["model_flops_per_chip"]
     out = {
         "compute_s": t_c,

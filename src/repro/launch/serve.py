@@ -180,6 +180,19 @@ def main() -> None:
             f"latency p50/p99 {row['latency_p50_ms']:.0f}/"
             f"{row['latency_p99_ms']:.0f}ms"
         )
+    if m.analog:
+        tc = m.analog["tokens_computed"]
+        print(
+            f"energy (Table I pricing, {m.analog['backend']} backend): "
+            f"computed {tc['total']} tokens "
+            f"(prefill {tc['prefill']}, decode {tc['decode']}, "
+            f"draft {tc['draft']}) for {m.analog['tokens_published']} "
+            f"published; "
+            f"RACA {m.analog['raca']['energy_pj_per_token']:.0f} pJ/tok "
+            f"({m.analog['raca']['tops_per_w_effective']:.2f} TOPS/W), "
+            f"1b-ADC {m.analog['adc1b']['energy_pj_per_token']:.0f} pJ/tok "
+            f"({m.analog['adc1b']['tops_per_w_effective']:.2f} TOPS/W)"
+        )
     for o in outs:
         print("  ->", o)
 

@@ -591,6 +591,63 @@ def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):
     return jnp.argmax(counts, axis=-1).astype(_i32)
 
 
+def analog_call_profile(
+    entry: str, *, tokens: int = 1, batch: int = 1, k: int = 0
+) -> dict:
+    """Analog-event multiplicities for ONE invocation of a serving entry
+    point built in this module — the contract the energy accounting rides
+    on (see kernels/backend.py and docs/serving.md §"Energy accounting").
+
+    Each factory's device computation forwards a fixed number of token
+    positions through the crossbar fabric; the returned dict states that
+    number per kind, plus how many token-sampling decisions the call makes
+    and how many of the forwarded tokens WRITE their K/V rows (int8 pools
+    stochastically round exactly those):
+
+    * ``suffix_prefill`` — one chunked-prefill step over ``tokens`` suffix
+      positions (also the dense layout's monolithic prefill with
+      ``tokens`` = the padded bucket).  No sampling: first-token sampling
+      is the separate ``sample0`` call.
+    * ``sample0`` — one first-token sampling decision from stored/terminal
+      logits (prefill completion, full prefix hit, dense admission).
+    * ``serve_step`` — one plain batched decode step: ``batch`` ACTIVE
+      slots each forward + sample + write one token.  Padded idle slots
+      compute against the trash page but serve no request; the Sim
+      backend accounts logical work, which is what makes totals invariant
+      to batch composition.
+    * ``spec_round`` — one fused speculative round: per active slot,
+      ``k`` drafted tokens (forwarded, sampled, K/V written) PLUS ``k``
+      verify positions re-decoded read-only from the pre-draft snapshot
+      (forwarded, resampled, ``kv_write=False`` — no rounding events).
+      Rejected drafts burn this energy without emitting tokens; the bench
+      reports gross vs per-published-token cost honestly.
+    * page/state movement entry points (``page_copy``, ``page_spill``,
+      ``page_restore``, ``state_gather``, ``state_insert``,
+      ``spec_rollback``) — pure memory traffic, no crossbar events.
+    """
+    zero = dict(prefill=0, decode=0, draft=0, samples=0, kv_tokens=0)
+    if entry == "suffix_prefill":
+        return dict(zero, prefill=tokens, kv_tokens=tokens)
+    if entry == "sample0":
+        return dict(zero, samples=1)
+    if entry == "serve_step":
+        return dict(zero, decode=batch, samples=batch, kv_tokens=batch)
+    if entry == "spec_round":
+        return dict(
+            zero,
+            draft=k * batch,
+            decode=k * batch,
+            samples=2 * k * batch,
+            kv_tokens=k * batch,
+        )
+    if entry in (
+        "page_copy", "page_spill", "page_restore", "state_gather",
+        "state_insert", "spec_rollback",
+    ):
+        return zero
+    raise ValueError(f"unknown serving entry point {entry!r}")
+
+
 def params_specs(cfg: ModelConfig) -> Any:
     fns = get_model_fns(cfg)
     return jax.eval_shape(lambda k: fns.init(k, cfg), jax.random.PRNGKey(0))

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import backend as BK
 from repro.launch import specs as SP
 from repro.models import ModelConfig, get_model_fns
 from repro.serving.scheduler import (
@@ -185,6 +186,13 @@ class ServeConfig:
     # ordinary decode path (deterministic per (key, step), so the
     # recomputed stream is the published one — nothing re-publishes).
     spill_budget_bytes: Optional[int] = None
+    # device backend the engine accounts analog events against (see
+    # repro.kernels.backend).  "sim" (the default) keeps today's
+    # Pallas/jnp math and tallies crossbar/comparator/DAC/rounding event
+    # counts per entry-point call, priced into ServingMetrics.analog by
+    # the Table I cost model.  Each engine owns a PRIVATE backend
+    # instance, so two engines compared side by side never share tallies.
+    device_backend: str = "sim"
 
     def buckets(self) -> tuple[int, ...]:
         if not self.prefill_buckets:
@@ -320,6 +328,11 @@ class ServeConfig:
                     f"speculate_k={self.speculate_k} must be < the decode "
                     f"budget max_new_tokens={self.max_new_tokens}"
                 )
+        if self.device_backend not in BK.BACKENDS:
+            raise ValueError(
+                f"unknown device_backend {self.device_backend!r}; "
+                f"registered: {sorted(BK.BACKENDS)}"
+            )
         if self.spill_budget_bytes is not None:
             if self.kv_layout != "paged":
                 raise ValueError(
@@ -368,6 +381,11 @@ class ServingMetrics:
     # priority class -> {n, ttft_p50_ms, ttft_p99_ms, latency_p50_ms,
     # latency_p99_ms} — the per-class SLO view (latency = submit → done)
     latency_by_class: dict = dataclasses.field(default_factory=dict)
+    # device-backend energy accounting snapshot: analog event tallies,
+    # the per-token/per-sample/per-KV-token shape counts they reconcile
+    # against, and Table I pricing under RACA vs 1-bit-ADC readout (see
+    # DeviceBackend.snapshot).  Empty for the static reference engine.
+    analog: dict = dataclasses.field(default_factory=dict)
 
     @property
     def decode_step_ms(self) -> float:
@@ -393,6 +411,19 @@ class ServingMetrics:
         if self.evictions:
             out += " evict=" + ",".join(
                 f"{k}:{v}" for k, v in sorted(self.evictions.items())
+            )
+        if self.latency_by_class:
+            out += " class=" + ",".join(
+                f"{k}:n={v['n']}"
+                f"/p99={v['latency_p99_ms']:.0f}ms"
+                for k, v in sorted(self.latency_by_class.items())
+            )
+        if self.analog:
+            out += (
+                f" raca_pj_per_tok="
+                f"{self.analog['raca']['energy_pj_per_token']:.0f}"
+                f" adc1b_pj_per_tok="
+                f"{self.analog['adc1b']['energy_pj_per_token']:.0f}"
             )
         return out
 
@@ -585,6 +616,10 @@ class ServingEngine:
         self._total_tokens = 0
         self._busy_time = 0.0
         self._decode_time = 0.0
+        # private per-engine device backend: analog-event accounting for
+        # THIS engine's traffic only (the process-wide compute-dispatch
+        # backend in repro.kernels.backend is untouched)
+        self.backend = BK.make_backend(cfg.device_backend, model_cfg)
 
     def _make_prefill(self):
         """Monolithic one-request prefill — the DENSE layout only (the
@@ -887,6 +922,12 @@ class ServingEngine:
             self._cache = self._insert(self._cache, one_cache, slot)
             self._prefills += 1
             self._prefill_tokens += plen
+            # monolithic dense prefill forwards the whole padded bucket
+            # and samples the first token in the same call
+            self.backend.note_call(
+                SP.analog_call_profile("suffix_prefill", tokens=plen)
+            )
+            self.backend.note_call(SP.analog_call_profile("sample0"))
             self._finish_admission(req, tok0)
             return
         plan = self._plans.pop(req.rid)
@@ -1337,6 +1378,9 @@ class ServingEngine:
                         self._cache, state, req.slot
                     )
                     tok0 = self._sample0(logits, job["rkey"])
+                    self.backend.note_call(
+                        SP.analog_call_profile("sample0")
+                    )
                     self._prefix_hits += 1
                     self._prefill_tokens_saved += bucket
                     self._complete_job(rid, job, tok0)
@@ -1399,6 +1443,9 @@ class ServingEngine:
                 *args, bucket=bucket
             )
             self._prefill_tokens += c
+            self.backend.note_call(
+                SP.analog_call_profile("suffix_prefill", tokens=c)
+            )
             job["q0"] = q0 + c
             computed = True
             done = job["q0"] == bucket
@@ -1419,6 +1466,7 @@ class ServingEngine:
                 self._cache, job["state"], req.slot
             )
             tok0 = self._sample0(logits, job["rkey"])
+            self.backend.note_call(SP.analog_call_profile("sample0"))
             self._prefills += 1
             self._complete_job(rid, job, tok0)
             emitted.append((rid, req.output[-1]))
@@ -1487,6 +1535,12 @@ class ServingEngine:
                     jnp.asarray(self._steps),
                 )
             nxt_np = np.asarray(nxt)  # device sync — decode_time is honest
+            # logical decode work this step: one forward + one sampling
+            # decision per ACTIVE slot (idle-slot padding is not logical
+            # work — counting it would break batch-composition invariance)
+            self.backend.note_call(
+                SP.analog_call_profile("serve_step", batch=len(active))
+            )
             now = time.perf_counter()
             self._decode_time += now - t_dec
             self._occ_sum += len(active) / self.cfg.max_batch
@@ -1558,6 +1612,13 @@ class ServingEngine:
             self._put(self._steps, "slot_vec"),
         )
         d_np = np.asarray(dtoks)   # device sync — decode_time is honest
+        # one fused round: k drafted tokens per active slot (forwarded,
+        # sampled, K/V written) + k verify re-decodes (forwarded, sampled,
+        # read-only).  Rejected drafts stay in the tally — that energy was
+        # spent whether or not a token publishes.
+        self.backend.note_call(
+            SP.analog_call_profile("spec_round", batch=len(active), k=k)
+        )
         dok_np = np.asarray(doks)
         v_np = np.asarray(vtoks)
         self._host_pos += k  # mirrors the draft scan's k pos bumps
@@ -1789,6 +1850,9 @@ class ServingEngine:
             ),
             evictions=evictions,
             latency_by_class=by_class,
+            analog=self.backend.snapshot(
+                published_tokens=self._total_tokens
+            ),
         )
 
     def compile_counts(self) -> dict[str, int]:

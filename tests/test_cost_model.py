@@ -1,25 +1,31 @@
-"""Table I reproduction (paper §IV-C)."""
+"""Table I reproduction (paper §IV-C) + served-traffic analog accounting."""
 
-import numpy as np
+import dataclasses
 
+import pytest
+
+from repro.configs import get_smoke_config
 from repro.core import cost_model as CM
 
 
 def test_table1_reproduces_paper():
     t = CM.table1()
     p = CM.PAPER_TABLE1
+    # tight tolerances: with A_ADC calibrated against the same ceil'd
+    # shared-unit count cost_adc1b charges (592 = ceil(4730/8)), the
+    # model lands within 1e-3 of every paper cell, not just 5e-3
     assert abs(t["adc1b"].energy_pj - p["adc1b"].energy_pj) / p[
         "adc1b"
-    ].energy_pj < 0.005
+    ].energy_pj < 1e-3
     assert abs(t["raca"].energy_pj - p["raca"].energy_pj) / p[
         "raca"
-    ].energy_pj < 0.005
-    assert abs(t["adc1b"].area_mm2 - p["adc1b"].area_mm2) < 0.05
-    assert abs(t["raca"].area_mm2 - p["raca"].area_mm2) < 0.05
-    # the paper's headline deltas, within half a point
-    assert abs(t["energy_change_pct"] - (-58.29)) < 0.5
-    assert abs(t["area_change_pct"] - (-38.43)) < 0.5
-    assert abs(t["efficiency_change_pct"] - 142.37) < 0.5
+    ].energy_pj < 1e-3
+    assert abs(t["adc1b"].area_mm2 - p["adc1b"].area_mm2) < 1e-3
+    assert abs(t["raca"].area_mm2 - p["raca"].area_mm2) < 1e-3
+    # the paper's headline deltas, within a tenth of a point
+    assert abs(t["energy_change_pct"] - (-58.29)) < 0.1
+    assert abs(t["area_change_pct"] - (-38.43)) < 0.1
+    assert abs(t["efficiency_change_pct"] - 142.37) < 0.1
 
 
 def test_raca_wins_scale_with_depth():
@@ -35,3 +41,92 @@ def test_raca_wins_scale_with_depth():
 def test_comparator_cheaper_than_adc():
     assert CM.E_CMP < CM.E_ADC
     assert CM.A_CMP < CM.A_ADC
+
+
+# -- served-traffic accounting (AnalogOpCounts + pricing) -------------------
+
+
+def test_analog_op_counts_arithmetic_and_roundtrip():
+    a = CM.AnalogOpCounts(macs=3, tile_reads=2, comparator_decisions=5)
+    b = CM.AnalogOpCounts(macs=1, dac_conversions=7)
+    s = a + b
+    assert s.macs == 4 and s.tile_reads == 2 and s.dac_conversions == 7
+    assert s.scaled(3).macs == 12
+    assert s.scaled(0) == CM.AnalogOpCounts()
+    # dict round-trip is exact (the reconciliation path in
+    # validate_report rebuilds counts from the JSON artifact)
+    assert CM.AnalogOpCounts.from_dict(s.as_dict()) == s
+
+
+def test_per_token_counts_match_hand_derivation():
+    """Pin the per-token counts for one small attention config against a
+    by-hand enumeration of its weight matmuls."""
+    cfg = get_smoke_config("stablelm-3b")
+    mm = CM.per_token_weight_matmuls(cfg)
+    # every layer: wq, wk, wv, wo + FFN (w_up, w_down [+ w_gate]); plus
+    # the LM head
+    per_layer = 4 + (3 if cfg.mlp in ("swiglu", "geglu") else 2)
+    assert len(mm) == cfg.n_layers * per_layer + 1
+    c = CM.per_token_analog_counts(cfg)
+    macs = sum(k * n for k, n in mm)
+    tiles = sum(-(-k // CM.ARRAY_ROWS) * n for k, n in mm)
+    assert c.macs == macs
+    assert c.tile_reads == tiles
+    assert c.comparator_decisions == CM.RACA_TRIALS * sum(
+        n for _, n in mm
+    )
+    # input DACs: RACA drives the d_model input stage once per token;
+    # the ADC baseline re-converts every matmul input at INPUT_BITS
+    assert c.dac_conversions == CM.RACA_TRIALS * cfg.d_model
+    assert c.adc1b_dac_conversions == CM.INPUT_BITS * sum(
+        k for k, _ in mm
+    )
+    assert c.adc1b_adc_conversions == CM.INPUT_BITS * tiles
+
+
+def test_sampling_and_kv_round_counts():
+    cfg = get_smoke_config("stablelm-3b")
+    # greedy digital argmax: zero analog sampling work
+    assert CM.per_sample_analog_counts(cfg) == CM.AnalogOpCounts()
+    wta = dataclasses.replace(
+        cfg, wta_head=True,
+        analog=dataclasses.replace(cfg.analog, wta_trials=8),
+    )
+    s = CM.per_sample_analog_counts(wta)
+    assert s.comparator_decisions == 8 * cfg.vocab
+    assert s.wta_samples == 1
+    # stochastic rounding happens only for int8 KV writes: 2 tensors
+    # (K and V) x attention layers x kv_heads x head_dim
+    assert CM.per_kv_token_round_events(cfg) == CM.AnalogOpCounts()
+    i8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    r = CM.per_kv_token_round_events(i8)
+    n_attn = sum(
+        1 for k in (cfg.layer_pattern * cfg.n_layers)[: cfg.n_layers]
+        if k in ("attn", "global", "local")
+    )
+    assert r.stoch_round_events == 2 * n_attn * cfg.n_kv_heads * cfg.d_head
+
+
+def test_pricing_raca_below_adc1b():
+    """For any real per-token event stream the ADC-free readout prices
+    strictly below the 1-bit-ADC baseline — the inequality
+    validate_report enforces on the committed serving artifact."""
+    cfg = get_smoke_config("stablelm-3b")
+    c = CM.per_token_analog_counts(cfg)
+    p = CM.price_counts(c)
+    assert 0 < p["raca_energy_pj"] < p["adc1b_energy_pj"]
+    # TOPS/W moves the other way, and zero-energy input is guarded
+    assert CM.effective_tops_per_w(c, p["raca_energy_pj"]) > (
+        CM.effective_tops_per_w(c, p["adc1b_energy_pj"])
+    )
+    zero = CM.AnalogOpCounts()
+    zp = CM.price_counts(zero)
+    assert zp["raca_energy_pj"] == 0.0
+    assert CM.effective_tops_per_w(zero, 0.0) == 0.0
+
+
+def test_unknown_family_layer_raises():
+    cfg = get_smoke_config("stablelm-3b")
+    bad = dataclasses.replace(cfg, layer_pattern=("nope",))
+    with pytest.raises((ValueError, KeyError)):
+        CM.per_token_weight_matmuls(bad)

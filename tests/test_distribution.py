@@ -171,6 +171,34 @@ def test_roofline_collective_parser():
     assert c["count"] == 4  # -done is not a transfer
 
 
+def test_roofline_dominant_term_tie_break():
+    """Tied times must resolve by listed order (compute first), never by
+    comparing the label strings ("memory" > "compute" alphabetically —
+    the bug a key-less tuple max had)."""
+    def rec(flops, bytes_, coll):
+        return {
+            "cost": {"flops": flops, "bytes accessed": bytes_},
+            "collectives": {"total_bytes": coll},
+            "model_flops_per_chip": flops,
+        }
+
+    # exact three-way tie: equal times for all terms → compute wins
+    f = RL.PEAK_FLOPS
+    t = RL.roofline_terms(rec(f, RL.HBM_BW, RL.ICI_BW))
+    assert t["compute_s"] == t["memory_s"] == t["collective_s"]
+    assert t["dominant"] == "compute"
+    # compute/memory tie with collectives below → still compute
+    t = RL.roofline_terms(rec(f, RL.HBM_BW, 0.0))
+    assert t["dominant"] == "compute"
+    # untied cases keep picking the true max
+    assert RL.roofline_terms(rec(f, 3 * RL.HBM_BW, 0.0))[
+        "dominant"
+    ] == "memory"
+    assert RL.roofline_terms(rec(f, 0.0, 3 * RL.ICI_BW))[
+        "dominant"
+    ] == "collective"
+
+
 def test_serving_engine_generates():
     from repro.serving import ServeConfig, ServingEngine
     from repro.models import get_model_fns

@@ -1462,9 +1462,43 @@ def test_metrics_latency_by_class(smoke):
         assert 0 < cls["ttft_p50_ms"] <= cls["ttft_p99_ms"]
         assert 0 < cls["latency_p50_ms"] <= cls["latency_p99_ms"]
     assert m.ttft_p50 <= m.ttft_p99
-    assert "ttft_p99_ms=" in m.row()
+    row = m.row()
+    assert "ttft_p99_ms=" in row
+    # row() must surface the per-class view it used to drop: one compact
+    # class=... entry per priority with its n and latency p99
+    assert "class=" in row
+    for pr, cls in m.latency_by_class.items():
+        assert f"{pr}:n={cls['n']}" in row
+    # the analog energy accounting rides along in row() too
+    assert "raca_pj_per_tok=" in row and "adc1b_pj_per_tok=" in row
     # done-reason counts: both requests spent their budget normally
     assert m.evictions == {"length": 2}
+
+
+def test_metrics_row_compact_renderings():
+    """ServingMetrics.row() unit-level: optional sections render only when
+    non-empty, with the documented compact shapes."""
+    from repro.serving.engine import ServingMetrics
+
+    bare = ServingMetrics()
+    assert "class=" not in bare.row()
+    assert "raca_pj_per_tok=" not in bare.row()
+    m = ServingMetrics(
+        latency_by_class={
+            0: {"n": 2, "ttft_p50_ms": 1.0, "ttft_p99_ms": 2.0,
+                "latency_p50_ms": 3.0, "latency_p99_ms": 40.0},
+            1: {"n": 5, "ttft_p50_ms": 1.0, "ttft_p99_ms": 2.0,
+                "latency_p50_ms": 3.0, "latency_p99_ms": 90.0},
+        },
+        analog={
+            "raca": {"energy_pj_per_token": 123.4},
+            "adc1b": {"energy_pj_per_token": 456.7},
+        },
+    )
+    row = m.row()
+    assert "class=0:n=2/p99=40ms,1:n=5/p99=90ms" in row
+    assert "raca_pj_per_tok=123" in row
+    assert "adc1b_pj_per_tok=457" in row
 
 
 def test_preemption_rejected_on_dense(smoke):
