@@ -57,10 +57,13 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import cost_model as CM
+from repro.kernels.backend import FaultConfig
 from repro.models import get_model_fns
 from repro.serving import (
     PRIORITY_BATCH,
     PRIORITY_INTERACTIVE,
+    DegradationPolicy,
+    FaultInjector,
     RequestState,
     ServeConfig,
     ServingEngine,
@@ -82,6 +85,7 @@ REPORT_SCHEMA = {
     "preemption": dict,
     "speculative_decode": dict,
     "energy_per_token": dict,
+    "fault_tolerance": dict,
     "dry_run": bool,
 }
 _INT8_ROW_KEYS = {
@@ -120,6 +124,32 @@ _ENERGY_KEYS = {
     "raca_energy_pj_per_token", "adc1b_energy_pj_per_token",
     "raca_tops_per_w", "adc1b_tops_per_w", "speculative",
 }
+_FAULT_KEYS = {
+    "n_requests", "stuck_rate", "canary_interval", "zero_fault", "faulted",
+}
+_FAULTED_KEYS = {
+    "accounting", "degraded_mode_final", "degraded_mode_max",
+    "canary_probes", "canary_failures", "retired_tiles",
+    "redundant_read_events", "transitions", "evictions", "all_served",
+    "injected",
+}
+
+
+def _expected_counts(acc: dict):
+    """Re-derive the accounted event totals from the snapshot's own
+    per-event shape counts — the integer-exact reconciliation formula
+    shared by the energy and fault-tolerance sections."""
+    tc = acc["tokens_computed"]
+    return (
+        CM.AnalogOpCounts.from_dict(acc["per_token_counts"])
+        .scaled(tc["total"])
+        + CM.AnalogOpCounts.from_dict(acc["per_sample_counts"])
+        .scaled(acc["sample_events"])
+        + CM.AnalogOpCounts.from_dict(acc["per_kv_token_counts"])
+        .scaled(acc["kv_written_tokens"])
+        + CM.AnalogOpCounts.from_dict(acc["per_redundant_counts"])
+        .scaled(acc["redundant_read_events"])
+    )
 
 
 def validate_report(report: dict) -> None:
@@ -241,14 +271,7 @@ def validate_report(report: dict) -> None:
         raise ValueError(
             f"energy_per_token: tokens_computed does not sum: {tc}"
         )
-    expected = (
-        CM.AnalogOpCounts.from_dict(acc["per_token_counts"])
-        .scaled(tc["total"])
-        + CM.AnalogOpCounts.from_dict(acc["per_sample_counts"])
-        .scaled(acc["sample_events"])
-        + CM.AnalogOpCounts.from_dict(acc["per_kv_token_counts"])
-        .scaled(acc["kv_written_tokens"])
-    )
+    expected = _expected_counts(acc)
     if expected.as_dict() != acc["counts"]:
         raise ValueError(
             "energy_per_token: event counts do not reconcile against "
@@ -303,6 +326,67 @@ def validate_report(report: dict) -> None:
             "energy_per_token: speculative per-published-token energy "
             f"ratio {spe['overhead_ratio']} < 1.0 — drafted work is "
             "being under-accounted"
+        )
+    ft = report["fault_tolerance"]
+    missing = _FAULT_KEYS - set(ft)
+    if missing:
+        raise ValueError(f"fault_tolerance missing keys {sorted(missing)}")
+    fa = ft["faulted"]
+    missing = _FAULTED_KEYS - set(fa)
+    if missing:
+        raise ValueError(
+            f"fault_tolerance.faulted missing keys {sorted(missing)}"
+        )
+    # the zero-knob contract: sim_faulty with every fault knob at zero
+    # must be BIT-IDENTICAL to the plain sim backend on a served trace
+    if ft["zero_fault"]["tokens_match"] is not True:
+        raise ValueError(
+            "fault_tolerance: zero-knob sim_faulty stream diverged from "
+            "the sim backend — the fault model is not identity at rest"
+        )
+    # liveness under injected device faults: every request the engine did
+    # not explicitly evict (typed reason) must have published tokens
+    if fa["all_served"] is not True:
+        raise ValueError(
+            "fault_tolerance: a non-evicted request ended without "
+            "published tokens under the fault schedule"
+        )
+    if fa["canary_failures"] < 1:
+        raise ValueError(
+            "fault_tolerance: the injected comparator offset never "
+            "failed a canary probe — detection is not being exercised"
+        )
+    # the degradation ladder must have tripped AND fully recovered once
+    # the injected fault was lifted (reversibility contract)
+    if not fa["transitions"]:
+        raise ValueError("fault_tolerance: no degradation transitions")
+    if fa["degraded_mode_max"] < 1:
+        raise ValueError("fault_tolerance: degradation never engaged")
+    if fa["degraded_mode_final"] != 0:
+        raise ValueError(
+            "fault_tolerance: engine did not recover to degraded_mode 0 "
+            "after recover_device "
+            f"(final level {fa['degraded_mode_final']})"
+        )
+    # redundant comparator re-reads must be priced: events recorded by
+    # the backend reconcile integer-exactly against the count ledger
+    facc = fa["accounting"]
+    if fa["redundant_read_events"] != facc["redundant_read_events"]:
+        raise ValueError(
+            "fault_tolerance: redundant_read_events metric diverged "
+            "from the accounting snapshot"
+        )
+    if fa["redundant_read_events"] < 1:
+        raise ValueError(
+            "fault_tolerance: the degraded engine recorded no redundant "
+            "comparator re-reads at level >= 2"
+        )
+    if _expected_counts(facc).as_dict() != facc["counts"]:
+        raise ValueError(
+            "fault_tolerance: faulted event counts do not reconcile "
+            "against tokens computed + redundant reads — expected "
+            f"{_expected_counts(facc).as_dict()}, "
+            f"reported {facc['counts']}"
         )
 
 
@@ -1001,6 +1085,116 @@ def bench_energy_per_token(cfg, params, n_req: int = 8) -> dict:
     return out
 
 
+def bench_fault_tolerance(cfg, params, n_req: int = 8) -> dict:
+    """The analog fault model end to end: identity at rest, the full
+    detect/mitigate/degrade/recover loop under an injected device fault.
+
+    Two runs on the same WTA trace:
+
+    * ``zero_fault`` — the ``sim_faulty`` backend with every knob at
+      zero against plain ``sim``: published token streams must be
+      byte-identical (the fault model is exact identity at rest;
+      validate_report enforces it on the committed artifact).
+    * ``faulted`` — seeded stuck cells from tick 0 plus an injected
+      comparator offset (``degrade_device`` at tick 4, lifted by
+      ``recover_device`` at tick 10).  The per-tick canary probe
+      catches the stuck cells (tile retirement clears them) and then
+      the offset (the degradation ladder climbs to load shedding);
+      after recovery the ladder walks back to 0.  Enforced downstream:
+      every non-evicted request published tokens, the canary failed at
+      least once, transitions were recorded AND reversed, and the
+      redundant comparator re-reads taken at ladder level >= 2
+      reconcile integer-exactly in the energy ledger.
+    """
+    mcfg = dataclasses.replace(
+        cfg, wta_head=True,
+        analog=dataclasses.replace(cfg.analog, wta_trials=8),
+    )
+    serve = dict(
+        max_batch=4, max_new_tokens=12, max_len=128,
+        kv_layout="paged", kv_block_size=16,
+    )
+    trace = make_trace(
+        seed=11, n_req=n_req, mean_gap_ticks=1.0,
+        prompt_len_range=(2, 12), new_tokens_range=(4, 13),
+        vocab=cfg.vocab,
+    )
+
+    # identity at rest: all-zero fault knobs vs the plain sim backend
+    streams = {}
+    for label, bk in (("sim", "sim"), ("sim_faulty", "sim_faulty")):
+        e = ServingEngine(
+            params, mcfg, ServeConfig(**serve, device_backend=bk)
+        )
+        drive_continuous(e, trace)
+        streams[label] = {r.rid: r.output for r in e.sched.all_requests()}
+    zero_fault = {
+        "tokens_match": streams["sim"] == streams["sim_faulty"],
+    }
+
+    # the fault loop: stuck cells from tick 0, comparator offset injected
+    # mid-run and lifted again; canary every tick, retirement + ladder on
+    stuck_rate = 0.02
+    inj = (
+        FaultInjector()
+        .at(4, "degrade_device", comparator_offset=2.0)
+        .at(10, "recover_device")
+    )
+    eng = ServingEngine(
+        params, mcfg,
+        ServeConfig(
+            **serve,
+            device_backend="sim_faulty",
+            device_fault_config=FaultConfig(seed=0, stuck_rate=stuck_rate),
+            canary_interval=1,
+            tile_retire_threshold=stuck_rate / 2,
+            degradation=DegradationPolicy(),
+            fault_injector=inj,
+        ),
+    )
+    drive_continuous(eng, trace)
+    # idle recovery: the trace can drain while the ladder is still up
+    # (recover_after clean canary passes per rung) — keep ticking the
+    # empty engine so the canary can walk it back to 0, bounded so a
+    # recovery bug degrades to a failed check instead of a hang
+    for _ in range(64):
+        if eng.metrics().degraded_mode == 0:
+            break
+        eng.tick()
+    m = eng.metrics()
+    reqs = list(eng.sched.all_requests())
+    evicted = {
+        r.rid for r in reqs
+        if r.done_reason not in (None, "eos", "length")
+    }
+    all_served = all(
+        r.done_reason in ("eos", "length") and len(r.output) > 0
+        for r in reqs if r.rid not in evicted
+    )
+    faulted = {
+        "accounting": m.analog,
+        "degraded_mode_final": m.degraded_mode,
+        "degraded_mode_max": max(
+            [t["to"] for t in m.degraded_transitions], default=0
+        ),
+        "canary_probes": m.canary_probes,
+        "canary_failures": m.canary_failures,
+        "retired_tiles": m.retired_tiles,
+        "redundant_read_events": m.redundant_read_events,
+        "transitions": m.degraded_transitions,
+        "evictions": dict(m.evictions),
+        "all_served": all_served,
+        "injected": [(t, k) for t, k, _ in inj.applied],
+    }
+    return {
+        "n_requests": n_req,
+        "stuck_rate": stuck_rate,
+        "canary_interval": 1,
+        "zero_fault": zero_fault,
+        "faulted": faulted,
+    }
+
+
 def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     base = get_smoke_config("stablelm-3b")
     if dry_run:
@@ -1211,6 +1405,27 @@ def run(dry_run: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             f"raca_tops_w={ept['raca_tops_per_w']:.2f} "
             f"spec_overhead={ept['speculative']['overhead_ratio']:.2f}x "
             f"match={ept['speculative']['tokens_match']}",
+        )
+    )
+    # fault tolerance: zero-knob identity vs sim, then the injected
+    # device-fault loop (canary detect -> tile retirement -> degradation
+    # ladder -> recovery), reconciled + reversibility-checked downstream
+    ft = bench_fault_tolerance(
+        pvd_cfg, pvd_params, n_req=4 if dry_run else 8
+    )
+    report["fault_tolerance"] = ft
+    fa = ft["faulted"]
+    rows.append(
+        (
+            "serve_fault_tolerance",
+            0.0,
+            f"zero_match={ft['zero_fault']['tokens_match']} "
+            f"canary={fa['canary_failures']}/{fa['canary_probes']} "
+            f"retired={fa['retired_tiles']} "
+            f"redundant={fa['redundant_read_events']} "
+            f"ladder_max={fa['degraded_mode_max']}"
+            f"->final={fa['degraded_mode_final']} "
+            f"served={fa['all_served']}",
         )
     )
     # sharded paged decode over the local host mesh: token identity vs the

@@ -340,6 +340,21 @@ def per_sample_analog_counts(cfg) -> AnalogOpCounts:
     )
 
 
+def per_redundant_read_counts(cfg) -> AnalogOpCounts:
+    """Events ONE redundant comparator re-read adds (fault mitigation).
+
+    With ``n_redundant_reads = R`` the WTA head re-races its full trial
+    bank R-1 extra times per sampled token and majority-votes; each extra
+    read costs exactly one more per-sample comparator sweep (but not a
+    wta_samples event — the published sample count is unchanged).  Greedy
+    heads re-read nothing (digital argmax is deterministic)."""
+    if not getattr(cfg, "wta_head", False):
+        return AnalogOpCounts()
+    return AnalogOpCounts(
+        comparator_decisions=cfg.analog.wta_trials * cfg.vocab,
+    )
+
+
 def per_kv_token_round_events(cfg) -> AnalogOpCounts:
     """Stochastic-rounding events one KV-WRITTEN token adds (int8 pools).
 

@@ -65,6 +65,23 @@ class DeviceParams:
         return dataclasses.replace(self, **kw)
 
 
+def weight_to_conductance(w: jax.Array, dp: DeviceParams) -> jax.Array:
+    """Map algorithmic weights onto device conductances (Eq. 4-5):
+    G = G0·W + G_ref."""
+    return dp.g0 * w + dp.g_ref
+
+
+def weight_from_conductance(g: jax.Array, dp: DeviceParams) -> jax.Array:
+    """Inverse of Eq. 4-5: the algorithmic weight a (possibly drifted or
+    stuck) conductance ``g`` reads back as, W = (G - G_ref) / G0.
+
+    The fault model perturbs in conductance space (stuck-at cells pin G to
+    G_min/G_max, drift multiplies G) and maps back through this inverse so
+    faulty weights land exactly where the device physics says they should.
+    """
+    return (g - dp.g_ref) / dp.g0
+
+
 def thermal_noise_rms(g: jax.Array, dp: DeviceParams) -> jax.Array:
     """RMS thermal-noise current of a device with conductance ``g`` (Eq. 1)."""
     return jnp.sqrt(4.0 * BOLTZMANN_K * dp.temperature * g * dp.delta_f)

@@ -33,15 +33,53 @@ Two usage planes, deliberately separate:
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 from typing import Any, Optional
 
 from repro.core import cost_model as CM
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Knobs of the deterministic ReRAM fault model (all zero => no fault).
+
+    The model is applied in *conductance space* at the backend-dispatch
+    layer: stuck-at cells pin G to G_min (SA0) / G_max (SA1), conductance
+    drift multiplies G by a power-law factor of the host fault clock, and
+    the readout knobs perturb the comparator operating point.  Every knob
+    at its default leaves :class:`FaultySimBackend` bit-identical to
+    :class:`SimBackend` (test-pinned per op family).
+    """
+
+    seed: int = 0
+    # fraction of cells stuck (split evenly SA0 / SA1), drawn once per
+    # weight shape from a PCG64 stream keyed by (seed, shape)
+    stuck_rate: float = 0.0
+    # power-law drift exponent: G(t) = G(0) · (1 + clock)^(-drift_nu)
+    drift_nu: float = 0.0
+    # drift multiplier is quantized to this bucket so the engine only
+    # retraces when the bucket crosses, not every tick
+    drift_quant: float = 0.02
+    # cycle-to-cycle read-noise sigma grows by (1 + inflation)
+    read_sigma_inflation: float = 0.0
+    # additive comparator threshold offset (z-units for WTA readout,
+    # output units for the linear crossbar read)
+    comparator_offset: float = 0.0
+    # physical tile geometry for stuck-at density / retirement
+    tile_rows: int = 128
+    tile_cols: int = 128
 
 
 class DeviceBackend:
     """Base: accounting surface (shared) + abstract compute dispatch."""
 
     name = "base"
+    # True when the backend's compute methods differ from the plain sim
+    # math — the engine then installs it process-wide around each tick so
+    # traces pick the faulty paths up.  Pure-accounting backends leave the
+    # process backend alone (no retraces, no cross-engine interference).
+    overrides_compute = False
 
     def __init__(self, model_cfg: Optional[Any] = None):
         self.model_cfg = model_cfg
@@ -49,9 +87,11 @@ class DeviceBackend:
             self._per_tok = CM.per_token_analog_counts(model_cfg)
             self._per_sample = CM.per_sample_analog_counts(model_cfg)
             self._per_kv_tok = CM.per_kv_token_round_events(model_cfg)
+            self._per_redundant = CM.per_redundant_read_counts(model_cfg)
         else:
             zero = CM.AnalogOpCounts()
             self._per_tok = self._per_sample = self._per_kv_tok = zero
+            self._per_redundant = zero
         self.reset()
 
     # -- accounting (host-side, engine-driven) ------------------------------
@@ -61,6 +101,7 @@ class DeviceBackend:
         self._tokens = {"prefill": 0, "decode": 0, "draft": 0}
         self._sample_events = 0
         self._kv_written_tokens = 0
+        self._redundant_reads = 0
 
     def note_call(self, profile: dict) -> None:
         """Record one device entry-point invocation.
@@ -74,13 +115,16 @@ class DeviceBackend:
             n = profile[kind]
             self._tokens[kind] += n
             fwd += n
+        redundant = profile.get("redundant", 0)
         self._sample_events += profile["samples"]
         self._kv_written_tokens += profile["kv_tokens"]
+        self._redundant_reads += redundant
         self._counts = (
             self._counts
             + self._per_tok.scaled(fwd)
             + self._per_sample.scaled(profile["samples"])
             + self._per_kv_tok.scaled(profile["kv_tokens"])
+            + self._per_redundant.scaled(redundant)
         )
 
     def events(self) -> CM.AnalogOpCounts:
@@ -114,15 +158,27 @@ class DeviceBackend:
             "tokens_published": published_tokens,
             "sample_events": self._sample_events,
             "kv_written_tokens": self._kv_written_tokens,
+            "redundant_read_events": self._redundant_reads,
             "counts": c.as_dict(),
             "per_token_counts": self._per_tok.as_dict(),
             "per_sample_counts": self._per_sample.as_dict(),
             "per_kv_token_counts": self._per_kv_tok.as_dict(),
+            "per_redundant_counts": self._per_redundant.as_dict(),
             "raca": scheme(prices["raca_energy_pj"]),
             "adc1b": scheme(prices["adc1b_energy_pj"]),
         }
 
     # -- compute dispatch (trace-time) --------------------------------------
+
+    def wta_readout_params(self, vth0: float, sigma_z: float):
+        """Comparator operating point seen by WTA readout heads.
+
+        Consulted at trace time by ``launch/specs.sample_tokens`` (which
+        drives ``core.wta`` directly, not ``ops.wta_counts``) so fault
+        backends can perturb the threshold/noise the serving sampler bakes
+        into its traces.  Identity on non-faulty backends — the zero-knob
+        trace is byte-identical."""
+        return vth0, sigma_z
 
     def crossbar_mac(self, x, w, key, cfg, binarize=True):
         raise NotImplementedError
@@ -188,19 +244,260 @@ class SimBackend(DeviceBackend):
         )
 
 
-BACKENDS = {"sim": SimBackend}
+class FaultySimBackend(SimBackend):
+    """Sim math wrapped in a deterministic, seeded ReRAM fault model.
+
+    Faults are applied at the dispatch layer, before/around the unchanged
+    sim kernels:
+
+    * **stuck-at cells** — per-shape SA0/SA1 masks drawn once from a PCG64
+      stream keyed by ``(seed, shape)``; stuck cells read back as exactly
+      ``w_min``/``w_max`` in normalized conductance units (via
+      ``physics.weight_from_conductance``), entering traces as constants.
+    * **conductance drift** — a multiplicative power-law factor of the
+      host-side fault clock (``advance_clock``), quantized to
+      ``drift_quant`` buckets; a bucket crossing bumps ``fault_version``
+      so the engine knows its compiled artifacts are stale.
+    * **read-noise inflation** — calibrated binarized reads see
+      ``beta/(1+i)``, calibrated linear reads ``linear_sigma·(1+i)``,
+      physical reads a temperature raised by ``(1+i)²`` (σ ∝ √T).
+    * **comparator offset** — added to the WTA threshold and to the linear
+      crossbar readout.  (The binarized crossbar's internal comparator
+      offset is NOT modeled — it lives inside the fused kernel.)
+
+    With every knob at zero each compute method delegates with unmodified
+    arguments, so traces — not just values — match :class:`SimBackend`.
+
+    Compiled-artifact staleness: swapping knobs only affects the *next*
+    trace.  ``fault_version`` increments on any change that alters traced
+    math (drift bucket, retirement, degrade/recover); the serving engine
+    checks it each tick and rebuilds its jitted entry points.
+    """
+
+    name = "sim_faulty"
+    overrides_compute = True
+
+    def __init__(
+        self,
+        model_cfg: Optional[Any] = None,
+        fault: Optional[FaultConfig] = None,
+    ):
+        self.fault = fault if fault is not None else FaultConfig()
+        self._clock = 0
+        self._overrides: dict = {}
+        self._stuck_maps: dict = {}     # (K, N) -> (sa0, sa1) bool ndarrays
+        self._retired: set = set()      # ((K, N), tile_i, tile_j)
+        self.fault_version = 0
+        self._drift_mult_q = self._drift_mult()
+        super().__init__(model_cfg)
+
+    # -- fault-state host API ------------------------------------------------
+
+    def _knob(self, name: str) -> float:
+        return self._overrides.get(name, getattr(self.fault, name))
+
+    def _drift_mult(self) -> float:
+        nu = self._knob("drift_nu")
+        if nu <= 0.0 or self._clock <= 0:
+            return 1.0
+        m = (1.0 + self._clock) ** (-nu)
+        q = self.fault.drift_quant
+        if q > 0.0:
+            m = max(q, round(m / q) * q)
+        return m
+
+    def _refresh(self) -> None:
+        new = self._drift_mult()
+        if new != self._drift_mult_q:
+            self._drift_mult_q = new
+            self.fault_version += 1
+
+    def advance_clock(self, n: int = 1) -> None:
+        """Tick the host-side fault clock; drift follows the power law."""
+        self._clock += int(n)
+        self._refresh()
+
+    def degrade(self, clock: Optional[int] = None, **knobs) -> None:
+        """Jump the fault clock and/or override readout knobs (injector
+        kind ``degrade_device``).  Always bumps ``fault_version``."""
+        allowed = {"read_sigma_inflation", "comparator_offset", "drift_nu"}
+        bad = sorted(set(knobs) - allowed)
+        if bad:
+            raise ValueError(
+                f"degrade: unknown knob(s) {bad}; allowed: {sorted(allowed)}"
+            )
+        if clock is not None:
+            self._clock = int(clock)
+        self._overrides.update(knobs)
+        self._drift_mult_q = self._drift_mult()
+        self.fault_version += 1
+
+    def recover(self) -> None:
+        """Reset the fault clock and drop knob overrides (injector kind
+        ``recover_device``).  Tile retirement persists — remapping to a
+        spare tile is a physical, one-way operation."""
+        self._clock = 0
+        self._overrides.clear()
+        self._drift_mult_q = self._drift_mult()
+        self.fault_version += 1
+
+    def _stuck_masks(self, shape):
+        rate = self.fault.stuck_rate
+        if rate <= 0.0 or len(shape) != 2:
+            return None, None
+        if shape not in self._stuck_maps:
+            import numpy as np
+
+            rng = np.random.default_rng([self.fault.seed, *shape])
+            u = rng.random(shape)
+            self._stuck_maps[shape] = (
+                u < rate / 2.0,
+                (u >= rate / 2.0) & (u < rate),
+            )
+        return self._stuck_maps[shape]
+
+    def stuck_cell_count(self) -> int:
+        return sum(
+            int(sa0.sum()) + int(sa1.sum())
+            for sa0, sa1 in self._stuck_maps.values()
+        )
+
+    @property
+    def retired_tiles(self) -> int:
+        return len(self._retired)
+
+    def retire_tiles(self, threshold: float) -> int:
+        """Retire (remap-to-spare) tiles whose stuck-at density crosses
+        ``threshold``: their stuck masks are cleared, so reads behave as a
+        healthy spare tile.  Returns the number of newly retired tiles and
+        bumps ``fault_version`` when any mask changed."""
+        if threshold <= 0.0:
+            return 0
+        tr, tc = self.fault.tile_rows, self.fault.tile_cols
+        newly = 0
+        for shape, (sa0, sa1) in self._stuck_maps.items():
+            rows, cols = shape
+            for ti in range(0, rows, tr):
+                for tj in range(0, cols, tc):
+                    tile = (shape, ti // tr, tj // tc)
+                    if tile in self._retired:
+                        continue
+                    sl = (slice(ti, ti + tr), slice(tj, tj + tc))
+                    cells = sa0[sl].size
+                    stuck = int(sa0[sl].sum()) + int(sa1[sl].sum())
+                    if cells and stuck / cells >= threshold:
+                        sa0[sl] = False
+                        sa1[sl] = False
+                        self._retired.add(tile)
+                        newly += 1
+        if newly:
+            self.fault_version += 1
+        return newly
+
+    def fault_state(self) -> dict:
+        return {
+            "clock": self._clock,
+            "drift_mult": self._drift_mult_q,
+            "fault_version": self.fault_version,
+            "retired_tiles": self.retired_tiles,
+            "stuck_cells": self.stuck_cell_count(),
+            "overrides": dict(self._overrides),
+        }
+
+    # -- faulty compute dispatch --------------------------------------------
+
+    def _weight_faults_active(self) -> bool:
+        return self.fault.stuck_rate > 0.0 or self._drift_mult_q != 1.0
+
+    def _faulty_weights(self, w):
+        """Perturb crossbar weights as the devices would read back: drift
+        first (multiplicative in conductance space), stuck cells override.
+        The normalization scale is the ORIGINAL max|w| so stuck cells land
+        exactly on w_min/w_max in device units."""
+        if not self._weight_faults_active():
+            return w
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import physics as P
+
+        dp = P.DeviceParams()
+        s = jax.lax.stop_gradient(
+            jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+        )
+        wn = w / s
+        m = self._drift_mult_q
+        if m != 1.0:
+            wn = P.weight_from_conductance(
+                m * P.weight_to_conductance(wn, dp), dp
+            )
+        sa0, sa1 = self._stuck_masks(tuple(w.shape))
+        if sa0 is not None:
+            wn = jnp.where(sa0, dp.w_min, wn)
+            wn = jnp.where(sa1, dp.w_max, wn)
+        return (wn * s).astype(w.dtype)
+
+    def wta_readout_params(self, vth0: float, sigma_z: float):
+        return (
+            vth0 + self._knob("comparator_offset"),
+            sigma_z * (1.0 + self._knob("read_sigma_inflation")),
+        )
+
+    def crossbar_mac(self, x, w, key, cfg, binarize=True):
+        from repro.kernels import ops
+
+        infl = self._knob("read_sigma_inflation")
+        off = self._knob("comparator_offset")
+        if not (self._weight_faults_active() or infl or off):
+            return ops.crossbar_mac_sim(x, w, key, cfg, binarize)
+        w = self._faulty_weights(w)
+        if infl:
+            if cfg.calibrated and binarize:
+                cfg = dataclasses.replace(cfg, beta=cfg.beta / (1.0 + infl))
+            elif cfg.calibrated:
+                cfg = dataclasses.replace(
+                    cfg, linear_sigma=cfg.linear_sigma * (1.0 + infl)
+                )
+            else:
+                dev = cfg.device.replace(
+                    temperature=cfg.device.temperature * (1.0 + infl) ** 2
+                )
+                cfg = dataclasses.replace(cfg, device=dev)
+        y = ops.crossbar_mac_sim(x, w, key, cfg, binarize)
+        if off and not binarize:
+            y = y + off
+        return y
+
+    def wta_counts(self, z, key, *, n_trials, vth0, sigma_z):
+        from repro.kernels import ops
+
+        vth0, sigma_z = self.wta_readout_params(vth0, sigma_z)
+        return ops.wta_counts_sim(
+            z, key, n_trials=n_trials, vth0=vth0, sigma_z=sigma_z
+        )
+
+    # stoch_round / stoch_round_serving / paged_(prefill_)attention are
+    # digital-domain ops (counters, SRAM attention) — inherited sim paths.
+
+
+BACKENDS = {"sim": SimBackend, "sim_faulty": FaultySimBackend}
 
 _ACTIVE: DeviceBackend = SimBackend()
 
 
-def make_backend(name: str, model_cfg: Optional[Any] = None) -> DeviceBackend:
-    """Instantiate a registered backend (loud on unknown names)."""
+def make_backend(
+    name: str, model_cfg: Optional[Any] = None, **kw
+) -> DeviceBackend:
+    """Instantiate a registered backend (loud on unknown names).
+
+    Extra keyword arguments are forwarded to the backend constructor —
+    e.g. ``make_backend("sim_faulty", cfg, fault=FaultConfig(...))``."""
     if name not in BACKENDS:
         raise ValueError(
             f"unknown device backend {name!r}; registered: "
             f"{sorted(BACKENDS)}"
         )
-    return BACKENDS[name](model_cfg)
+    return BACKENDS[name](model_cfg, **kw)
 
 
 def get_backend() -> DeviceBackend:
@@ -217,3 +514,15 @@ def set_backend(backend: DeviceBackend) -> DeviceBackend:
     prev = _ACTIVE
     _ACTIVE = backend
     return prev
+
+
+@contextlib.contextmanager
+def use_backend(backend: DeviceBackend):
+    """Exception-safe scoped install: the previous process-wide backend is
+    restored on exit no matter how the body leaves, so a failing test (or
+    a raising engine tick) can't leak a faulty backend into later work."""
+    prev = set_backend(backend)
+    try:
+        yield backend
+    finally:
+        set_backend(prev)

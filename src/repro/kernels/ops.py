@@ -255,6 +255,60 @@ def crossbar_mac_reference(
 
 
 # ---------------------------------------------------------------------------
+# Canary probe: fixed known-answer crossbar MAC for drift detection.
+# ---------------------------------------------------------------------------
+
+_CANARY_ROWS, _CANARY_COLS = 128, 8
+
+
+@functools.lru_cache(maxsize=1)
+def _canary_operands():
+    import numpy as np
+
+    rng = np.random.default_rng(0xCA9A31)
+    x = rng.uniform(-1.0, 1.0, (1, _CANARY_ROWS)).astype(np.float32)
+    w = rng.uniform(-1.0, 1.0, (_CANARY_ROWS, _CANARY_COLS)).astype(
+        np.float32
+    )
+    return x, w
+
+
+@functools.lru_cache(maxsize=1)
+def _canary_cfg():
+    from repro.core.analog import AnalogConfig
+
+    # Unquantized calibrated linear read: the healthy answer is exactly
+    # x @ w plus a small zero-mean read noise, so drift/stuck-at shifts
+    # are separable from the noise floor by a relative-error threshold.
+    return AnalogConfig(
+        mode="analog_linear", quantize=False, calibrated=True,
+        linear_sigma=0.01,
+    )
+
+
+def canary_expected():
+    """Host-side known answer of the canary MAC (float32 ndarray)."""
+    x, w = _canary_operands()
+    return x @ w
+
+
+def canary_mac(key: jax.Array) -> jax.Array:
+    """Fire the canary: a fixed (1, 128) x (128, 8) linear crossbar read
+    through the ACTIVE device backend.
+
+    On a healthy backend the result is ``canary_expected()`` plus
+    ~linear_sigma read noise; conductance drift scales it multiplicatively
+    and stuck-at cells shift it, so a relative-error check against the
+    known answer detects substrate degradation without touching live
+    traffic.  Traced + jitted by the serving engine, and rebuilt alongside
+    the other entry points when the backend's fault_version bumps."""
+    x, w = _canary_operands()
+    return crossbar_mac(
+        jnp.asarray(x), jnp.asarray(w), key, _canary_cfg(), binarize=False
+    )
+
+
+# ---------------------------------------------------------------------------
 # WTA vote counting.
 # ---------------------------------------------------------------------------
 

@@ -85,6 +85,41 @@ def main() -> None:
                          "records; oldest records are dropped at the cap "
                          "and their victims recompute from the prompt on "
                          "restore (default: unbounded)")
+    ap.add_argument("--device-backend", default="sim",
+                    help="analog device backend: 'sim' (ideal math) or "
+                         "'sim_faulty' (seeded ReRAM fault model: stuck "
+                         "cells, conductance drift, readout noise)")
+    ap.add_argument("--stuck-rate", type=float, default=0.0,
+                    help="fraction of crossbar cells stuck at SA0/SA1 "
+                         "(sim_faulty; split evenly between the rails)")
+    ap.add_argument("--drift-nu", type=float, default=0.0,
+                    help="conductance drift exponent: multiplier "
+                         "(1+clock)^-nu on the fault clock (sim_faulty)")
+    ap.add_argument("--read-sigma-inflation", type=float, default=0.0,
+                    help="fractional inflation of comparator read-noise "
+                         "sigma (sim_faulty)")
+    ap.add_argument("--comparator-offset", type=float, default=0.0,
+                    help="additive comparator threshold offset in "
+                         "normalized units (sim_faulty)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic stuck-cell maps "
+                         "(sim_faulty)")
+    ap.add_argument("--canary-interval", type=int, default=0,
+                    help="run a known-answer crossbar canary probe every "
+                         "N engine ticks (0 = off); failures feed the "
+                         "degradation ladder and tile retirement")
+    ap.add_argument("--n-redundant-reads", type=int, default=1,
+                    help="baseline comparator re-reads per WTA decode "
+                         "sample, majority-voted (1 = single read)")
+    ap.add_argument("--tile-retire-threshold", type=float, default=0.0,
+                    help="retire crossbar tiles whose stuck-cell density "
+                         "exceeds this fraction after a canary failure "
+                         "(0 = never retire)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="enable the graceful-degradation ladder "
+                         "(disable speculation -> raise redundant reads "
+                         "-> shed batch admissions) driven by canary "
+                         "failures and sanity evictions")
     ap.add_argument("--ckpt-dir")
     args = ap.parse_args()
 
@@ -109,6 +144,23 @@ def main() -> None:
         mesh = make_host_mesh(model=args.mesh_model)
         print(f"serving mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
+    fault_cfg = None
+    if args.device_backend == "sim_faulty":
+        from repro.kernels.backend import FaultConfig
+
+        fault_cfg = FaultConfig(
+            seed=args.fault_seed,
+            stuck_rate=args.stuck_rate,
+            drift_nu=args.drift_nu,
+            read_sigma_inflation=args.read_sigma_inflation,
+            comparator_offset=args.comparator_offset,
+        )
+    degradation = None
+    if args.degrade:
+        from repro.serving import DegradationPolicy
+
+        degradation = DegradationPolicy()
+
     engine_cls = StaticServingEngine if args.static else ServingEngine
     eng = engine_cls(
         params, cfg,
@@ -127,6 +179,12 @@ def main() -> None:
             speculate_k=args.speculate_k,
             spill_budget_bytes=args.spill_budget_bytes,
             mesh=mesh,
+            device_backend=args.device_backend,
+            device_fault_config=fault_cfg,
+            canary_interval=args.canary_interval,
+            n_redundant_reads=args.n_redundant_reads,
+            tile_retire_threshold=args.tile_retire_threshold,
+            degradation=degradation,
         ),
     )
     rng = jax.random.PRNGKey(7)
@@ -179,6 +237,14 @@ def main() -> None:
             f"{row['ttft_p99_ms']:.0f}ms, "
             f"latency p50/p99 {row['latency_p50_ms']:.0f}/"
             f"{row['latency_p99_ms']:.0f}ms"
+        )
+    if m.canary_probes or m.degraded_mode or m.degraded_transitions:
+        print(
+            f"fault tolerance: degraded_mode {m.degraded_mode}, "
+            f"canary {m.canary_failures}/{m.canary_probes} failed, "
+            f"retired tiles {m.retired_tiles}, "
+            f"redundant reads {m.redundant_read_events}, "
+            f"transitions {len(m.degraded_transitions)}"
         )
     if m.analog:
         tc = m.analog["tokens_computed"]

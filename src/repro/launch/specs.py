@@ -387,7 +387,8 @@ def paged_cache_shardings(
 
 def make_sharded_paged_entry_points(
     cfg: ModelConfig, mesh, *, batch: int, n_pages: int, block_size: int,
-    speculate_k: int = 0,
+    speculate_k: int = 0, n_redundant: int = 1, sat_threshold: float = 1e6,
+    entropy_floor: float = 0.0,
 ) -> dict:
     """The paged serving entry points, jitted mesh-aware.
 
@@ -447,7 +448,10 @@ def make_sharded_paged_entry_points(
     vec_sh = NamedSharding(mesh, PartitionSpec(bax))
     mat_sh = NamedSharding(mesh, PartitionSpec(bax, None))
     serve_step = jax.jit(
-        make_paged_serve_step(cfg),
+        make_paged_serve_step(
+            cfg, n_redundant=n_redundant, sat_threshold=sat_threshold,
+            entropy_floor=entropy_floor,
+        ),
         donate_argnums=(1,),
         in_shardings=(params_sh, cache_sh, mat_sh, vec_sh, mat_sh, vec_sh),
         out_shardings=(cache_sh, vec_sh, vec_sh),
@@ -552,7 +556,9 @@ def make_sharded_paged_entry_points(
     return out
 
 
-def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):
+def sample_tokens(
+    cfg: ModelConfig, logits, key=None, steps=None, n_redundant: int = 1
+):
     """Next-token selection shared by prefill and decode steps.
 
     ``logits`` is (B, V).  With ``key=None`` (or ``wta_head`` off) this is the
@@ -566,33 +572,66 @@ def sample_tokens(cfg: ModelConfig, logits, key=None, steps=None):
         to which other requests share the batch, which continuous batching
         requires.  ``steps`` (B,) int32, when given, is folded into each
         slot's key so every decode step draws fresh noise.
+
+    The comparator operating point (threshold, noise sigma) is consulted
+    from the ACTIVE device backend at trace time
+    (``wta_readout_params`` — identity on healthy backends, perturbed by
+    fault backends), so substrate faults reach the serving sampler.
+
+    ``n_redundant = R > 1`` is the fault-mitigation re-read: the full WTA
+    trial bank races R times (read 0 on the EXACT plain-path key, extra
+    reads on a fold of the slot key by the read index) and the published
+    token is the majority vote over the R reads (ties break to the lowest
+    token id).  ``R = 1`` is byte-identical to the pre-knob trace.
     """
     if not (cfg.wta_head and key is not None):
         return jnp.argmax(logits, axis=-1).astype(_i32)
 
     from repro.core import wta as W
+    from repro.kernels import backend as BK
+
+    vth0, sigma_z = BK.get_backend().wta_readout_params(
+        cfg.analog.vth0, W.wta_sigma_z(cfg.analog.beta)
+    )
 
     def counts_one(k, z):
         res = W.wta_trials(
             k,
             z.astype(jnp.float32),
             n_trials=cfg.analog.wta_trials,
-            vth0=cfg.analog.vth0,
-            beta=cfg.analog.beta,
+            vth0=vth0,
+            sigma_z=sigma_z,
         )
         return res.counts
 
-    if key.ndim == 2:  # per-slot keys
-        if steps is not None:
-            key = jax.vmap(jax.random.fold_in)(key, steps)
-        counts = jax.vmap(counts_one)(key, logits)
-    else:
-        counts = counts_one(key, logits)
-    return jnp.argmax(counts, axis=-1).astype(_i32)
+    def sample_once(k):
+        if k.ndim == 2:  # per-slot keys
+            if steps is not None:
+                k = jax.vmap(jax.random.fold_in)(k, steps)
+            counts = jax.vmap(counts_one)(k, logits)
+        else:
+            counts = counts_one(k, logits)
+        return jnp.argmax(counts, axis=-1).astype(_i32)
+
+    reads = max(int(n_redundant), 1)
+    if reads == 1:
+        return sample_once(key)
+    votes = [sample_once(key)]
+    for r in range(1, reads):
+        if key.ndim == 2:
+            kr = jax.vmap(jax.random.fold_in, in_axes=(0, None))(key, r)
+        else:
+            kr = jax.random.fold_in(key, r)
+        votes.append(sample_once(kr))
+    tally = jax.nn.one_hot(
+        jnp.stack(votes, axis=0), logits.shape[-1], dtype=_i32
+    ).sum(axis=0)
+    return jnp.argmax(tally, axis=-1).astype(_i32)
 
 
 def analog_call_profile(
-    entry: str, *, tokens: int = 1, batch: int = 1, k: int = 0
+    entry: str, *, tokens: int = 1, batch: int = 1, k: int = 0,
+    redundant: int = 0,
 ) -> dict:
     """Analog-event multiplicities for ONE invocation of a serving entry
     point built in this module — the contract the energy accounting rides
@@ -624,14 +663,26 @@ def analog_call_profile(
     * page/state movement entry points (``page_copy``, ``page_spill``,
       ``page_restore``, ``state_gather``, ``state_insert``,
       ``spec_rollback``) — pure memory traffic, no crossbar events.
+
+    ``redundant`` counts EXTRA comparator re-reads beyond the first
+    (fault-mitigation majority voting): a serve step at
+    ``n_redundant_reads = R`` passes ``redundant = (R-1)·batch``, each
+    priced as one more per-sample comparator sweep
+    (``cost_model.per_redundant_read_counts``) without adding sample
+    events — the published stream is unchanged, only energy grows.
     """
-    zero = dict(prefill=0, decode=0, draft=0, samples=0, kv_tokens=0)
+    zero = dict(
+        prefill=0, decode=0, draft=0, samples=0, kv_tokens=0, redundant=0
+    )
     if entry == "suffix_prefill":
         return dict(zero, prefill=tokens, kv_tokens=tokens)
     if entry == "sample0":
         return dict(zero, samples=1)
     if entry == "serve_step":
-        return dict(zero, decode=batch, samples=batch, kv_tokens=batch)
+        return dict(
+            zero, decode=batch, samples=batch, kv_tokens=batch,
+            redundant=redundant,
+        )
     if entry == "spec_round":
         return dict(
             zero,
@@ -677,30 +728,75 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
-def make_paged_serve_step(cfg: ModelConfig):
+# Per-slot logit-sanity codes emitted by the paged serve step (the third
+# output).  0 is healthy; nonzero codes map to typed eviction reasons.
+SANE_OK = 0
+SANE_NAN = 1
+SANE_SATURATED = 2
+SANE_ENTROPY_COLLAPSE = 3
+SANITY_REASONS = {
+    SANE_NAN: "nan",
+    SANE_SATURATED: "saturated",
+    SANE_ENTROPY_COLLAPSE: "entropy_collapse",
+}
+
+
+def make_paged_serve_step(
+    cfg: ModelConfig,
+    *,
+    n_redundant: int = 1,
+    sat_threshold: float = 1e6,
+    entropy_floor: float = 0.0,
+):
     """One decode step over a paged cache:
-    (params, cache, table(B,W), token(B,)) -> (cache, token, ok).
+    (params, cache, table(B,W), token(B,)) -> (cache, token, sane).
 
     ``table`` is the host scheduler's block table, sliced to the current
     window of W blocks — the only width the step touches, which is where
     the O(max_len) → O(valid blocks) decode saving comes from.  Each
     distinct W is one retrace of the same jit (the engine buckets W to a
     power of two, so compiles stay logarithmic in max_len).  ``key`` /
-    ``steps`` follow the :func:`sample_tokens` contract.
+    ``steps`` follow the :func:`sample_tokens` contract, including the
+    ``n_redundant`` majority-vote re-read knob.
 
-    ``ok`` is a (B,) bool finite-logits flag per slot — the NaN/Inf guard:
-    an analog path (or an injected fault) that emits a non-finite logit
-    row flips the slot's flag to False, and the engine evicts that request
-    with reason ``"nan"`` instead of publishing a garbage token.  Computing
-    the flag inside the step costs one fused reduction over logits the
-    step already materializes — no extra device round trip."""
+    ``sane`` is a (B,) int32 logit-sanity code per slot (the detection
+    half of the degraded-device loop, generalizing the old bool
+    finite-logits flag):
+
+    * ``SANE_NAN`` — a non-finite logit row (the original NaN/Inf guard);
+    * ``SANE_SATURATED`` — finite but ``max|logit| > sat_threshold``: the
+      analog range blew up (drift/stuck-at pushing pre-activations to the
+      rail) without tripping the float limits yet;
+    * ``SANE_ENTROPY_COLLAPSE`` — softmax entropy strictly below
+      ``entropy_floor`` (only computed when the floor is positive, so the
+      default trace is unchanged): the distribution pinned to one token,
+      the classic stuck-column signature.
+
+    The engine evicts a flagged slot with the matching typed reason
+    instead of publishing a garbage token.  All checks ride on the logits
+    the step already materializes — no extra device round trip."""
     if cfg.family == "encdec":
         raise ValueError("paged serving is token-LM only (no encdec)")
 
     def serve_step(params, cache, table, token, key=None, steps=None):
         cache, logits = TF.lm_decode_step(params, cache, token, cfg, table)
-        ok = jnp.isfinite(logits.astype(jnp.float32)).all(axis=-1)
-        return cache, sample_tokens(cfg, logits, key, steps), ok
+        zf = logits.astype(jnp.float32)
+        finite = jnp.isfinite(zf).all(axis=-1)
+        sat = jnp.max(jnp.abs(zf), axis=-1) > jnp.float32(sat_threshold)
+        sane = jnp.where(
+            finite,
+            jnp.where(sat, SANE_SATURATED, SANE_OK),
+            SANE_NAN,
+        ).astype(_i32)
+        if entropy_floor > 0.0:  # static: off => identical trace
+            p = jax.nn.softmax(zf, axis=-1)
+            ent = -jnp.sum(p * jnp.log(jnp.clip(p, 1e-30, 1.0)), axis=-1)
+            collapsed = finite & ~sat & (ent < jnp.float32(entropy_floor))
+            sane = jnp.where(collapsed, SANE_ENTROPY_COLLAPSE, sane).astype(
+                _i32
+            )
+        tok = sample_tokens(cfg, logits, key, steps, n_redundant=n_redundant)
+        return cache, tok, sane
 
     return serve_step
 

@@ -1,4 +1,5 @@
 from .engine import (
+    DegradationPolicy,
     ServeConfig,
     ServingEngine,
     ServingMetrics,
@@ -19,6 +20,7 @@ from .scheduler import (
 
 __all__ = [
     "BlockAllocator",
+    "DegradationPolicy",
     "EVICT_REASONS",
     "FaultInjector",
     "POOL_HOG_OWNER",

@@ -67,6 +67,7 @@ the baseline that benchmarks and equivalence tests compare against.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Optional, Sequence
@@ -76,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import backend as BK
+from repro.kernels import ops as KOPS
 from repro.launch import specs as SP
 from repro.models import ModelConfig, get_model_fns
 from repro.serving.scheduler import (
@@ -100,6 +102,37 @@ def _default_buckets(max_len: int) -> tuple[int, ...]:
         b *= 2
     out.append(max_len)
     return tuple(out)
+
+
+@dataclasses.dataclass
+class DegradationPolicy:
+    """Graceful-degradation ladder under sustained fault pressure.
+
+    The engine tracks *detection events* per tick (canary failures +
+    logit-sanity evictions).  ``trip_after`` consecutive dirty ticks
+    escalate one rung; ``recover_after`` consecutive clean canary PASSES
+    de-escalate one rung (so without a canary configured, degradation is
+    one-way — there is no evidence the substrate recovered).  Rungs, in
+    order, trade throughput for integrity:
+
+    * level 0 — healthy, all features on;
+    * level 1 — speculative decoding disabled (a drafted run multiplies
+      the blast radius of one bad logit row by k);
+    * level 2 — WTA redundant reads raised to ``redundant_reads``
+      (majority voting over comparator re-reads, priced in the energy
+      accounting);
+    * level 3 — admissions shed: queued requests with priority strictly
+      less urgent than ``shed_priority_above`` wait while interactive
+      traffic keeps flowing.
+
+    Every transition (either direction) is recorded in
+    ``ServingMetrics.degraded_transitions`` with the tick and cause.
+    """
+
+    trip_after: int = 2        # consecutive dirty ticks per escalation
+    recover_after: int = 3     # consecutive clean canary passes per rung
+    redundant_reads: int = 3   # R at level >= 2 (majority vote)
+    shed_priority_above: int = 0  # level 3: shed priority > this
 
 
 @dataclasses.dataclass
@@ -193,6 +226,33 @@ class ServeConfig:
     # the Table I cost model.  Each engine owns a PRIVATE backend
     # instance, so two engines compared side by side never share tallies.
     device_backend: str = "sim"
+    # ---- degraded-device serving (see docs/serving.md §"Analog fault
+    # model & degraded-mode serving") ----
+    # kernels.backend.FaultConfig for device_backend="sim_faulty" — the
+    # deterministic stuck-at/drift/read-noise/comparator-offset model.
+    # Only valid with the faulty backend (loud otherwise).
+    device_fault_config: Optional[Any] = None
+    # fire the known-answer canary MAC every N ticks (0 = off); a probe
+    # whose relative error vs the host-side answer exceeds
+    # canary_threshold counts as a detection event (and triggers tile
+    # retirement when tile_retire_threshold > 0)
+    canary_interval: int = 0
+    canary_threshold: float = 0.05
+    # retire (remap-to-spare) crossbar tiles whose stuck-at density
+    # crosses this on a canary failure; 0 disables retirement
+    tile_retire_threshold: float = 0.0
+    # WTA comparator re-reads per sampled token (majority vote); 1 is the
+    # plain single-read path, byte-identical to the pre-knob trace
+    n_redundant_reads: int = 1
+    # logit-sanity detection knobs of the paged decode step: finite but
+    # |logit| above the saturation threshold evicts "saturated"; softmax
+    # entropy strictly below the floor evicts "entropy_collapse" (0.0
+    # disables the entropy check AND keeps the default trace unchanged)
+    logit_sat_threshold: float = 1e6
+    logit_entropy_floor: float = 0.0
+    # graceful-degradation ladder; None disables the policy (detection
+    # still evicts, but nothing downshifts)
+    degradation: Optional[DegradationPolicy] = None
 
     def buckets(self) -> tuple[int, ...]:
         if not self.prefill_buckets:
@@ -333,6 +393,51 @@ class ServeConfig:
                 f"unknown device_backend {self.device_backend!r}; "
                 f"registered: {sorted(BK.BACKENDS)}"
             )
+        faulty = getattr(
+            BK.BACKENDS[self.device_backend], "overrides_compute", False
+        )
+        if faulty and self.kv_layout != "paged":
+            raise ValueError(
+                f"device_backend={self.device_backend!r} overrides compute "
+                "and needs the paged engine's rebuild/degradation loop; "
+                "the dense layout is the healthy byte-identity oracle"
+            )
+        if self.device_fault_config is not None and not faulty:
+            raise ValueError(
+                "device_fault_config is only meaningful with a fault "
+                f"backend (e.g. 'sim_faulty'); device_backend="
+                f"{self.device_backend!r} would silently ignore it"
+            )
+        if self.n_redundant_reads < 1:
+            raise ValueError(
+                f"n_redundant_reads must be >= 1, got "
+                f"{self.n_redundant_reads}"
+            )
+        if self.canary_interval < 0:
+            raise ValueError(
+                f"canary_interval must be >= 0, got {self.canary_interval}"
+            )
+        if self.canary_threshold <= 0.0:
+            raise ValueError(
+                f"canary_threshold must be > 0, got {self.canary_threshold}"
+            )
+        if not 0.0 <= self.tile_retire_threshold <= 1.0:
+            raise ValueError(
+                f"tile_retire_threshold must be in [0, 1], got "
+                f"{self.tile_retire_threshold}"
+            )
+        if self.degradation is not None:
+            pol = self.degradation
+            if pol.trip_after < 1 or pol.recover_after < 1:
+                raise ValueError(
+                    "DegradationPolicy trip_after/recover_after must be "
+                    f">= 1, got {pol.trip_after}/{pol.recover_after}"
+                )
+            if pol.redundant_reads < 1:
+                raise ValueError(
+                    "DegradationPolicy redundant_reads must be >= 1, got "
+                    f"{pol.redundant_reads}"
+                )
         if self.spill_budget_bytes is not None:
             if self.kv_layout != "paged":
                 raise ValueError(
@@ -386,6 +491,14 @@ class ServingMetrics:
     # against, and Table I pricing under RACA vs 1-bit-ADC readout (see
     # DeviceBackend.snapshot).  Empty for the static reference engine.
     analog: dict = dataclasses.field(default_factory=dict)
+    # ---- degraded-device serving ----
+    degraded_mode: int = 0        # current DegradationPolicy rung (0..3)
+    canary_probes: int = 0        # known-answer probes fired
+    canary_failures: int = 0      # probes past canary_threshold
+    retired_tiles: int = 0        # crossbar tiles remapped to spares
+    redundant_read_events: int = 0  # extra comparator re-reads (priced)
+    # every ladder transition: {tick, from, to, why} in firing order
+    degraded_transitions: list = dataclasses.field(default_factory=list)
 
     @property
     def decode_step_ms(self) -> float:
@@ -412,6 +525,19 @@ class ServingMetrics:
             out += " evict=" + ",".join(
                 f"{k}:{v}" for k, v in sorted(self.evictions.items())
             )
+        if self.degraded_mode or self.degraded_transitions:
+            out += (
+                f" degraded={self.degraded_mode}"
+                f" transitions={len(self.degraded_transitions)}"
+            )
+        if self.canary_probes:
+            out += (
+                f" canary={self.canary_failures}/{self.canary_probes}"
+            )
+        if self.retired_tiles:
+            out += f" retired_tiles={self.retired_tiles}"
+        if self.redundant_read_events:
+            out += f" redundant_reads={self.redundant_read_events}"
         if self.latency_by_class:
             out += " class=" + ",".join(
                 f"{k}:n={v['n']}"
@@ -448,6 +574,22 @@ class ServingEngine:
         self.cfg = cfg
         self.sched = Scheduler(cfg.max_batch)
         b = cfg.max_batch
+        # private per-engine device backend: analog-event accounting for
+        # THIS engine's traffic only.  A compute-overriding backend
+        # (sim_faulty) is additionally installed process-wide around each
+        # tick (use_backend), so its faulty math reaches the traces; a
+        # pure-accounting backend never touches the process dispatch.
+        fault_kw = {}
+        if cfg.device_fault_config is not None:
+            fault_kw["fault"] = cfg.device_fault_config
+        self.backend = BK.make_backend(
+            cfg.device_backend, model_cfg, **fault_kw
+        )
+        # base WTA redundant-read factor (R=1 for greedy heads: a digital
+        # argmax re-read can never change the vote)
+        self._redundant_base = (
+            max(int(cfg.n_redundant_reads), 1) if model_cfg.wta_head else 1
+        )
         if self.paged:
             self._max_blocks = cfg.max_kv_blocks()
             self.blocks = BlockAllocator(
@@ -457,99 +599,7 @@ class ServingEngine:
             self._table = np.zeros((b, self._max_blocks), np.int32)
             # host mirror of cache["pos"] (drives the decode window width)
             self._host_pos = np.zeros((b,), np.int64)
-            if self.mesh is not None:
-                # sharded decode: the SAME four entry points, jitted with
-                # mesh-aware in/out shardings (pool pages over data,
-                # kv_heads over model, per-slot inputs over data; params
-                # replicated).  Donation + static-arg discipline match
-                # the unsharded jits, so the recompile guards hold.
-                eps = SP.make_sharded_paged_entry_points(
-                    model_cfg, self.mesh, batch=b,
-                    n_pages=cfg.pool_blocks(model_cfg.kv_cache_dtype),
-                    block_size=cfg.kv_block_size,
-                    speculate_k=self.spec_k,
-                )
-                self._serve_step = eps["serve_step"]
-                self._suffix_prefill = eps["suffix_prefill"]
-                self._state_insert = eps["state_insert"]
-                self._page_copy = eps["page_copy"]
-                self._page_spill = eps["page_spill"]
-                self._page_restore = eps["page_restore"]
-                self._state_gather = eps["state_gather"]
-                if self.spec_k:
-                    self._spec_round = eps["spec_round"]
-                    self._spec_rollback = eps["spec_rollback"]
-                self._shardings = eps["shardings"]
-                # params live replicated on the mesh — placed ONCE here,
-                # not re-transferred per call
-                self.params = jax.device_put(
-                    params, self._shardings["params"]
-                )
-            else:
-                self._serve_step = jax.jit(
-                    SP.make_paged_serve_step(model_cfg),
-                    donate_argnums=(1,),
-                )
-                # THE paged prefill: a resumable suffix-chunk step (cold
-                # prefills run their whole bucket as chunks from zeroed
-                # state, partial-prefix hits start at q0 > 0 attending
-                # into shared pages).  ``bucket`` is the only static
-                # argument — one compile per (bucket, chunk shape) pair;
-                # the cache is donated (in-place page writes), the
-                # threaded state is NOT (boundary snapshots are stashed
-                # in the prefix index and must survive the next chunk
-                # call).
-                self._suffix_prefill = jax.jit(
-                    SP.make_paged_suffix_prefill(model_cfg),
-                    static_argnames=("bucket",), donate_argnums=(1,),
-                )
-                # prefix-sharing entry points (each compiles at most once
-                # — state-leaf shapes are bucket-independent, page ids /
-                # logits shapes are fixed): completion/full-hit
-                # admissions insert per-slot state leaves, sample the
-                # first token from last chunk (or stored) logits, and
-                # COW forks copy one pool page onto another
-                self._state_insert = jax.jit(
-                    SP.make_paged_state_insert(model_cfg),
-                    donate_argnums=(0,),
-                )
-                self._page_copy = jax.jit(
-                    SP.make_page_copy(model_cfg), donate_argnums=(0,)
-                )
-                # preemption entry points (one compile each: page ids ride
-                # at the FIXED table width, padded with the trash page):
-                # spill gathers a victim's pages for the host-side store
-                # (no donation — the cache stays live for the survivors),
-                # restore scatters them back at re-admission, and the
-                # slot-state gather reads the victim's dense per-slot
-                # leaves (pos + recurrent/SSM states)
-                self._page_spill = jax.jit(SP.make_page_spill(model_cfg))
-                self._page_restore = jax.jit(
-                    SP.make_page_restore(model_cfg), donate_argnums=(0,)
-                )
-                self._state_gather = jax.jit(
-                    SP.make_slot_state_gather(model_cfg)
-                )
-                if self.spec_k:
-                    # speculative entry points: the fused draft+verify
-                    # round (one compile per (window, k) pair — same
-                    # power-of-two window bucketing as serve_step) and
-                    # the single-slot rollback (idx + slot traced, ONE
-                    # compile for the engine's lifetime)
-                    self._spec_round = jax.jit(
-                        SP.make_paged_spec_round(model_cfg, self.spec_k),
-                        donate_argnums=(1,),
-                    )
-                    self._spec_rollback = jax.jit(
-                        SP.make_spec_rollback(model_cfg),
-                        donate_argnums=(0,),
-                    )
-            self._sample0 = jax.jit(
-                lambda logits, key: SP.sample_tokens(
-                    model_cfg, logits, key[None, :],
-                    jnp.zeros((1,), jnp.int32),
-                )
-            )
+            self._build_entry_points()
             # rid -> admission plan built by the gate (block hashes,
             # content-derived int8 quant seeds, resume depth, full-hit
             # flag); consumed by _admit_one.  A True gate always leads to
@@ -616,10 +666,175 @@ class ServingEngine:
         self._total_tokens = 0
         self._busy_time = 0.0
         self._decode_time = 0.0
-        # private per-engine device backend: analog-event accounting for
-        # THIS engine's traffic only (the process-wide compute-dispatch
-        # backend in repro.kernels.backend is untouched)
-        self.backend = BK.make_backend(cfg.device_backend, model_cfg)
+        # ---- degraded-device serving state ----
+        self._degrade_level = 0
+        self._dirty_streak = 0       # consecutive ticks with detections
+        self._clean_streak = 0       # consecutive clean canary passes
+        self._degraded_transitions: list[dict] = []
+        self._canary_probes = 0
+        self._canary_failures = 0
+        self._tick_dirty = 0         # detection events in the current tick
+        self._tick_canary: Optional[bool] = None
+        self._canary_expected = (
+            KOPS.canary_expected() if cfg.canary_interval else None
+        )
+
+    def _build_paged_serve_step(self, n_redundant: int):
+        """Jit ONE paged serve-step variant at redundant-read factor R
+        (mesh-aware when sharded).  Variants are cached per R — raising R
+        under degradation compiles once per (R, window bucket) pair, and
+        dropping back reuses the healthy artifact."""
+        fn = SP.make_paged_serve_step(
+            self.mcfg,
+            n_redundant=n_redundant,
+            sat_threshold=self.cfg.logit_sat_threshold,
+            entropy_floor=self.cfg.logit_entropy_floor,
+        )
+        if self.mesh is not None:
+            sh = self._shardings
+            return jax.jit(
+                fn,
+                donate_argnums=(1,),
+                in_shardings=(
+                    sh["params"], sh["cache"], sh["table"],
+                    sh["slot_vec"], sh["slot_keys"], sh["slot_vec"],
+                ),
+                out_shardings=(sh["cache"], sh["slot_vec"], sh["slot_vec"]),
+            )
+        return jax.jit(fn, donate_argnums=(1,))
+
+    def _get_serve_step(self, n_redundant: int):
+        fn = self._serve_steps.get(n_redundant)
+        if fn is None:
+            fn = self._build_paged_serve_step(n_redundant)
+            self._serve_steps[n_redundant] = fn
+        return fn
+
+    def _build_entry_points(self) -> None:
+        """(Re)build every paged jitted entry point.
+
+        Called at construction, and again whenever the device backend's
+        ``fault_version`` bumps: compiled artifacts keep the math they
+        were TRACED with, so a drift-bucket crossing, tile retirement, or
+        degrade/recover event leaves them computing yesterday's faults —
+        the rebuild makes the next call retrace against the backend's
+        current state.  Healthy backends never bump, so the recompile
+        guards hold unchanged."""
+        model_cfg, cfg, b = self.mcfg, self.cfg, self.cfg.max_batch
+        base_r = self._redundant_base
+        if self.mesh is not None:
+            # sharded decode: the SAME four entry points, jitted with
+            # mesh-aware in/out shardings (pool pages over data,
+            # kv_heads over model, per-slot inputs over data; params
+            # replicated).  Donation + static-arg discipline match
+            # the unsharded jits, so the recompile guards hold.
+            eps = SP.make_sharded_paged_entry_points(
+                model_cfg, self.mesh, batch=b,
+                n_pages=cfg.pool_blocks(model_cfg.kv_cache_dtype),
+                block_size=cfg.kv_block_size,
+                speculate_k=self.spec_k,
+                n_redundant=base_r,
+                sat_threshold=cfg.logit_sat_threshold,
+                entropy_floor=cfg.logit_entropy_floor,
+            )
+            self._serve_step = eps["serve_step"]
+            self._suffix_prefill = eps["suffix_prefill"]
+            self._state_insert = eps["state_insert"]
+            self._page_copy = eps["page_copy"]
+            self._page_spill = eps["page_spill"]
+            self._page_restore = eps["page_restore"]
+            self._state_gather = eps["state_gather"]
+            if self.spec_k:
+                self._spec_round = eps["spec_round"]
+                self._spec_rollback = eps["spec_rollback"]
+            self._shardings = eps["shardings"]
+            # params live replicated on the mesh — placed ONCE here (a
+            # rebuild re-put of already-placed params is a no-op), not
+            # re-transferred per call
+            self.params = jax.device_put(
+                self.params, self._shardings["params"]
+            )
+        else:
+            self._serve_step = self._build_paged_serve_step(base_r)
+            # THE paged prefill: a resumable suffix-chunk step (cold
+            # prefills run their whole bucket as chunks from zeroed
+            # state, partial-prefix hits start at q0 > 0 attending
+            # into shared pages).  ``bucket`` is the only static
+            # argument — one compile per (bucket, chunk shape) pair;
+            # the cache is donated (in-place page writes), the
+            # threaded state is NOT (boundary snapshots are stashed
+            # in the prefix index and must survive the next chunk
+            # call).
+            self._suffix_prefill = jax.jit(
+                SP.make_paged_suffix_prefill(model_cfg),
+                static_argnames=("bucket",), donate_argnums=(1,),
+            )
+            # prefix-sharing entry points (each compiles at most once
+            # — state-leaf shapes are bucket-independent, page ids /
+            # logits shapes are fixed): completion/full-hit
+            # admissions insert per-slot state leaves, sample the
+            # first token from last chunk (or stored) logits, and
+            # COW forks copy one pool page onto another
+            self._state_insert = jax.jit(
+                SP.make_paged_state_insert(model_cfg),
+                donate_argnums=(0,),
+            )
+            self._page_copy = jax.jit(
+                SP.make_page_copy(model_cfg), donate_argnums=(0,)
+            )
+            # preemption entry points (one compile each: page ids ride
+            # at the FIXED table width, padded with the trash page):
+            # spill gathers a victim's pages for the host-side store
+            # (no donation — the cache stays live for the survivors),
+            # restore scatters them back at re-admission, and the
+            # slot-state gather reads the victim's dense per-slot
+            # leaves (pos + recurrent/SSM states)
+            self._page_spill = jax.jit(SP.make_page_spill(model_cfg))
+            self._page_restore = jax.jit(
+                SP.make_page_restore(model_cfg), donate_argnums=(0,)
+            )
+            self._state_gather = jax.jit(
+                SP.make_slot_state_gather(model_cfg)
+            )
+            if self.spec_k:
+                # speculative entry points: the fused draft+verify
+                # round (one compile per (window, k) pair — same
+                # power-of-two window bucketing as serve_step) and
+                # the single-slot rollback (idx + slot traced, ONE
+                # compile for the engine's lifetime)
+                self._spec_round = jax.jit(
+                    SP.make_paged_spec_round(model_cfg, self.spec_k),
+                    donate_argnums=(1,),
+                )
+                self._spec_rollback = jax.jit(
+                    SP.make_spec_rollback(model_cfg),
+                    donate_argnums=(0,),
+                )
+        # serve-step variants keyed by redundant-read factor R; the base
+        # variant serves healthy traffic, level-2 degradation adds its own
+        self._serve_steps = {base_r: self._serve_step}
+        self._sample0 = jax.jit(
+            lambda logits, key: SP.sample_tokens(
+                model_cfg, logits, key[None, :],
+                jnp.zeros((1,), jnp.int32),
+            )
+        )
+        # known-answer canary probe through the ACTIVE backend; rebuilt
+        # with the rest so it always measures the current fault state.
+        # Jitted via a fresh closure: jit's trace cache is keyed on the
+        # function object, so jitting the module-level canary_mac
+        # directly would keep serving the pre-rebuild trace forever.
+        self._canary = jax.jit(lambda key: KOPS.canary_mac(key))
+        self._fault_version_seen = getattr(
+            self.backend, "fault_version", 0
+        )
+
+    def _check_fault_version(self) -> None:
+        """Rebuild stale jitted entry points after a backend fault-state
+        change (drift bucket, retirement, degrade/recover)."""
+        v = getattr(self.backend, "fault_version", None)
+        if v is not None and v != self._fault_version_seen:
+            self._build_entry_points()
 
     def _make_prefill(self):
         """Monolithic one-request prefill — the DENSE layout only (the
@@ -1193,7 +1408,12 @@ class ServingEngine:
         drop their pipeline job and free every reserved page
         (:meth:`_kill_job`); DECODING requests release through the normal
         eviction path.  Every path stamps the typed ``done_reason``.
+
+        Logit-sanity evictions also count as detection events for the
+        degradation policy's per-tick pressure signal.
         """
+        if reason in SP.SANITY_REASONS.values():
+            self._tick_dirty += 1
         if req.state is RequestState.QUEUED:
             self.sched.cancel(req, reason, now)
             if self.paged:
@@ -1475,13 +1695,35 @@ class ServingEngine:
         """One engine iteration: admit, advance the (chunked) prefill
         pipeline, then one batched decode step for the decoding slots.
 
+        A compute-overriding backend (sim_faulty) is installed
+        process-wide for the duration of the tick (exception-safe), so
+        any trace this tick causes picks up its faulty math; the
+        degradation policy updates once per tick, after detections and
+        the canary have spoken.
+
         Returns the (rid, token) pairs emitted during this tick.
         """
+        ctx = (
+            BK.use_backend(self.backend)
+            if getattr(self.backend, "overrides_compute", False)
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            self._tick_dirty = 0
+            self._tick_canary = None
+            try:
+                return self._tick_inner()
+            finally:
+                self._policy_update()
+
+    def _tick_inner(self) -> list[tuple[int, int]]:
         t_start = time.perf_counter()
         emitted: list[tuple[int, int]] = []
         if self._injector is not None:
             self._injector.fire(self, self._ticks)
         self._ticks += 1
+        if self.paged:
+            self._fault_pass()
         # deadline pass: expired requests evict in whatever state they
         # are — queued, mid-chunked-prefill (job + pages dropped
         # atomically), or decoding
@@ -1489,7 +1731,13 @@ class ServingEngine:
         for req in expired:
             self._evict_request(req, "deadline", time.perf_counter())
         gate = self._try_reserve_blocks if self.paged else None
-        for req in self.sched.admit(gate):
+        pol = self.cfg.degradation
+        shed = (
+            pol.shed_priority_above
+            if pol is not None and self._degrade_level >= 3
+            else None
+        )
+        for req in self.sched.admit(gate, shed_priority_above=shed):
             self._admit_one(req)
             if not self.paged:
                 emitted.append((req.rid, req.output[-1]))
@@ -1500,9 +1748,12 @@ class ServingEngine:
         active = self.sched.active()
         # speculate only when every draft write stays inside max_len —
         # near-capacity tails fall back to plain single-token ticks, so
-        # an overrun can never clamp into a slot's live final block
+        # an overrun can never clamp into a slot's live final block —
+        # and only below degradation level 1 (a k-deep draft multiplies
+        # one bad logit row's blast radius by k)
         spec_now = (
             bool(active) and self.spec_k > 0 and self._spec_viable(active)
+            and self._degrade_level < 1
         )
         if active and self.sharing:
             self._cow_pass(active, self.spec_k if spec_now else 1)
@@ -1513,10 +1764,11 @@ class ServingEngine:
                 self._decode_time += time.perf_counter() - t_dec
                 self._busy_time += time.perf_counter() - t_start
                 return emitted
-            ok_np = None
+            sane_np = None
             if self.paged:
                 w = self._window_blocks(active)
-                self._cache, nxt, ok = self._serve_step(
+                r_eff = self._redundant_effective()
+                self._cache, nxt, sane = self._get_serve_step(r_eff)(
                     self.params,
                     self._cache,
                     self._put(self._table[:, :w], "table"),
@@ -1524,9 +1776,10 @@ class ServingEngine:
                     self._put(self._req_keys, "slot_keys"),
                     self._put(self._steps, "slot_vec"),
                 )
-                ok_np = np.asarray(ok)
+                sane_np = np.asarray(sane)
                 self._host_pos += 1  # mirrors the step's pos+1, every slot
             else:
+                r_eff = 1
                 self._cache, nxt = self._serve_step(
                     self.params,
                     self._cache,
@@ -1537,9 +1790,14 @@ class ServingEngine:
             nxt_np = np.asarray(nxt)  # device sync — decode_time is honest
             # logical decode work this step: one forward + one sampling
             # decision per ACTIVE slot (idle-slot padding is not logical
-            # work — counting it would break batch-composition invariance)
+            # work — counting it would break batch-composition
+            # invariance); redundant comparator re-reads beyond the first
+            # are priced per active slot the same way
             self.backend.note_call(
-                SP.analog_call_profile("serve_step", batch=len(active))
+                SP.analog_call_profile(
+                    "serve_step", batch=len(active),
+                    redundant=(r_eff - 1) * len(active),
+                )
             )
             now = time.perf_counter()
             self._decode_time += now - t_dec
@@ -1547,11 +1805,16 @@ class ServingEngine:
             self._decode_steps += 1
             for req in active:
                 slot = req.slot
-                if ok_np is not None and not bool(ok_np[slot]):
-                    # non-finite logits (analog garbage / injected fault):
-                    # evict with a typed reason instead of publishing a
-                    # garbage token — the slot frees, serving continues
-                    self._evict_request(req, "nan", now)
+                if sane_np is not None and int(sane_np[slot]):
+                    # logit-sanity trip (analog garbage / injected
+                    # fault): evict with the matching typed reason
+                    # instead of publishing a garbage token — the slot
+                    # frees, serving continues
+                    self._evict_request(
+                        req,
+                        SP.SANITY_REASONS.get(int(sane_np[slot]), "nan"),
+                        now,
+                    )
                     continue
                 t = int(nxt_np[slot])
                 rep = self._replay.get(req.rid)
@@ -1572,6 +1835,89 @@ class ServingEngine:
                 emitted.append((req.rid, t))
         self._busy_time += time.perf_counter() - t_start
         return emitted
+
+    # ---- degraded-device serving: detection + mitigation + policy ----
+
+    def _fault_pass(self) -> None:
+        """Per-tick fault housekeeping, before any scheduling decision:
+        advance the backend's fault clock, rebuild stale entry points,
+        and fire the known-answer canary on its interval (a failure is a
+        detection event and may trigger tile retirement)."""
+        bk = self.backend
+        if getattr(bk, "overrides_compute", False):
+            bk.advance_clock(1)
+        self._check_fault_version()
+        ci = self.cfg.canary_interval
+        if not ci or self._ticks % ci:
+            return
+        self._canary_probes += 1
+        if self._canary_expected is None:
+            self._canary_expected = KOPS.canary_expected()
+        key = jax.random.fold_in(self._base_key, 0xCA9A30 + self._ticks)
+        got = np.asarray(self._canary(key), np.float32)
+        exp = self._canary_expected
+        scale = max(float(np.max(np.abs(exp))), 1e-9)
+        rel = float(np.max(np.abs(got - exp))) / scale
+        passed = rel <= self.cfg.canary_threshold
+        self._tick_canary = passed
+        if passed:
+            return
+        self._canary_failures += 1
+        self._tick_dirty += 1
+        thr = self.cfg.tile_retire_threshold
+        if thr > 0.0 and hasattr(bk, "retire_tiles"):
+            if bk.retire_tiles(thr):
+                # retirement changed the stuck masks baked into traces
+                self._check_fault_version()
+
+    def _redundant_effective(self) -> int:
+        """Redundant-read factor for this tick's decode step: the config
+        base, raised to the policy's factor at degradation level >= 2."""
+        r = self._redundant_base
+        pol = self.cfg.degradation
+        if pol is not None and self._degrade_level >= 2 and self.mcfg.wta_head:
+            r = max(r, pol.redundant_reads)
+        return r
+
+    def _degrade_transition(self, to: int, why: str) -> None:
+        self._degraded_transitions.append({
+            "tick": self._ticks,
+            "from": self._degrade_level,
+            "to": to,
+            "why": why,
+        })
+        self._degrade_level = to
+
+    def _policy_update(self) -> None:
+        """End-of-tick DegradationPolicy step: fold this tick's detection
+        events (sanity evictions + canary failure) into the streaks and
+        move at most one rung.  Escalation needs ``trip_after``
+        consecutive dirty ticks; de-escalation needs ``recover_after``
+        consecutive clean canary PASSES — absent a canary there is no
+        positive evidence of recovery, so degradation is one-way."""
+        pol = self.cfg.degradation
+        if pol is None:
+            return
+        if self._tick_dirty:
+            self._dirty_streak += 1
+            self._clean_streak = 0
+        else:
+            self._dirty_streak = 0
+            if self._tick_canary is True:
+                self._clean_streak += 1
+        if self._dirty_streak >= pol.trip_after and self._degrade_level < 3:
+            self._degrade_transition(
+                self._degrade_level + 1, "fault_pressure"
+            )
+            self._dirty_streak = 0
+        elif (
+            self._clean_streak >= pol.recover_after
+            and self._degrade_level > 0
+        ):
+            self._degrade_transition(
+                self._degrade_level - 1, "canary_recovered"
+            )
+            self._clean_streak = 0
 
     def _spec_viable(self, active: list[Request]) -> bool:
         """True when a k-deep draft run cannot write past ``max_len`` for
@@ -1818,6 +2164,7 @@ class ServingEngine:
                 "latency_p99_ms": _pctl(lat, 99) * 1e3,
             }
         wall = self._busy_time
+        analog = self.backend.snapshot(published_tokens=self._total_tokens)
         return ServingMetrics(
             completed=len(done),
             total_tokens=self._total_tokens,
@@ -1850,9 +2197,13 @@ class ServingEngine:
             ),
             evictions=evictions,
             latency_by_class=by_class,
-            analog=self.backend.snapshot(
-                published_tokens=self._total_tokens
-            ),
+            analog=analog,
+            degraded_mode=self._degrade_level,
+            canary_probes=self._canary_probes,
+            canary_failures=self._canary_failures,
+            retired_tiles=int(getattr(self.backend, "retired_tiles", 0)),
+            redundant_read_events=analog["redundant_read_events"],
+            degraded_transitions=list(self._degraded_transitions),
         )
 
     def compile_counts(self) -> dict[str, int]:
@@ -1865,8 +2216,19 @@ class ServingEngine:
         The sharing entry points (state_insert, page_copy, sample0)
         compile at most ONCE each over the engine's lifetime: their
         argument shapes are bucket-independent.  Dense: one compile per
-        prefill bucket (prefill + insert)."""
-        counts = {"serve_step": self._serve_step._cache_size()}
+        prefill bucket (prefill + insert).
+
+        ``serve_step`` sums over the redundant-read variants: a level-2
+        degradation episode adds one compile per (R, window) pair, and
+        the healthy artifact is reused when the ladder recovers."""
+        if self.paged:
+            counts = {
+                "serve_step": sum(
+                    f._cache_size() for f in self._serve_steps.values()
+                )
+            }
+        else:
+            counts = {"serve_step": self._serve_step._cache_size()}
         if self.paged:
             counts["suffix_prefill"] = self._suffix_prefill._cache_size()
             counts["state_insert"] = self._state_insert._cache_size()

@@ -32,6 +32,19 @@ Fault kinds:
     Force a spill-preemption of a decoding request (``rid=...``, default:
     the lowest-priority, newest active) — it requeues and later restores
     through the normal gate.
+``degrade_device``
+    Degrade the engine's device backend (``sim_faulty``): jump its fault
+    clock (``clock=...``) and/or override readout knobs
+    (``read_sigma_inflation=...``, ``comparator_offset=...``,
+    ``drift_nu=...``).  A no-op on backends without the hook (plain sim),
+    so mixed chaos schedules stay valid everywhere.
+``recover_device``
+    Reset the backend's fault clock and drop the knob overrides
+    (retired tiles stay retired — remapping is physical and one-way).
+
+Kinds are validated at :meth:`at` schedule time — a typo'd kind raises
+immediately with the registered list instead of exploding at fire time
+deep inside a run.
 
 Usage::
 
@@ -62,6 +75,29 @@ class FaultInjector(FaultSchedule):
         # nan_logits event with no poisonable victim fires but applies
         # nothing
         self.applied: list[tuple[int, str, Optional[int]]] = []
+
+    @classmethod
+    def kinds(cls) -> tuple[str, ...]:
+        """Every registered fault kind (the ``_do_*`` method registry)."""
+        return tuple(
+            sorted(
+                name[len("_do_"):]
+                for name in dir(cls)
+                if name.startswith("_do_")
+            )
+        )
+
+    def at(self, tick: int, kind: str, **kwargs: Any) -> "FaultInjector":
+        """Schedule ``kind`` at ``tick`` — validated HERE, so a typo'd
+        kind raises at schedule time with the registered list instead of
+        an AttributeError at fire time deep inside a run."""
+        if not hasattr(self, f"_do_{kind}"):
+            raise ValueError(
+                f"unknown fault kind {kind!r}; registered: "
+                f"{list(self.kinds())}"
+            )
+        super().at(tick, kind, **kwargs)
+        return self
 
     def fire(self, engine: Any, tick: int) -> None:
         for ev in self.pop(tick):
@@ -130,3 +166,19 @@ class FaultInjector(FaultSchedule):
         if victims and victims[0].slot is not None:
             engine._preempt(victims[0])
             self.applied.append((tick, "preempt", victims[0].rid))
+
+    def _do_degrade_device(
+        self, engine, tick: int, clock: Optional[int] = None, **knobs: Any
+    ) -> None:
+        bk = getattr(engine, "backend", None)
+        if bk is None or not hasattr(bk, "degrade"):
+            return  # plain sim backend: device faults don't apply
+        bk.degrade(clock=clock, **knobs)
+        self.applied.append((tick, "degrade_device", None))
+
+    def _do_recover_device(self, engine, tick: int) -> None:
+        bk = getattr(engine, "backend", None)
+        if bk is None or not hasattr(bk, "recover"):
+            return
+        bk.recover()
+        self.applied.append((tick, "recover_device", None))

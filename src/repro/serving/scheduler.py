@@ -46,8 +46,14 @@ PRIORITY_BATCH = 1
 
 # Every terminal ``done_reason`` the scheduler/engine can stamp.  "eos" and
 # "length" are natural completions; the rest are evictions: a missed
-# deadline, a non-finite logit row, or an injected/administrative kill.
-EVICT_REASONS = ("eos", "length", "deadline", "nan", "preempted")
+# deadline, a logit-sanity trip ("nan" non-finite, "saturated" finite but
+# over the analog rail, "entropy_collapse" distribution pinned to one
+# token — the detection codes of the degraded-device loop), or an
+# injected/administrative kill.
+EVICT_REASONS = (
+    "eos", "length", "deadline", "nan", "saturated", "entropy_collapse",
+    "preempted",
+)
 
 
 def left_pad(prompt: Sequence[int], length: int, pad: int = 0) -> list[int]:
@@ -416,7 +422,9 @@ class Scheduler:
         return min(self._queue, key=lambda r: (r.priority, r.rid))
 
     def admit(
-        self, gate: Optional[Callable[[Request], bool]] = None
+        self,
+        gate: Optional[Callable[[Request], bool]] = None,
+        shed_priority_above: Optional[int] = None,
     ) -> list[Request]:
         """Move queued requests into free slots (priority order, lowest
         slot first).
@@ -431,6 +439,13 @@ class Scheduler:
         requests behind a stream of small ones.  The request simply stays
         QUEUED for a later ``admit()``.
 
+        ``shed_priority_above``, when given, refuses admission to any head
+        whose priority is strictly less urgent (numerically greater) —
+        the degradation ladder's load-shedding rung: under sustained fault
+        pressure batch-class traffic waits in queue while interactive
+        traffic keeps flowing.  Because the head is the MOST urgent queued
+        request, stopping at a shed head never skips an admissible one.
+
         Returns the newly admitted requests, now in PREFILL state; the
         engine must prefill each and call :meth:`start_decode`.
         """
@@ -441,6 +456,11 @@ class Scheduler:
             if self._slots[slot] is not None:
                 continue
             head = min(self._queue, key=lambda r: (r.priority, r.rid))
+            if (
+                shed_priority_above is not None
+                and head.priority > shed_priority_above
+            ):
+                break
             if gate is not None and not gate(head):
                 break
             self._queue.remove(head)

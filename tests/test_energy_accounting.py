@@ -72,8 +72,11 @@ def test_counts_invariant_to_batch_composition(smoke):
         .scaled(a["sample_events"])
         + CM.AnalogOpCounts.from_dict(a["per_kv_token_counts"])
         .scaled(a["kv_written_tokens"])
+        + CM.AnalogOpCounts.from_dict(a["per_redundant_counts"])
+        .scaled(a["redundant_read_events"])
     )
     assert expected.as_dict() == a["counts"]
+    assert a["redundant_read_events"] == 0  # no redundancy configured
 
 
 def test_counts_invariant_to_prefix_sharing_flag(smoke):
@@ -189,4 +192,50 @@ def test_int8_and_wta_add_their_event_classes(smoke):
     assert w["counts"]["comparator_decisions"] == (
         b["counts"]["comparator_decisions"]
         + w["sample_events"] * 8 * cfg.vocab
+    )
+
+
+def test_redundant_reads_priced_integer_exactly(smoke):
+    """``n_redundant_reads=R`` re-runs the comparator readout R-1 extra
+    times per decode sample (majority vote): the ledger must record those
+    events and price them as exactly ``wta_trials * vocab`` extra
+    comparator decisions each — reconciled integer-exactly, with the
+    published sample count unchanged."""
+    cfg, params = smoke
+    wcfg = dataclasses.replace(
+        cfg, wta_head=True,
+        analog=dataclasses.replace(cfg.analog, wta_trials=8),
+    )
+    one = _serve(wcfg, params, PROMPTS[:2], [0, 0], n_redundant_reads=1)
+    three = _serve(wcfg, params, PROMPTS[:2], [0, 0], n_redundant_reads=3)
+    a1, a3 = one.analog, three.analog
+    assert a1["redundant_read_events"] == 0
+    assert a3["redundant_read_events"] > 0
+    # redundancy is pure re-reading: the logical workload is unchanged
+    assert a3["tokens_computed"] == a1["tokens_computed"]
+    assert a3["sample_events"] == a1["sample_events"]
+    # each redundant read is one extra full WTA readout, nothing else
+    assert a3["per_redundant_counts"]["comparator_decisions"] == (
+        8 * wcfg.vocab
+    )
+    assert a3["counts"]["comparator_decisions"] == (
+        a1["counts"]["comparator_decisions"]
+        + a3["redundant_read_events"] * 8 * wcfg.vocab
+    )
+    assert a3["counts"]["wta_samples"] == a1["counts"]["wta_samples"]
+    # and the generic ledger reconciliation closes with the new term
+    expected = (
+        CM.AnalogOpCounts.from_dict(a3["per_token_counts"])
+        .scaled(a3["tokens_computed"]["total"])
+        + CM.AnalogOpCounts.from_dict(a3["per_sample_counts"])
+        .scaled(a3["sample_events"])
+        + CM.AnalogOpCounts.from_dict(a3["per_kv_token_counts"])
+        .scaled(a3["kv_written_tokens"])
+        + CM.AnalogOpCounts.from_dict(a3["per_redundant_counts"])
+        .scaled(a3["redundant_read_events"])
+    )
+    assert expected.as_dict() == a3["counts"]
+    # priced: gross energy strictly grows with the extra reads
+    assert (
+        a3["raca"]["energy_pj_gross"] > a1["raca"]["energy_pj_gross"]
     )

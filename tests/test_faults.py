@@ -13,11 +13,13 @@ import pytest
 
 from _hypothesis_compat import hypothesis, st
 from repro.configs import get_smoke_config
+from repro.kernels.backend import FaultConfig
 from repro.models import get_model_fns
 from repro.serving import (
     EVICT_REASONS,
     PRIORITY_BATCH,
     PRIORITY_INTERACTIVE,
+    DegradationPolicy,
     FaultInjector,
     POOL_HOG_OWNER,
     RequestState,
@@ -191,8 +193,43 @@ def test_every_eviction_reason_is_typed(smoke):
     """All reasons the engine can stamp are in the EVICT_REASONS registry
     (metrics consumers key on it)."""
     assert set(EVICT_REASONS) >= {
-        "eos", "length", "deadline", "nan", "preempted"
+        "eos", "length", "deadline", "nan", "saturated",
+        "entropy_collapse", "preempted",
     }
+
+
+def test_unknown_fault_kind_rejected_at_schedule_time():
+    """A typo'd kind must raise at .at() with the registered list — not
+    as an AttributeError at fire time deep inside a chaos run."""
+    with pytest.raises(ValueError, match="unknown fault kind 'nan_logit'"):
+        FaultInjector().at(3, "nan_logit")
+    try:
+        FaultInjector().at(3, "nan_logit")
+    except ValueError as e:
+        # the loud part: the message enumerates every registered kind
+        for kind in FaultInjector.kinds():
+            assert kind in str(e)
+    assert set(FaultInjector.kinds()) >= {
+        "degrade_device", "recover_device", "nan_logits", "exhaust_pool",
+    }
+
+
+def test_degrade_device_noop_on_plain_backend(smoke):
+    """degrade/recover_device on the plain sim backend (no degrade hook)
+    must fire as a clean no-op so mixed schedules stay portable."""
+    inj = (
+        FaultInjector()
+        .at(0, "degrade_device", comparator_offset=2.0)
+        .at(1, "recover_device")
+    )
+    eng = _engine(smoke, inj)
+    rid = eng.submit(list(range(1, 8)), 4)
+    eng.run()
+    assert eng.sched.request(rid).done_reason == "length"
+    assert not inj.pending  # events fired...
+    applied = {k for _, k, _ in inj.applied}
+    assert "degrade_device" not in applied  # ...but applied nothing
+    assert "recover_device" not in applied
 
 
 # ---------------------------------------------------------------------------
@@ -201,17 +238,35 @@ def test_every_eviction_reason_is_typed(smoke):
 
 _FAULT_KINDS = (
     "exhaust_pool", "release_pool", "nan_logits", "deadline_storm",
-    "kill_prefill", "preempt",
+    "kill_prefill", "preempt", "degrade_device", "recover_device",
 )
 
 
-def _chaos_trace(smoke, seed: int) -> None:
+def _chaos_trace(smoke, seed: int, faulty: bool = False) -> None:
     rng = random.Random(seed)
     inj = FaultInjector()
     for _ in range(rng.randint(2, 6)):
-        inj.at(rng.randint(0, 20), rng.choice(_FAULT_KINDS))
-    # a released pool hog at the end so the drain below can finish
-    inj.at(21, "release_pool")
+        kind = rng.choice(_FAULT_KINDS)
+        kw = {}
+        if kind == "degrade_device":
+            kw = dict(comparator_offset=rng.choice((0.0, 2.0)))
+        inj.at(rng.randint(0, 20), kind, **kw)
+    # a released pool hog + recovered device at the end so the drain
+    # below can finish (a stuck degradation ladder at level 3 sheds
+    # batch admissions forever)
+    inj.at(21, "release_pool").at(21, "recover_device")
+    fault_kw = {}
+    if faulty:
+        # the analog device-fault storm rides on top: seeded stuck
+        # cells from tick 0, a per-2-ticks canary with tile
+        # retirement, and the full degradation ladder armed
+        fault_kw = dict(
+            device_backend="sim_faulty",
+            device_fault_config=FaultConfig(seed=seed, stuck_rate=0.02),
+            canary_interval=2,
+            tile_retire_threshold=0.01,
+            degradation=DegradationPolicy(),
+        )
     eng = _engine(
         smoke, inj,
         prefill_buckets=(16, 32),
@@ -221,6 +276,7 @@ def _chaos_trace(smoke, seed: int) -> None:
         # speculative rounds must survive the same storm: draft-depth NaN
         # guard, preempting a speculating slot, rollback under pressure
         speculate_k=rng.choice((0, 2, 3)),
+        **fault_kw,
     )
     rids = []
     for tick in range(24):
@@ -264,3 +320,13 @@ def _chaos_trace(smoke, seed: int) -> None:
 @given(seed=st.integers(0, 10_000))
 def test_chaos_fuzz_invariants_every_tick(smoke, seed):
     _chaos_trace(smoke, seed)
+
+
+@settings(deadline=None, max_examples=2)
+@given(seed=st.integers(0, 10_000))
+def test_chaos_fuzz_faulty_device_backend(smoke, seed):
+    """The same never-crash contract with analog device faults live: the
+    sim_faulty backend at a nonzero stuck-cell rate, canary probes, tile
+    retirement and the degradation ladder all running under the random
+    fault storm."""
+    _chaos_trace(smoke, seed, faulty=True)

@@ -246,9 +246,10 @@ def test_suffix_prefill_start_and_pages_are_traced():
 
 @pytest.mark.parametrize("wta", [False, True])
 def test_paged_serve_step_shape_contract(wta):
-    """(params, cache, table(B,W), token(B,)) -> (cache, token, ok):
+    """(params, cache, table(B,W), token(B,)) -> (cache, token, sane):
     output cache specs must equal the input's (donation + no recompile);
-    ok is the per-slot finite-logits flag the engine's NaN guard reads."""
+    sane is the per-slot int32 sanity code the engine's logit guard reads
+    (0 = ok, nonzero = typed eviction reason)."""
     cfg = dataclasses.replace(get_smoke_config("stablelm-3b"), wta_head=wta)
     ps = SP.params_specs(cfg)
     cs = SP.paged_decode_cache_specs(cfg, B, P, BS)
@@ -267,7 +268,7 @@ def test_paged_serve_step_shape_contract(wta):
     assert out_tok.shape == (B,)
     assert out_tok.dtype == jnp.int32
     assert out_ok.shape == (B,)
-    assert out_ok.dtype == jnp.bool_
+    assert out_ok.dtype == jnp.int32
 
 
 def test_paged_serve_step_rejects_encdec():
@@ -343,7 +344,7 @@ def test_int8_paged_serve_step_shape_contract(wta):
     )
     assert _tree_specs(out_cache) == _tree_specs(cs)
     assert out_tok.shape == (B,)
-    assert out_ok.shape == (B,) and out_ok.dtype == jnp.bool_
+    assert out_ok.shape == (B,) and out_ok.dtype == jnp.int32
 
 
 def test_page_spill_restore_shape_contract():
